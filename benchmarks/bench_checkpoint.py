@@ -1,0 +1,69 @@
+"""Beyond-paper — layout-aware checkpointing for sharded model state.
+
+Save a real (smoke-scale) model's parameters under each layout policy from
+simulated 16-host shardings; restore (a) same mesh, (b) elastic-resharded
+onto fewer hosts.  The structural columns (chunks touched, runs) are the
+layout effect; merged/reorganized restores touch far fewer extents.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, flatten_pytree
+from repro.checkpoint.resharding import reshard_cost_report
+from repro.configs import get_smoke_config
+from repro.core.blocks import regular_decomposition, shard_grid_blocks
+from repro.models import LM
+
+from .common import TmpDir, emit, timed
+
+HOSTS = 8
+
+
+def _block_map(flat):
+    """Simulated 8-host sharding with DP+TP raggedness: 2-D+ params split
+    into an (8, 4) shard grid; each host owns 4 shards, *mostly* a
+    contiguous row but offset per column (the load-balanced twist) — the
+    multi-block-per-process motif the merge pass exists for."""
+    bm = {}
+    for name, arr in flat.items():
+        a = np.asarray(arr)
+        if a.ndim < 2 or a.shape[0] < 8 or a.shape[1] < 4 \
+                or a.shape[0] % 8 or a.shape[1] % 4:
+            continue
+        grid = (8, 4) + (1,) * (a.ndim - 2)
+        bm[name] = shard_grid_blocks(
+            a.shape, grid,
+            lambda idx: (idx[0] + (idx[1] // 2)) % HOSTS)
+    return bm
+
+
+def run(tmp: TmpDir) -> None:
+    model = LM(get_smoke_config("yi-9b"))
+    params = model.init(jax.random.key(0))
+    flat = flatten_pytree(params)
+    bm = _block_map(flat)
+    nbytes = sum(np.asarray(v).nbytes for v in flat.values())
+
+    for strat, scheme in (("subfiled_fpp", None), ("merged_process", None),
+                          ("reorganized", (2, 2))):
+        mgr = CheckpointManager(tmp.sub(f"ck_{strat}"), strategy=strat,
+                                reorg_scheme=scheme)
+        stats, secs = timed(mgr.save, 1, params, block_map=bm)
+        (restored, rstats), rsecs = timed(mgr.restore, 1, params)
+        emit(f"ckpt/{strat}/save", secs * 1e6,
+             f"chunks={stats.num_chunks};blocks={stats.num_original_blocks};"
+             f"MB={nbytes / 1e6:.1f}")
+        emit(f"ckpt/{strat}/restore_full", rsecs * 1e6,
+             f"chunks_touched={rstats.chunks_touched};runs={rstats.runs}")
+        # elastic restore: re-shard largest variable onto 2 hosts
+        big = max(bm, key=lambda n: np.asarray(flat[n]).nbytes)
+        shape = np.asarray(flat[big]).shape
+        targets = regular_decomposition(shape,
+                                        (2,) + (1,) * (len(shape) - 1))
+        rep = reshard_cost_report(mgr.step_dir(1), big, targets)
+        emit(f"ckpt/{strat}/reshard_{big.split('/')[-1]}", 0.0,
+             f"chunks_touched={rep['chunks_touched']};runs={rep['runs']};"
+             f"amplification={rep['amplification']:.2f}")

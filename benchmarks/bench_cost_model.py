@@ -1,0 +1,67 @@
+"""Table 2 + §5.2 — the resource-utilization model.
+
+Two modes: (a) the paper's Summit constants verbatim — the worked examples
+must come out exactly (N>=26 at t_c=40; post-hoc always at t_c=20; the
+31.66s window; the N=50 bound); (b) constants measured in-container from the
+staging benchmark, showing the same decision machinery on live numbers.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import plan_layout
+from repro.core.cost_model import (PAPER_TIMINGS, StagingTimings,
+                                   breakeven_outputs, onthefly_utilization,
+                                   posthoc_utilization,
+                                   tc_lower_bound_blocking,
+                                   tc_upper_bound_nonblocking)
+from repro.core.reorg import decide
+from repro.io import StagingExecutor, write_variable
+
+from .common import GLOBAL, NPROCS, TmpDir, build_world, emit, timed
+
+
+def run(tmp: TmpDir) -> None:
+    t = PAPER_TIMINGS
+    # paper worked examples (exact reproduction)
+    emit("tab2_model/breakeven_tc40", 0.0,
+         f"N={breakeven_outputs(t, 40.0)};expect=26")
+    emit("tab2_model/breakeven_tc20", 0.0,
+         f"N={breakeven_outputs(t, 20.0)};expect=None")
+    emit("tab2_model/tc_window_low", 0.0,
+         f"tc={tc_lower_bound_blocking(t):.2f};expect=31.66")
+    emit("tab2_model/tc_bound_N50", 0.0,
+         f"tc={tc_upper_bound_nonblocking(t, 50):.2f};"
+         f"paper_formula=(407.8N-8514)/2N")
+    emit("tab2_model/Uo_tc40_N26", 0.0,
+         f"Uo={onthefly_utilization(t, 40, 26):.0f};"
+         f"Up={posthoc_utilization(t, 40, 26):.0f}")
+
+    # measured constants at container scale
+    blocks, data = build_world(seed=3)
+    nbytes = sum(v.nbytes for v in data.values())
+    plan_w = plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
+                         global_shape=GLOBAL)
+    (_, ws), _ = timed(write_variable, tmp.sub("cm_direct"), "B", np.float32,
+                       plan_w, data)
+    plan_r = plan_layout("reorganized", blocks, num_procs=NPROCS,
+                         global_shape=GLOBAL, reorg_scheme=(4, 4, 4),
+                         num_stagers=2)
+    ex = StagingExecutor(tmp.sub("cm_staged"), num_workers=2, queue_depth=2)
+    for s in range(3):
+        ex.submit(s, "B", np.float32, plan_r, data)
+    results = ex.drain()
+    ex.close()
+    meas = StagingTimings(
+        t_s=float(np.mean([r.t_s for r in results])),
+        t_w_stage=float(np.mean([r.t_w for r in results])),
+        t_w_sim=ws.total_seconds,
+        t_r_stage=float(np.mean([r.t_w for r in results])) * 0.8,
+        n=NPROCS // 6, m=1)
+    for t_c in (0.5, 2.0, 8.0):
+        d = decide(meas, t_c, 50)
+        emit(f"sec52_measured/tc{t_c}", (meas.t_s + meas.t_w_stage) * 1e6,
+             f"choose={d.mode};blocking={d.blocking};"
+             f"breakeven_N={d.breakeven_N};Uo={d.utilization_on_the_fly:.0f};"
+             f"Up={d.utilization_post_hoc:.0f}")

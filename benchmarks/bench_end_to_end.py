@@ -1,0 +1,65 @@
+"""Figs. 11-12 — end-to-end time saved and node-seconds gain/loss from
+enabling block merging.
+
+total_saved = (read_time_raw - read_time_merged) - writer_side_overhead
+node_seconds_gain = readers x seconds_saved  vs  loss = writers x overhead
+(the paper's 256x(0.001+0.19)=48.9 node-seconds intra-process loss).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import merge_blocks, plan_layout
+from repro.io import Dataset, gather_to_nodes, write_variable
+
+from .common import GLOBAL, NPROCS, PPN, TmpDir, build_world, emit, timed
+
+
+def run(tmp: TmpDir) -> None:
+    blocks, data = build_world(seed=4)
+    n_nodes = NPROCS // PPN
+
+    # writer-side overhead of merging (per variable)
+    per_proc = {}
+    for b in blocks:
+        per_proc.setdefault(b.owner, []).append(b)
+    cl, mg = [], []
+    for mine in per_proc.values():
+        _, _, st = merge_blocks(mine, {b.block_id: data[b.block_id]
+                                       for b in mine})
+        cl.append(st.cluster_seconds)
+        mg.append(st.merge_seconds)
+    overhead_p = float(np.mean(cl) + np.mean(mg))
+
+    _, ndata, gather_s = gather_to_nodes(blocks, data, PPN)
+    overhead_n = overhead_p * PPN + gather_s   # crude per-node aggregate
+
+    # read times raw vs merged per pattern/readers
+    ds = {}
+    for strat in ("subfiled_fpp", "merged_process", "merged_node"):
+        d = tmp.sub(f"e2e_{strat}")
+        plan = plan_layout(strat, blocks, num_procs=NPROCS,
+                           procs_per_node=PPN, global_shape=GLOBAL)
+        wdata = ndata if strat == "merged_node" else data
+        write_variable(d, "B", np.float32, plan, wdata)
+        ds[strat] = Dataset(d)
+
+    for pattern in ("whole_domain", "plane_yz", "sub_area"):
+        for readers in (1, 2, 4):
+            (_, st_raw), _ = timed(ds["subfiled_fpp"].read_pattern, "B",
+                                   pattern, readers)
+            for strat, ovh, writers in (
+                    ("merged_process", overhead_p, NPROCS),
+                    ("merged_node", overhead_n, n_nodes)):
+                (_, st_m), _ = timed(ds[strat].read_pattern, "B", pattern,
+                                     readers)
+                saved = st_raw.seconds - st_m.seconds
+                total_saved = saved - ovh
+                ns_gain = readers * saved
+                ns_loss = writers * ovh
+                emit(f"fig11_12/{pattern}/{strat}/r{readers}",
+                     total_saved * 1e6,
+                     f"saved_s={saved:.4f};overhead_s={ovh:.4f};"
+                     f"node_s_gain={ns_gain:.2f};node_s_loss={ns_loss:.2f};"
+                     f"worth={'yes' if ns_gain > ns_loss else 'no'}")

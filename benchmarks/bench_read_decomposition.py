@@ -1,0 +1,36 @@
+"""Fig. 5 — read sensitivity to the reader decomposition scheme.
+
+Reads the whole variable with 1x1x2, 1x2x1 and 2x1x1 two-reader
+decompositions against each stored layout.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import STRATEGIES, plan_layout
+from repro.core.blocks import Block
+from repro.io import Dataset, gather_to_nodes, write_variable
+
+from .common import GLOBAL, NPROCS, PPN, TmpDir, build_world, emit, timed
+
+
+def run(tmp: TmpDir) -> None:
+    blocks, data = build_world()
+    region = Block((0, 0, 0), GLOBAL)
+    for strat in ("contiguous", "chunked", "subfiled_fpp", "merged_process"):
+        d = tmp.sub(f"rd_{strat}")
+        plan = plan_layout(strat, blocks, num_procs=NPROCS,
+                           procs_per_node=PPN, global_shape=GLOBAL)
+        wdata = data
+        if strat == "merged_node":
+            _, wdata, _ = gather_to_nodes(blocks, data, PPN)
+        write_variable(d, "B", np.float32, plan, wdata)
+        ds = Dataset(d)
+        for scheme in ((1, 1, 2), (1, 2, 1), (2, 1, 1)):
+            st, secs = timed(ds.read_decomposed, "B", region, scheme,
+                             repeats=2)
+            emit(f"fig5_decomp/{strat}/{'x'.join(map(str, scheme))}",
+                 secs * 1e6,
+                 f"GBps={st.bytes_read / secs / 1e9:.2f};runs={st.runs};"
+                 f"chunks={st.chunks_touched}")

@@ -1,0 +1,40 @@
+"""Figs. 6-7 — the six read patterns x layout strategies x reader counts.
+
+Per (pattern, strategy, readers): best-of-decompositions wall time, the
+paper's Fig. 7 grid at container scale.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import plan_layout
+from repro.core.read_patterns import PATTERNS
+from repro.io import Dataset, gather_to_nodes, write_variable
+
+from .common import GLOBAL, NPROCS, PPN, TmpDir, build_world, emit, timed
+
+LAYOUTS = ("contiguous", "chunked", "subfiled_fpp", "subfiled_fpn",
+           "merged_process", "merged_node")
+
+
+def run(tmp: TmpDir, readers=(1, 4, 16)) -> None:
+    blocks, data = build_world()
+    datasets = {}
+    for strat in LAYOUTS:
+        d = tmp.sub(f"rp_{strat}")
+        plan = plan_layout(strat, blocks, num_procs=NPROCS,
+                           procs_per_node=PPN, global_shape=GLOBAL)
+        wdata = data
+        if strat == "merged_node":
+            _, wdata, _ = gather_to_nodes(blocks, data, PPN)
+        write_variable(d, "B", np.float32, plan, wdata)
+        datasets[strat] = Dataset(d)
+    for pattern in PATTERNS:
+        for strat, ds in datasets.items():
+            for r in readers:
+                (scheme, st), secs = timed(ds.read_pattern, "B", pattern, r)
+                emit(f"fig7_read/{pattern}/{strat}/r{r}", st.seconds * 1e6,
+                     f"best={'x'.join(map(str, scheme))};"
+                     f"GBps={st.bytes_read / max(st.seconds, 1e-9) / 1e9:.2f};"
+                     f"runs={st.runs};chunks={st.chunks_touched}")

@@ -1,0 +1,38 @@
+"""Fig. 15 — read performance after full data layout reorganization.
+
+Whole-variable reads vs reader count: the reorganized (regular 64-chunk)
+layout wins at low reader counts and degrades past 64 readers (chunk
+contention) — the paper's crossover.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import plan_layout
+from repro.core.blocks import Block
+from repro.io import Dataset, write_variable
+
+from .common import GLOBAL, NPROCS, TmpDir, build_world, emit, timed
+
+
+def run(tmp: TmpDir) -> None:
+    blocks, data = build_world(seed=5)
+    region = Block((0, 0, 0), GLOBAL)
+    layouts = {}
+    for strat, scheme in (("subfiled_fpp", None), ("merged_process", None),
+                          ("reorganized", (4, 4, 4))):
+        d = tmp.sub(f"rg_{strat}")
+        plan = plan_layout(strat, blocks, num_procs=NPROCS,
+                           global_shape=GLOBAL, reorg_scheme=scheme,
+                           num_stagers=2)
+        write_variable(d, "B", np.float32, plan, data)
+        layouts[strat] = Dataset(d)
+    for readers in (1, 2, 8, 16, 64, 128):
+        for strat, ds in layouts.items():
+            (scheme, st), _ = timed(ds.read_pattern, "B", "whole_domain",
+                                    readers)
+            emit(f"fig15_reorg/{strat}/r{readers}", st.seconds * 1e6,
+                 f"best={'x'.join(map(str, scheme))};"
+                 f"GBps={st.bytes_read / max(st.seconds, 1e-9) / 1e9:.2f};"
+                 f"chunks={st.chunks_touched}")

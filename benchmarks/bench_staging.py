@@ -1,0 +1,47 @@
+"""Fig. 14 — staging weak/strong scalability.
+
+Weak: fixed data per producer step, varying staging workers.  Strong: fixed
+total data, varying workers.  Reports t_s (stage) and t_w (write) per output
+plus producer stall — the measured inputs to the §5.2 model.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import plan_layout
+from repro.io import StagingExecutor
+
+from .common import TmpDir, build_world, emit
+
+
+def _stage_run(tmp, tag, gshape, nprocs, workers, steps=3, depth=2):
+    blocks, data = build_world(seed=2, global_shape=gshape,
+                               block_shape=(32, 32, 64), nprocs=nprocs)
+    plan = plan_layout("reorganized", blocks, num_procs=nprocs,
+                       global_shape=gshape, reorg_scheme=(4, 4, 4),
+                       num_stagers=workers)
+    ex = StagingExecutor(tmp.sub(f"st_{tag}"), num_workers=workers,
+                         queue_depth=depth)
+    stalls = [ex.submit(s, "B", np.float32, plan, data)
+              for s in range(steps)]
+    results = ex.drain()
+    ex.close()
+    t_s = float(np.mean([r.t_s for r in results]))
+    t_w = float(np.mean([r.t_w for r in results]))
+    nbytes = results[0].bytes_staged
+    emit(f"fig14_staging/{tag}", (t_s + t_w) * 1e6,
+         f"t_s={t_s:.3f};t_w={t_w:.3f};stall_s={np.mean(stalls):.3f};"
+         f"GBps={nbytes / max(t_s + t_w, 1e-9) / 1e9:.2f}")
+    return t_s, t_w
+
+
+def run(tmp: TmpDir) -> None:
+    # weak scaling: data grows with producers, workers grow too
+    for workers, gshape, nprocs in [(1, (128, 128, 256), 12),
+                                    (2, (128, 256, 256), 24),
+                                    (4, (256, 256, 256), 48)]:
+        _stage_run(tmp, f"weak_w{workers}", gshape, nprocs, workers)
+    # strong scaling: fixed total data, more workers
+    for workers in (1, 2, 4):
+        _stage_run(tmp, f"strong_w{workers}", (256, 256, 256), 48, workers)

@@ -1,0 +1,46 @@
+"""Fig. 4 — write performance per layout strategy (weak scaling).
+
+Measured on the local FS: per-strategy write wall time + the rearrangement
+(assembly) cost, at increasing process counts with fixed data per process.
+The paper's network-rearrangement penalty appears as ``inter_moved`` (the
+elements that would cross processes), reported in the derived column — on
+Summit that term is what kills the contiguous layout at scale.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import STRATEGIES, plan_layout, simulate_load_balance, \
+    uniform_grid_blocks
+from repro.io import gather_to_nodes, write_variable
+
+from .common import TmpDir, emit, timed
+
+
+def run(tmp: TmpDir) -> None:
+    rng = np.random.default_rng(0)
+    for nprocs, gshape in [(12, (128, 128, 256)), (24, (128, 256, 256)),
+                           (48, (256, 256, 256))]:
+        blocks = simulate_load_balance(
+            uniform_grid_blocks(gshape, (32, 32, 64)), num_procs=nprocs,
+            seed=1)
+        data = {b.block_id: rng.standard_normal(b.shape).astype(np.float32)
+                for b in blocks}
+        nbytes = sum(v.nbytes for v in data.values())
+        for strat in STRATEGIES:
+            d = tmp.sub(f"w_{strat}_{nprocs}")
+            plan = plan_layout(strat, blocks, num_procs=nprocs,
+                               procs_per_node=6, global_shape=gshape,
+                               num_stagers=2)
+            wdata = data
+            gather_s = 0.0
+            if strat == "merged_node":
+                _, wdata, gather_s = gather_to_nodes(blocks, data, 6)
+            (_, ws), secs = timed(write_variable, d, "B", np.float32, plan,
+                                  wdata)
+            emit(f"fig4_write/{strat}/p{nprocs}", secs * 1e6,
+                 f"GBps={nbytes / ws.write_seconds / 1e9:.2f};"
+                 f"assemble_s={ws.assemble_seconds + gather_s:.3f};"
+                 f"chunks={plan.num_chunks};subfiles={ws.num_subfiles};"
+                 f"inter_moved_MB={plan.inter_process_moved * 4 / 1e6:.0f}")

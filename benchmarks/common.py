@@ -1,0 +1,68 @@
+"""Shared benchmark world: a WarpX-motif 3-D mesh variable distributed over
+simulated processes with load-balanced block ownership, at container scale.
+
+Every benchmark emits ``name,us_per_call,derived`` CSV rows via :func:`emit`.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import (plan_layout, simulate_load_balance,
+                        uniform_grid_blocks)
+
+#: container-scale stand-in for the paper's 2048x4096x4096 variable
+GLOBAL = (256, 256, 256)          # 64 MB f32
+BLOCK = (32, 32, 64)              # 512 blocks ≈ dozens per process
+NPROCS = 48                       # "6 ranks/node x 8 nodes"
+PPN = 6
+
+_ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _ROWS.append(row)
+    print(row, flush=True)
+
+
+def rows() -> list:
+    return list(_ROWS)
+
+
+def build_world(seed: int = 0, global_shape=GLOBAL, block_shape=BLOCK,
+                nprocs=NPROCS):
+    rng = np.random.default_rng(seed)
+    blocks = simulate_load_balance(
+        uniform_grid_blocks(global_shape, block_shape), num_procs=nprocs,
+        seed=seed)
+    data = {b.block_id: np.ascontiguousarray(
+        rng.standard_normal(b.shape, dtype=np.float32)) for b in blocks}
+    return blocks, data
+
+
+def timed(fn, *args, repeats: int = 1, **kwargs):
+    best = None
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return out, best
+
+
+class TmpDir:
+    def __init__(self, prefix="repro_bench_"):
+        self.path = tempfile.mkdtemp(prefix=prefix)
+
+    def sub(self, name: str) -> str:
+        return os.path.join(self.path, name)
+
+    def cleanup(self):
+        shutil.rmtree(self.path, ignore_errors=True)

@@ -1,0 +1,40 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads dryrun_results.json and emits per-cell rows: the three roofline terms,
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and peak memory.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "dryrun_results.json")
+
+
+def run(tmp=None) -> None:
+    if not os.path.exists(RESULTS):
+        emit("roofline/missing", 0.0, f"no {RESULTS}; run repro.launch.dryrun")
+        return
+    with open(RESULTS) as f:
+        results = json.load(f)
+    for r in results:
+        name = f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}"
+        if r["status"] == "skip":
+            emit(name, 0.0, f"skip={r['reason'][:60]}")
+            continue
+        if r["status"] != "ok":
+            emit(name, 0.0, "error")
+            continue
+        rf = r["roofline"]
+        step_s = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        ufr = r.get("useful_flop_ratio")
+        ufr_s = f"{ufr:.3f}" if ufr is not None else "n/a"
+        emit(name, step_s * 1e6,
+             f"compute_s={rf['compute_s']:.4f};memory_s={rf['memory_s']:.4f};"
+             f"collective_s={rf['collective_s']:.4f};dom={rf['dominant']};"
+             f"useful_flops={ufr_s};"
+             f"peakGB={r['memory']['peak_bytes_per_dev'] / 1e9:.1f};"
+             f"roofline_frac={rf['compute_s'] / max(step_s, 1e-12):.3f}")

@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Set BENCH_FAST=1 to run the
+reduced sweep (CI); DRYRUN_RESULTS to point the roofline section at a
+results file.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+from . import (bench_checkpoint, bench_cost_model, bench_end_to_end,
+               bench_merging, bench_read_decomposition, bench_read_patterns,
+               bench_reorg_read, bench_staging, bench_write_layouts,
+               roofline)
+from .common import TmpDir
+
+SECTIONS = [
+    ("fig4_write_layouts", bench_write_layouts.run),
+    ("fig5_read_decomposition", bench_read_decomposition.run),
+    ("fig7_read_patterns", bench_read_patterns.run),
+    ("fig10_sec43_merging", bench_merging.run),
+    ("fig11_12_end_to_end", bench_end_to_end.run),
+    ("fig14_staging", bench_staging.run),
+    ("tab2_sec52_cost_model", bench_cost_model.run),
+    ("fig15_reorg_read", bench_reorg_read.run),
+    ("ckpt_integration", bench_checkpoint.run),
+    ("roofline", roofline.run),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in SECTIONS:
+        if only and only not in name:
+            continue
+        tmp = TmpDir(prefix=f"repro_{name}_")
+        try:
+            fn(tmp)
+        except Exception as e:        # noqa: BLE001 — report, keep going
+            failures.append((name, e))
+            print(f"{name}/FAILED,0,{type(e).__name__}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        finally:
+            tmp.cleanup()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Quickstart: the paper's pipeline end-to-end in under a minute.
+
+1. Build a WarpX-motif block distribution (load-balanced, ragged ownership).
+2. Cluster + merge each process's blocks (Alg. 1) — the paper's 10->3.
+3. Write the variable under write-optimized vs merged vs reorganized layouts.
+4. Read it back under the paper's read patterns and compare structural costs.
+5. Ask the Section-5.2 model whether on-the-fly reorganization pays off.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core import (PAPER_TIMINGS, merged_block_counts, plan_layout,
+                        recommend, simulate_load_balance,
+                        uniform_grid_blocks)
+from repro.core.blocks import Block
+from repro.io import Dataset, write_variable
+
+GLOBAL = (128, 128, 128)
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    blocks = simulate_load_balance(
+        uniform_grid_blocks(GLOBAL, (32, 32, 32)), num_procs=8, seed=1)
+    data = {b.block_id: rng.standard_normal(b.shape).astype(np.float32)
+            for b in blocks}
+
+    print("== 1. block distribution (AMR/load-balance motif)")
+    for p in range(8):
+        mine = [b for b in blocks if b.owner == p]
+        o, m = merged_block_counts(mine)
+        print(f"  process {p}: {o} blocks -> {m} merged cuboids")
+
+    print("== 2. layouts: write + read structural costs")
+    tmp = tempfile.mkdtemp()
+    whole = Block((0, 0, 0), GLOBAL)
+    for strat in ("subfiled_fpp", "merged_process", "reorganized"):
+        d = os.path.join(tmp, strat)
+        plan = plan_layout(strat, blocks, num_procs=8, global_shape=GLOBAL,
+                           reorg_scheme=(2, 2, 2))
+        _, ws = write_variable(d, "B", np.float32, plan, data)
+        ds = Dataset(d)
+        arr, st = ds.read("B", whole)
+        print(f"  {strat:15s} chunks={plan.num_chunks:3d} "
+              f"write={ws.write_seconds * 1e3:6.1f} ms  "
+              f"read={st.seconds * 1e3:6.1f} ms  seeks~{st.runs}")
+        scheme, stp = ds.read_pattern("B", "plane_xy", num_readers=4)
+        print(f"     plane_xy x4 readers: best scheme {scheme}, "
+              f"{stp.seconds * 1e3:.1f} ms")
+
+    print("== 3. Section-5.2 policy with the paper's Summit numbers")
+    for t_c in (20.0, 40.0):
+        r = recommend(PAPER_TIMINGS, t_c, 100)
+        print(f"  t_c={t_c:.0f}s N=100: choose {r['choose']} "
+              f"(break-even N={r['breakeven_N']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Batched serving example: prefill + decode with KV caches, then snapshot
+the live serving state (params + caches) through the layout-aware
+checkpoint — server migration the paper-way.
+
+Run: PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.models import LM
+from repro.serve import ServeEngine, cache_bytes, cache_spec_summary, \
+    flatten_cache
+
+
+def main() -> None:
+    for arch in ("qwen2.5-3b", "gemma2-2b", "mamba2-780m", "hymba-1.5b"):
+        cfg = get_smoke_config(arch)
+        model = LM(cfg)
+        params = model.init(jax.random.key(0))
+        engine = ServeEngine(model, params, max_len=96)
+        rng = np.random.default_rng(0)
+        prompts = rng.integers(0, cfg.vocab, (4, 32))
+        out, stats = engine.generate(prompts, num_new=16)
+        print(f"{arch:14s} generated {out.shape} "
+              f"prefill={stats.prefill_seconds * 1e3:6.1f} ms "
+              f"decode={stats.decode_tps:7.1f} tok/s "
+              f"cache={cache_bytes(model, 4, 96) / 1e6:6.2f} MB "
+              f"{cache_spec_summary(model, 4, 96)}")
+
+    # snapshot live serving state via the layout engine
+    cfg = get_smoke_config("qwen2.5-3b")
+    model = LM(cfg)
+    params = model.init(jax.random.key(1))
+    engine = ServeEngine(model, params, max_len=64)
+    prompts = np.random.default_rng(1).integers(0, cfg.vocab, (2, 16))
+    _, _ = engine.generate(prompts, num_new=4)
+    logits, cache = engine._prefill(params, {"tokens": prompts})
+    snap_dir = os.path.join(tempfile.gettempdir(), "repro_serve_snapshot")
+    mgr = CheckpointManager(snap_dir, strategy="merged_process", keep=1)
+    stats = mgr.save(0, {"params": params, "kv": flatten_cache(cache)})
+    print(f"serving-state snapshot: {stats.bytes / 1e6:.1f} MB, "
+          f"{stats.num_chunks} chunks -> {snap_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from .async_ckpt import AsyncCheckpointer
+from .blocks_map import blocks_from_sharding, flatten_pytree, unflatten_like
+from .manager import CheckpointManager, SaveStats
+from .resharding import ReshardPlan, plan_reshard, reshard_cost_report
+
+__all__ = ["AsyncCheckpointer", "CheckpointManager", "SaveStats",
+           "ReshardPlan", "blocks_from_sharding", "flatten_pytree",
+           "plan_reshard", "reshard_cost_report", "unflatten_like"]

@@ -1,0 +1,70 @@
+"""Derive the paper's Block sets from JAX shardings.
+
+A ``NamedSharding`` over a mesh assigns each device a cuboid shard of every
+array; grouping devices into hosts gives the per-host block sets that map
+exactly onto the paper's per-process block model (irregular under DP+TP+EP:
+a host owns a ragged collection of cuboids per array — the AMR motif)."""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from ..core.blocks import Block
+
+__all__ = ["blocks_from_sharding", "flatten_pytree", "unflatten_like"]
+
+
+def blocks_from_sharding(shape: Sequence[int], sharding,
+                         devices_per_host: int = 4) -> list:
+    """Unique shards of an array as Blocks owned by (simulated) hosts.
+
+    Replicated copies dedupe to the lowest-id owning host (each shard is
+    checkpointed once).  0-d arrays are handled by the caller.
+    """
+    shape = tuple(shape)
+    idx_map = sharding.devices_indices_map(shape)
+    seen: dict = {}
+    for dev, idx in idx_map.items():
+        lo, hi = [], []
+        for d, s in enumerate(idx):
+            lo.append(s.start if s.start is not None else 0)
+            hi.append(s.stop if s.stop is not None else shape[d])
+        key = (tuple(lo), tuple(hi))
+        host = getattr(dev, "id", 0) // devices_per_host
+        if key not in seen or host < seen[key]:
+            seen[key] = host
+    out = []
+    for bid, ((lo, hi), host) in enumerate(sorted(seen.items())):
+        out.append(Block(lo, hi, owner=int(host), block_id=bid))
+    return out
+
+
+def flatten_pytree(tree, prefix: str = "") -> dict:
+    """Stable name->leaf map using tree paths ('segments/0/attn/wq')."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = prefix + "/".join(_key_str(k) for k in path)
+        flat[name] = leaf
+    return flat
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def unflatten_like(template, flat: dict, prefix: str = ""):
+    """Rebuild a pytree shaped like ``template`` from a flat name map."""
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    leaves = []
+    for path, _ in paths:
+        name = prefix + "/".join(_key_str(k) for k in path)
+        leaves.append(flat[name])
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

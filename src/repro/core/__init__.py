@@ -1,0 +1,27 @@
+"""Core: the paper's contribution — online data layout reorganization.
+
+Public surface:
+  blocks          index-space cuboids + block-distribution generators
+  clustering      extended 3-D Berger–Rigoutsos clustering (Algorithm 1)
+  merge           merge plans + host execution + timing stats
+  layouts         the seven layout strategies as pure index-space plans
+  read_patterns   the six Fig.-6 read patterns + reader decompositions
+  cost_model      §5.2 resource-utilization model (on-the-fly vs post-hoc)
+  reorg           reorganization planning + policy
+"""
+
+from .blocks import (Block, bounding_box, total_volume, blocks_disjoint,
+                     uniform_grid_blocks, simulate_load_balance,
+                     regular_decomposition, shard_grid_blocks)
+from .clustering import Cluster, cluster_blocks, merged_block_counts
+from .cost_model import (PAPER_TIMINGS, StagingTimings, breakeven_outputs,
+                         onthefly_utilization, posthoc_utilization, recommend)
+from .layouts import (DEFAULT_REORG_SCHEME, STRATEGIES, ChunkPlan, LayoutPlan,
+                      plan_layout)
+from .merge import (MergePlan, MergeStats, build_merge_plan,
+                    execute_merge_numpy, merge_blocks)
+from .read_patterns import (PATTERNS, best_decompositions, decompose_region,
+                            pattern_region)
+from .reorg import ReorgDecision, decide, plan_reorganization
+
+__all__ = [n for n in dir() if not n.startswith("_")]

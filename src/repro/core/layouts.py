@@ -1,0 +1,164 @@
+"""Layout strategies and layout planning (paper §2, §4, §5).
+
+A :class:`LayoutPlan` describes *what chunks exist on storage and where each
+chunk's data comes from* — pure index-space planning, no I/O.  Execution
+(assembling buffers, writing files) lives in :mod:`repro.io.writer`.
+
+Strategies (paper names):
+  contiguous      §2.1 logically contiguous — one global row-major chunk
+  chunked         §2.2 one chunk per block in a single shared file
+  subfiled_fpp    §2.3 one chunk per block, one file per process
+  subfiled_fpn    §2.3 one chunk per block, one file per node (aggregated)
+  merged_process  §4   intra-process clustering+merging, then FPP
+  merged_node     §4   intra-node gather + clustering+merging, then FPN
+  reorganized     §5   full reorganization into a regular K-way decomposition
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .blocks import Block, bounding_box, regular_decomposition
+from .clustering import cluster_blocks
+
+__all__ = ["STRATEGIES", "ChunkPlan", "LayoutPlan", "plan_layout",
+           "node_of", "DEFAULT_REORG_SCHEME"]
+
+STRATEGIES = ("contiguous", "chunked", "subfiled_fpp", "subfiled_fpn",
+              "merged_process", "merged_node", "reorganized")
+
+DEFAULT_REORG_SCHEME = (4, 4, 4)  # paper §5.2: 64 chunks, 4x4x4
+
+
+def node_of(rank: int, procs_per_node: int) -> int:
+    return rank // procs_per_node
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkPlan:
+    """One stored chunk: the cuboid it covers, the original blocks whose data
+    feeds it, which logical writer produces it and into which subfile."""
+
+    chunk: Block
+    sources: tuple           # tuple[Block] (pieces come from intersections)
+    writer: int              # logical writer rank (process, node, or stager)
+    subfile: int             # subfile index (0 == the single shared file)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutPlan:
+    strategy: str
+    global_shape: tuple
+    chunks: tuple            # tuple[ChunkPlan]
+    num_subfiles: int
+    #: elements that must move ACROSS processes to build this layout
+    inter_process_moved: int
+    #: elements that move within a node (gather/merge memcpy)
+    intra_node_moved: int
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self.chunks)
+
+    def chunks_per_writer(self) -> dict:
+        out: dict = {}
+        for c in self.chunks:
+            out.setdefault(c.writer, []).append(c)
+        return out
+
+
+def _merged_chunks(blocks_by_group: dict, subfile_of_group,
+                   max_clusters: int | None) -> list:
+    chunks = []
+    for g, blks in sorted(blocks_by_group.items()):
+        for cl in cluster_blocks(blks, max_clusters=max_clusters):
+            chunks.append(ChunkPlan(chunk=cl.cuboid, sources=cl.members,
+                                    writer=g, subfile=subfile_of_group(g)))
+    return chunks
+
+
+def plan_layout(strategy: str,
+                blocks: Sequence[Block],
+                num_procs: int,
+                procs_per_node: int = 1,
+                global_shape: Sequence[int] | None = None,
+                reorg_scheme: Sequence[int] | None = None,
+                num_stagers: int = 1,
+                max_clusters: int | None = None) -> LayoutPlan:
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; one of {STRATEGIES}")
+    blocks = list(blocks)
+    if global_shape is None:
+        global_shape = bounding_box(blocks).hi
+    global_shape = tuple(global_shape)
+
+    inter_moved = 0
+    intra_moved = 0
+
+    if strategy == "contiguous":
+        root = Block((0,) * len(global_shape), global_shape)
+        # every element not already on the root writer crosses processes
+        inter_moved = sum(b.volume for b in blocks if b.owner != 0)
+        chunks = (ChunkPlan(chunk=root, sources=tuple(blocks), writer=0,
+                            subfile=0),)
+        nsub = 1
+
+    elif strategy == "chunked":
+        chunks = tuple(ChunkPlan(chunk=b, sources=(b,), writer=b.owner,
+                                 subfile=0) for b in blocks)
+        nsub = 1
+
+    elif strategy == "subfiled_fpp":
+        chunks = tuple(ChunkPlan(chunk=b, sources=(b,), writer=b.owner,
+                                 subfile=b.owner) for b in blocks)
+        nsub = num_procs
+
+    elif strategy == "subfiled_fpn":
+        nnodes = (num_procs + procs_per_node - 1) // procs_per_node
+        chunks = tuple(ChunkPlan(chunk=b, sources=(b,),
+                                 writer=node_of(b.owner, procs_per_node),
+                                 subfile=node_of(b.owner, procs_per_node))
+                       for b in blocks)
+        intra_moved = sum(b.volume for b in blocks
+                          if b.owner % procs_per_node != 0)
+        nsub = nnodes
+
+    elif strategy == "merged_process":
+        by_proc: dict = {}
+        for b in blocks:
+            by_proc.setdefault(b.owner, []).append(b)
+        chunks = tuple(_merged_chunks(by_proc, lambda g: g, max_clusters))
+        intra_moved = sum(b.volume for b in blocks)   # merge memcpy
+        nsub = num_procs
+
+    elif strategy == "merged_node":
+        by_node: dict = {}
+        for b in blocks:
+            by_node.setdefault(node_of(b.owner, procs_per_node), []).append(b)
+        chunks = tuple(_merged_chunks(by_node, lambda g: g, max_clusters))
+        intra_moved = 2 * sum(b.volume for b in blocks)  # gather + merge
+        nsub = len(by_node)
+
+    elif strategy == "reorganized":
+        scheme = tuple(reorg_scheme or DEFAULT_REORG_SCHEME)
+        targets = regular_decomposition(global_shape, scheme)
+        chunks = []
+        for t in targets:
+            srcs = tuple(b for b in blocks if t.overlaps(b))
+            chunks.append(ChunkPlan(chunk=Block(t.lo, t.hi),
+                                    sources=srcs,
+                                    writer=t.block_id % max(1, num_stagers),
+                                    subfile=t.block_id % max(1, num_stagers)))
+        chunks = tuple(chunks)
+        # everything crosses from sim processes to staging nodes
+        inter_moved = sum(b.volume for b in blocks)
+        nsub = max(1, num_stagers)
+
+    else:  # pragma: no cover
+        raise AssertionError(strategy)
+
+    return LayoutPlan(strategy=strategy, global_shape=global_shape,
+                      chunks=tuple(chunks), num_subfiles=nsub,
+                      inter_process_moved=inter_moved,
+                      intra_node_moved=intra_moved)

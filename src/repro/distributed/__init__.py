@@ -1,0 +1,7 @@
+from .sharding import (DEFAULT_RULES, FSDP_RULES, ShardingCtx, ShardingRules,
+                       current_ctx, logical_spec, named_sharding, shard,
+                       use_sharding)
+
+__all__ = ["DEFAULT_RULES", "FSDP_RULES", "ShardingCtx", "ShardingRules",
+           "current_ctx", "logical_spec", "named_sharding", "shard",
+           "use_sharding"]

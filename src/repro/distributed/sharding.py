@@ -1,0 +1,165 @@
+"""Logical-axis sharding rules -> NamedSharding / sharding constraints.
+
+Model code names dimensions logically ("batch", "heads", "mlp", "experts",
+"kv_seq", ...); a :class:`ShardingRules` maps each logical name to mesh axes.
+Divisibility is checked at spec-build time: a logical axis whose dim does not
+divide by the mesh-axis extent is silently replicated (recorded in
+``dropped``), so the same model code lowers on any mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ShardingRules", "ShardingCtx", "use_sharding", "current_ctx",
+           "logical_spec", "shard", "named_sharding", "DEFAULT_RULES",
+           "FSDP_RULES"]
+
+#: default logical-axis -> mesh-axes rules (single- and multi-pod; missing
+#: mesh axes are dropped automatically, so "pod" entries are safe on 2-D
+#: meshes)
+DEFAULT_RULES = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": (),                   # sequence replicated by default
+    "kv_seq": ("model",),        # long-context KV sharding (batch==1 decode)
+    "act_embed": (),
+    "act_mlp": ("model",),
+    "act_heads": ("model",),
+    "act_experts": ("model",),
+    # params
+    "vocab": ("model",),
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_mlp": (),
+    "conv": (),
+    "ssm_heads": ("model",),
+    "state": (),
+    "layers": (),                # scan-stacked layer dim: never sharded
+    "zero_data": ("data",),      # ZeRO-1 optimizer-moment sharding
+}
+
+#: ZeRO-3/FSDP: additionally shard the "embed" param dim over the data axis
+FSDP_RULES = dict(DEFAULT_RULES, embed=("data",))
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mapping: dict
+
+    def axes_for(self, name: str | None) -> tuple:
+        if name is None:
+            return ()
+        if name not in self.mapping:
+            raise KeyError(f"unknown logical axis {name!r}")
+        return tuple(self.mapping[name])
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    mesh: Mesh
+    rules: ShardingRules
+    dropped: list = dataclasses.field(default_factory=list)
+    #: axes handled manually (inside shard_map) — suppressed in constraints
+    manual: frozenset = frozenset()
+
+    def spec(self, logical_axes: Sequence, shape: Sequence[int] | None) -> P:
+        """PartitionSpec for ``logical_axes`` (one entry per dim; None =
+        replicated).  ``shape`` enables divisibility checking."""
+        entries = []
+        used = set()
+        for d, name in enumerate(logical_axes):
+            axes = self.rules.axes_for(name)
+            # drop axes missing from the mesh (e.g. "pod" on single-pod)
+            # and axes that are manual inside the current shard_map
+            axes = tuple(a for a in axes
+                         if a in self.mesh.shape and a not in self.manual)
+            # an axis may appear only once in a spec
+            axes = tuple(a for a in axes if a not in used)
+            if shape is not None and axes:
+                total = 1
+                for a in axes:
+                    total *= self.mesh.shape[a]
+                if shape[d] % total != 0:
+                    self.dropped.append((tuple(logical_axes), d, name,
+                                         tuple(shape)))
+                    axes = ()
+            used.update(axes)
+            if not axes:
+                entries.append(None)
+            elif len(axes) == 1:
+                entries.append(axes[0])
+            else:
+                entries.append(tuple(axes))
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def named(self, logical_axes: Sequence, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+_tls = threading.local()
+
+
+def current_ctx() -> ShardingCtx | None:
+    return getattr(_tls, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: dict | ShardingRules = None,
+                 manual: frozenset = frozenset()):
+    if rules is None:
+        rules = DEFAULT_RULES
+    if isinstance(rules, dict):
+        rules = ShardingRules(dict(rules))
+    prev = current_ctx()
+    _tls.ctx = ShardingCtx(mesh=mesh, rules=rules, manual=frozenset(manual))
+    try:
+        yield _tls.ctx
+    finally:
+        _tls.ctx = prev
+
+
+def logical_spec(logical_axes: Sequence, shape=None) -> P:
+    ctx = current_ctx()
+    if ctx is None:
+        return P()
+    return ctx.spec(logical_axes, shape)
+
+
+def named_sharding(logical_axes: Sequence, shape=None) -> NamedSharding | None:
+    ctx = current_ctx()
+    if ctx is None:
+        return None
+    return ctx.named(logical_axes, shape)
+
+
+def shard(x, *logical_axes):
+    """Sharding constraint inside jit; no-op when no context is active
+    (single-device tests)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    spec = ctx.spec(logical_axes, x.shape)
+    mesh = ctx.mesh
+    try:
+        # inside shard_map the context mesh is abstract with Manual axes;
+        # constraints must be built against it
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and am.shape_tuple:
+            mesh = am
+    except Exception:       # noqa: BLE001 - older API surface
+        pass
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,11 @@
+"""I/O substrate: log-structured container, parallel writer/reader, staging."""
+
+from .aggregation import gather_to_nodes
+from .format import ChunkRecord, DatasetIndex, GPFS_BLOCK
+from .reader import Dataset, ReadStats
+from .staging import StageResult, StagingExecutor
+from .writer import WriteStats, rewrite_dataset, write_variable
+
+__all__ = ["ChunkRecord", "DatasetIndex", "GPFS_BLOCK", "Dataset",
+           "ReadStats", "StageResult", "StagingExecutor", "WriteStats",
+           "rewrite_dataset", "write_variable", "gather_to_nodes"]

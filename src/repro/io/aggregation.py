@@ -1,0 +1,44 @@
+"""Intra-node aggregation (paper §2.3 / §4.3).
+
+On Summit this is an MPI gather of all blocks owned by a node's processes to
+one leader process (~0.25 s for a 256 GB variable at 6 ranks/node).  The TPU
+analogue is an intra-host device->host gather (or an ``all_gather`` over a
+node-local mesh axis for on-device merging).  Here the cost is the measured
+memcpy of relocating every non-leader block into leader-owned buffers.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from ..core.blocks import Block
+from ..core.layouts import node_of
+
+__all__ = ["gather_to_nodes"]
+
+
+def gather_to_nodes(blocks: Sequence[Block],
+                    data: Mapping[int, np.ndarray],
+                    procs_per_node: int) -> tuple:
+    """Relocate each block's data to its node leader.
+
+    Returns (node_blocks, node_data, gather_seconds) where ``node_blocks``
+    re-owns each block by node id and ``node_data`` holds leader-side copies
+    (leader-local blocks are passed through without copy, like a same-rank
+    MPI gather contribution).
+    """
+    t0 = time.perf_counter()
+    node_blocks = []
+    node_data = {}
+    for b in blocks:
+        node = node_of(b.owner, procs_per_node)
+        node_blocks.append(b.with_owner(node))
+        arr = data[b.block_id]
+        if b.owner % procs_per_node == 0:
+            node_data[b.block_id] = arr
+        else:
+            node_data[b.block_id] = np.copy(arr)      # the gather transfer
+    return node_blocks, node_data, time.perf_counter() - t0

@@ -1,0 +1,110 @@
+"""Log-structured dataset container (ADIOS2-BP-motif, paper §2.2–2.3).
+
+A *dataset* is a directory holding:
+  * one or more ``data_<k>.bin`` subfiles — extents appended log-style, the
+    chunk's position in the global array is NOT encoded in file order;
+  * ``index.json`` — the metadata the paper notes ADIOS2 must keep: for every
+    chunk, its global cuboid ``[lo, hi)``, its subfile, byte offset and size.
+
+Optional 16 MiB extent alignment mirrors GPFS's internal block size on Summit
+(§3.2: "GPFS internally splits big data chunks into 16MB blocks").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Sequence
+
+import numpy as np
+
+from ..core.blocks import Block
+
+__all__ = ["ChunkRecord", "DatasetIndex", "GPFS_BLOCK", "subfile_name",
+           "align_up"]
+
+GPFS_BLOCK = 16 * 1024 * 1024
+INDEX_NAME = "index.json"
+
+
+def subfile_name(k: int) -> str:
+    return f"data_{k}.bin"
+
+
+def align_up(x: int, align: int | None) -> int:
+    if not align:
+        return x
+    return ((x + align - 1) // align) * align
+
+
+@dataclasses.dataclass
+class ChunkRecord:
+    var: str
+    lo: tuple
+    hi: tuple
+    subfile: int
+    offset: int
+    nbytes: int
+
+    @property
+    def block(self) -> Block:
+        return Block(tuple(self.lo), tuple(self.hi))
+
+    def to_json(self) -> dict:
+        return {"var": self.var, "lo": list(self.lo), "hi": list(self.hi),
+                "subfile": self.subfile, "offset": self.offset,
+                "nbytes": self.nbytes}
+
+    @staticmethod
+    def from_json(d: dict) -> "ChunkRecord":
+        return ChunkRecord(var=d["var"], lo=tuple(d["lo"]), hi=tuple(d["hi"]),
+                           subfile=d["subfile"], offset=d["offset"],
+                           nbytes=d["nbytes"])
+
+
+@dataclasses.dataclass
+class DatasetIndex:
+    variables: dict = dataclasses.field(default_factory=dict)
+    chunks: list = dataclasses.field(default_factory=list)
+    num_subfiles: int = 0
+    attrs: dict = dataclasses.field(default_factory=dict)
+
+    def add_variable(self, name: str, shape: Sequence[int], dtype,
+                     strategy: str = "") -> None:
+        self.variables[name] = {"shape": list(shape),
+                                "dtype": np.dtype(dtype).name,
+                                "strategy": strategy}
+
+    def var_shape(self, name: str) -> tuple:
+        return tuple(self.variables[name]["shape"])
+
+    def var_dtype(self, name: str) -> np.dtype:
+        return np.dtype(self.variables[name]["dtype"])
+
+    def chunks_of(self, name: str) -> list:
+        return [c for c in self.chunks if c.var == name]
+
+    # -- persistence --------------------------------------------------------
+    def save(self, dirpath: str) -> None:
+        payload = {
+            "version": 1,
+            "variables": self.variables,
+            "num_subfiles": self.num_subfiles,
+            "attrs": self.attrs,
+            "chunks": [c.to_json() for c in self.chunks],
+        }
+        tmp = os.path.join(dirpath, INDEX_NAME + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, os.path.join(dirpath, INDEX_NAME))
+
+    @staticmethod
+    def load(dirpath: str) -> "DatasetIndex":
+        with open(os.path.join(dirpath, INDEX_NAME)) as f:
+            payload = json.load(f)
+        idx = DatasetIndex(variables=payload["variables"],
+                           num_subfiles=payload["num_subfiles"],
+                           attrs=payload.get("attrs", {}))
+        idx.chunks = [ChunkRecord.from_json(c) for c in payload["chunks"]]
+        return idx

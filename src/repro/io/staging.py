@@ -1,0 +1,164 @@
+"""Asynchronous staging executor (paper §5: Strong-Staging-Coupler motif).
+
+The producer (simulation / training step) ``submit()``s one output at a time;
+staging workers assemble the read-optimized layout and write it while the
+producer keeps computing.  A bounded queue of depth ``queue_depth`` models the
+staging nodes' buffer space: when it is full the producer blocks — the paper's
+``t_s + t_w > t_c`` regime where "the computation will be delayed".
+
+Measured per output:
+  t_s  — transfer+assembly time (producer-side copy + worker-side layout build)
+  t_w  — write time of the reorganized chunks
+  stall — how long ``submit`` blocked the producer
+
+An optional ``link_gbps`` throttle emulates a constrained producer→stager
+interconnect for model-calibration experiments; by default everything is
+measured, not simulated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import queue
+import threading
+import time
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from ..core.blocks import Block
+from ..core.layouts import LayoutPlan
+from .format import DatasetIndex, ChunkRecord, align_up, subfile_name
+from .writer import assemble_chunk
+
+__all__ = ["StageResult", "StagingExecutor"]
+
+
+@dataclasses.dataclass
+class StageResult:
+    step: int
+    t_s: float = 0.0            # stage (transfer + assemble) seconds
+    t_w: float = 0.0            # write seconds
+    stall: float = 0.0          # producer-side blocking
+    bytes_staged: int = 0
+    num_chunks: int = 0
+
+
+class StagingExecutor:
+    """``num_workers`` staging processes on ``m`` staging nodes, as threads."""
+
+    def __init__(self, dirpath: str, num_workers: int = 2,
+                 queue_depth: int = 2, link_gbps: float | None = None,
+                 align: int | None = None):
+        self.dirpath = dirpath
+        os.makedirs(dirpath, exist_ok=True)
+        self.num_workers = num_workers
+        self.link_gbps = link_gbps
+        self.align = align
+        self._q: queue.Queue = queue.Queue(maxsize=queue_depth)
+        self._results: list = []
+        self._lock = threading.Lock()
+        self._index = DatasetIndex()
+        self._offsets: dict = {}
+        self._fds: dict = {}
+        self._stop = False
+        self._workers = [threading.Thread(target=self._worker, daemon=True)
+                         for _ in range(num_workers)]
+        for w in self._workers:
+            w.start()
+
+    # -- producer side -------------------------------------------------------
+    def submit(self, step: int, var: str, dtype,
+               plan: LayoutPlan, data: Mapping[int, np.ndarray]) -> float:
+        """Hand one output to staging. Copies the producer's block data (the
+        device->staging transfer) and enqueues; returns seconds the producer
+        was blocked (queue full => blocking regime)."""
+        t0 = time.perf_counter()
+        staged = {k: np.copy(v) for k, v in data.items()}   # the transfer
+        if self.link_gbps:
+            nbytes = sum(v.nbytes for v in staged.values())
+            budget = nbytes / (self.link_gbps * 1e9)
+            elapsed = time.perf_counter() - t0
+            if budget > elapsed:
+                time.sleep(budget - elapsed)
+        copy_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self._q.put((step, var, np.dtype(dtype), plan, staged, copy_s))
+        stall = time.perf_counter() - t1
+        return stall
+
+    def drain(self) -> list:
+        """Wait for all submitted outputs; returns StageResults in step order."""
+        self._q.join()
+        with self._lock:
+            out = sorted(self._results, key=lambda r: r.step)
+        return out
+
+    def close(self) -> None:
+        self._q.join()
+        self._stop = True
+        for _ in self._workers:
+            try:
+                self._q.put_nowait(None)
+            except queue.Full:
+                pass
+        for w in self._workers:
+            w.join(timeout=5)
+        for fd in self._fds.values():
+            os.close(fd)
+        self._fds.clear()
+        self._index.save(self.dirpath)
+
+    @property
+    def index(self) -> DatasetIndex:
+        return self._index
+
+    # -- worker side -----------------------------------------------------------
+    def _fd(self, subfile: int) -> int:
+        if subfile not in self._fds:
+            path = os.path.join(self.dirpath, subfile_name(subfile))
+            self._fds[subfile] = os.open(path, os.O_RDWR | os.O_CREAT)
+        return self._fds[subfile]
+
+    def _worker(self) -> None:
+        while not self._stop:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            step, var, dtype, plan, staged, copy_s = item
+            res = StageResult(step=step)
+            try:
+                t0 = time.perf_counter()
+                bufs = [assemble_chunk(cp, staged, dtype)
+                        for cp in plan.chunks]
+                res.t_s = copy_s + (time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                vname = f"{var}@{step}"
+                with self._lock:
+                    placements = []
+                    for cp, buf in zip(plan.chunks, bufs):
+                        off = align_up(self._offsets.get(cp.subfile, 0),
+                                       self.align)
+                        self._offsets[cp.subfile] = off + buf.nbytes
+                        placements.append((cp, buf, off))
+                for cp, buf, off in placements:
+                    mv = memoryview(np.ascontiguousarray(buf)
+                                    .reshape(-1).view(np.uint8))
+                    os.pwrite(self._fd(cp.subfile), mv, off)
+                res.t_w = time.perf_counter() - t0
+                res.bytes_staged = sum(b.nbytes for b in bufs)
+                res.num_chunks = len(bufs)
+                with self._lock:
+                    self._index.add_variable(vname, plan.global_shape, dtype,
+                                             plan.strategy)
+                    for cp, buf, off in placements:
+                        self._index.chunks.append(ChunkRecord(
+                            var=vname, lo=cp.chunk.lo, hi=cp.chunk.hi,
+                            subfile=cp.subfile, offset=off, nbytes=buf.nbytes))
+                    self._index.num_subfiles = max(self._index.num_subfiles,
+                                                   len(self._offsets))
+                    self._results.append(res)
+            finally:
+                self._q.task_done()

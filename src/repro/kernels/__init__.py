@@ -1,0 +1,6 @@
+from .ops import merge_blocks_device, split_merged
+from .pack_blocks import pack_rows
+from .relayout import chunked_to_rowmajor, rowmajor_to_chunked
+
+__all__ = ["merge_blocks_device", "split_merged", "pack_rows",
+           "chunked_to_rowmajor", "rowmajor_to_chunked"]

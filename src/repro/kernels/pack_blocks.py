@@ -1,0 +1,82 @@
+"""TPU pack/merge kernel — the paper's block-merge as an on-device copy
+engine.
+
+The merge (Alg. 1's final loop) and the read-side linearization are both
+"move contiguous runs between two flat buffers" problems.  ``ops.py`` lowers
+a MergePlan to a *row table*: both buffers are viewed as (rows, W) with W =
+the largest common contiguous width, and each table entry copies one W-wide
+row ``dst[dst_row[i]] = src[src_row[i]]``.
+
+TPU mapping: the row tables are scalar-prefetched (SMEM); both data buffers
+stay in HBM (memory_space=ANY); each grid step DMAs one row through a VMEM
+scratch line (HBM -> VMEM -> HBM).  This is the idiomatic TPU adaptation of
+what is a CUDA gather on GPUs: explicit async DMA per contiguous run, with
+the run width (not thread-level gather) providing the bandwidth.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["pack_rows"]
+
+
+def _pack_kernel(src_rows_ref, dst_rows_ref, src_ref, dst_ref, scratch, sem):
+    i = pl.program_id(0)
+    s = src_rows_ref[i]
+    d = dst_rows_ref[i]
+    in_cp = pltpu.make_async_copy(src_ref.at[pl.ds(s, 1)],
+                                  scratch.at[pl.ds(0, 1)], sem)
+    in_cp.start()
+    in_cp.wait()
+    out_cp = pltpu.make_async_copy(scratch.at[pl.ds(0, 1)],
+                                   dst_ref.at[pl.ds(d, 1)], sem)
+    out_cp.start()
+    out_cp.wait()
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_dst_rows", "width", "interpret"))
+def pack_rows(src: jax.Array, src_rows: jax.Array, dst_rows: jax.Array,
+              *, n_dst_rows: int, width: int,
+              interpret: bool = True) -> jax.Array:
+    """Copy rows of ``src`` (viewed as (-1, width)) into a fresh
+    (n_dst_rows, width) buffer at ``dst_rows``.
+
+    ``src_rows``/``dst_rows``: int32 (R,) row tables.  Rows not named in
+    ``dst_rows`` are zero.  interpret=True validates on CPU; on TPU pass
+    False.
+    """
+    assert src.size % width == 0, (src.size, width)
+    src2 = src.reshape(-1, width)
+    n = src_rows.shape[0]
+    # dst starts zeroed: pallas outputs are uninitialized, so we pass a
+    # zeros operand aliased to the output.
+    zeros = jnp.zeros((n_dst_rows, width), src2.dtype)
+
+    def kernel(src_rows_ref, dst_rows_ref, src_ref, zeros_ref, dst_ref,
+               scratch, sem):
+        _pack_kernel(src_rows_ref, dst_rows_ref, src_ref, dst_ref, scratch,
+                     sem)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
+                  pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[pltpu.VMEM((1, width), src2.dtype),
+                        pltpu.SemaphoreType.DMA],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_dst_rows, width), src2.dtype),
+        input_output_aliases={3: 0},     # zeros operand -> output
+        interpret=interpret,
+    )(src_rows.astype(jnp.int32), dst_rows.astype(jnp.int32), src2, zeros)

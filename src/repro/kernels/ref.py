@@ -1,0 +1,120 @@
+"""Pure-jnp/numpy oracles for the kernels (allclose references)."""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from ..core.merge import MergePlan
+
+__all__ = ["pack_rows_ref", "chunked_to_rowmajor_ref",
+           "rowmajor_to_chunked_ref", "plan_row_tables"]
+
+
+def pack_rows_ref(src, src_rows, dst_rows, *, n_dst_rows: int, width: int):
+    src2 = np.asarray(src).reshape(-1, width)
+    out = np.zeros((n_dst_rows, width), src2.dtype)
+    for s, d in zip(np.asarray(src_rows), np.asarray(dst_rows)):
+        out[d] = src2[s]
+    return out
+
+
+def chunked_to_rowmajor_ref(chunks):
+    n_i, n_j, ch, cw = chunks.shape
+    return np.asarray(chunks).transpose(0, 2, 1, 3).reshape(n_i * ch,
+                                                            n_j * cw)
+
+
+def rowmajor_to_chunked_ref(arr, chunk):
+    H, W = arr.shape
+    ch, cw = chunk
+    return np.asarray(arr).reshape(H // ch, ch, W // cw, cw).transpose(
+        0, 2, 1, 3)
+
+
+# -- plan lowering -------------------------------------------------------------
+
+def plan_row_tables(plan: MergePlan, block_order=None,
+                    max_width: int = 4096) -> tuple:
+    """Lower a MergePlan to (width, src_rows, dst_rows, dst_elems,
+    src_layout) for :func:`repro.kernels.pack_blocks.pack_rows`.
+
+    Source layout: the blocks' data concatenated flat in ``block_order``
+    (default: ascending block_id) — i.e. the log-structured/chunked layout.
+    Destination: the merged buffers concatenated in cluster order.  Every
+    contiguous run on both sides is decomposed into ``width``-wide rows with
+    width = gcd of all run offsets/lengths (capped at ``max_width``).
+    """
+    blocks = {}
+    for op in plan.copies:
+        blocks[op.block_id] = op.src_block
+    order = block_order or sorted(blocks)
+    src_off = {}
+    pos = 0
+    for bid in order:
+        src_off[bid] = pos
+        pos += blocks[bid].volume
+    total_src = pos
+
+    dst_off = []
+    pos = 0
+    for cl in plan.clusters:
+        dst_off.append(pos)
+        pos += cl.cuboid.volume
+    total_dst = pos
+
+    # contiguous runs: for each copy op, the innermost dst-contiguous spans.
+    # A span is contiguous in src iff the src block's trailing dims match the
+    # span; we use the innermost axis runs (always contiguous both sides).
+    runs = []     # (src_elem, dst_elem, length)
+    for op in plan.copies:
+        b = op.src_block
+        cu = plan.clusters[op.dst_index].cuboid
+        bshape = b.shape
+        inner = bshape[-1]
+        # dst strides (row-major, elements)
+        dstr = [1] * cu.ndim
+        for d in range(cu.ndim - 2, -1, -1):
+            dstr[d] = dstr[d + 1] * cu.shape[d + 1]
+        rel = tuple(bl - cl for bl, cl in zip(b.lo, cu.lo))
+        sstr = [1] * b.ndim
+        for d in range(b.ndim - 2, -1, -1):
+            sstr[d] = sstr[d + 1] * bshape[d + 1]
+        # iterate leading index tuples
+        lead = bshape[:-1]
+        n_lead = int(np.prod(lead)) if lead else 1
+        for flat in range(n_lead):
+            idx = []
+            r = flat
+            for d in range(len(lead) - 1, -1, -1):
+                idx.append(r % lead[d])
+                r //= lead[d]
+            idx = tuple(reversed(idx))
+            s = src_off[op.block_id] + sum(i * sstr[d]
+                                           for d, i in enumerate(idx))
+            dd = (dst_off[op.dst_index]
+                  + sum((rel[d] + i) * dstr[d] for d, i in enumerate(idx))
+                  + rel[-1])
+            runs.append((s, dd, inner))
+
+    g = math.gcd(total_src, total_dst)
+    for s, d, ln in runs:
+        g = math.gcd(math.gcd(g, s), math.gcd(d, ln))
+    g = max(g, 1)
+    # width: the largest divisor of g not exceeding max_width
+    width = g
+    while width > max_width:
+        # halve while possible, else fall back to the largest divisor
+        width = width // 2 if width % 2 == 0 else 1
+    if width == 1 and g > 1:
+        width = min(g, max_width)
+        while g % width:
+            width -= 1
+    src_rows, dst_rows = [], []
+    for s, d, ln in runs:
+        for k in range(ln // width):
+            src_rows.append(s // width + k)
+            dst_rows.append(d // width + k)
+    return (width, np.asarray(src_rows, np.int32),
+            np.asarray(dst_rows, np.int32), total_dst, src_off)

@@ -1,0 +1,141 @@
+"""Attribute HLO cost to source files via stack-frame metadata.
+
+Used by the §Perf analysis to (a) measure how much of a cell's HBM traffic
+belongs to a given source region (e.g. ``models/attention.py`` — the score
+tensors), and (b) substitute the analytic traffic of a Pallas kernel when
+the dry-run ran it in interpret mode (the emulation's loop structure is not
+representative of on-TPU VMEM behaviour).
+"""
+
+from __future__ import annotations
+
+import re
+
+from .hlo_analysis import (_op_hbm_bytes, _parse_computations, _trip_count,
+                           _SKIP_OPS)
+
+__all__ = ["file_attributed_bytes", "flash_attention_traffic"]
+
+
+def _frame_tables(hlo: str) -> tuple:
+    """(file_names, file_locations, stack_frames) parsed from the header."""
+    files, locs, frames = {}, {}, {}
+    section = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s in ("FileNames", "FunctionNames", "FileLocations",
+                 "StackFrames"):
+            section = s
+            continue
+        if not s or s.startswith(("HloModule", "ENTRY", "%")):
+            if s.startswith(("HloModule",)):
+                continue
+            if section and not re.match(r"^\d+ ", s):
+                section = None
+            if section is None:
+                continue
+        if section == "FileNames":
+            m = re.match(r'^(\d+)\s+"(.*)"', s)
+            if m:
+                files[int(m.group(1))] = m.group(2)
+        elif section == "FileLocations":
+            m = re.match(r"^(\d+)\s+{file_name_id=(\d+)", s)
+            if m:
+                locs[int(m.group(1))] = int(m.group(2))
+        elif section == "StackFrames":
+            m = re.match(r"^(\d+)\s+{file_location_id=(\d+)\s+"
+                         r"parent_frame_id=(\d+)", s)
+            if m:
+                frames[int(m.group(1))] = (int(m.group(2)),
+                                           int(m.group(3)))
+    return files, locs, frames
+
+
+def _frame_matches(fid: int, files, locs, frames, substr: str,
+                   _seen=None) -> bool:
+    seen = set()
+    while fid and fid not in seen:
+        seen.add(fid)
+        loc, parent = frames.get(fid, (0, 0))
+        fname = files.get(locs.get(loc, -1), "")
+        if substr in fname:
+            return True
+        if parent == fid:
+            break
+        fid = parent
+    return False
+
+
+def file_attributed_bytes(hlo: str, substr: str) -> float:
+    """Trip-count-corrected HBM bytes of ops whose stack trace passes
+    through a file containing ``substr``."""
+    files, locs, frames = _frame_tables(hlo)
+    match_cache: dict = {}
+
+    def matches(fid: int) -> bool:
+        if fid not in match_cache:
+            match_cache[fid] = _frame_matches(fid, files, locs, frames,
+                                              substr)
+        return match_cache[fid]
+
+    comps = _parse_computations(hlo)
+    fusion_called = set()
+    for comp in comps.values():
+        for ins in comp["instrs"]:
+            if ins.opcode == "fusion":
+                fusion_called.update(ins.called)
+    entry = next((c for c, v in comps.items() if v["entry"]),
+                 next(iter(comps)))
+    total = 0.0
+    seen = set()
+
+    def walk(cname, mult):
+        key = (cname, mult)
+        if key in seen or cname not in comps:
+            return
+        seen.add(key)
+        nonlocal total
+        comp = comps[cname]
+        for ins in comp["instrs"]:
+            if ins.opcode in _SKIP_OPS:
+                continue
+            if ins.opcode == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.raw)
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.raw)
+                trips = _trip_count(ins.raw,
+                                    comps.get(mc and mc.group(1)))
+                if mb:
+                    walk(mb.group(1), mult * trips)
+                continue
+            if ins.opcode in ("call", "conditional"):
+                for c in ins.called:
+                    if c in comps and c not in fusion_called:
+                        walk(c, mult)
+            m = re.search(r"stack_frame_id=(\d+)", ins.raw)
+            if m and matches(int(m.group(1))):
+                total += _op_hbm_bytes(comps, comp, ins) * mult
+
+    walk(entry, 1.0)
+    return total
+
+
+def flash_attention_traffic(batch_loc: int, heads_loc: int, lq: int,
+                            lk: int, d: int, block: int,
+                            dtype_bytes: int = 2, causal: bool = True,
+                            with_backward: bool = True) -> float:
+    """Analytic HBM traffic of the flash kernel per call (per device).
+
+    Per (iq, ik) tile: Q block (bq x D) + K,V blocks (2 x bk x D); causal
+    skips ~half the tiles.  Output O (+lse) written once.  Backward runs the
+    tile stream twice more (dq pass, dkv pass) plus dO reads and dQ/dK/dV
+    writes.
+    """
+    nq, nk = lq // block, lk // block
+    pairs = nq * nk * (0.5 if causal else 1.0)
+    per_tile = (block * d + 2 * block * d) * dtype_bytes
+    fwd = pairs * per_tile + lq * d * dtype_bytes + lq * 4
+    if not with_backward:
+        return batch_loc * heads_loc * fwd
+    bwd = 2 * pairs * (per_tile + block * d * dtype_bytes) \
+        + (lq * d + 2 * lk * d) * 4 + lq * d * dtype_bytes
+    return batch_loc * heads_loc * (fwd + bwd)

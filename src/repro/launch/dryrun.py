@@ -1,0 +1,243 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes, record memory/cost analysis and the collective
+schedule.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out dryrun_results.json
+
+This is the proof that the distribution config is coherent: a sharding
+mismatch, compile-time OOM or unsupported collective here is a bug in the
+framework.  Results feed EXPERIMENTS.md (Dry-run + Roofline sections).
+"""
+
+import argparse            # noqa: E402
+import json                # noqa: E402
+import re                  # noqa: E402
+import time                # noqa: E402
+import traceback           # noqa: E402
+
+import jax                 # noqa: E402
+
+from ..configs import list_archs, shapes_for, skip_reason, get_config  # noqa: E402
+from ..distributed import sharding as shd                  # noqa: E402
+from .hlo_analysis import analyze_hlo                      # noqa: E402
+from .mesh import make_production_mesh                     # noqa: E402
+from .specs import build_cell                              # noqa: E402
+
+# v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TY_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16"
+                    r"|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _type_bytes(ty: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[ty]
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device collective operand bytes by op kind, parsed from the
+    post-partitioning optimized HLO.  all-reduce counted 2x (ring
+    reduce-scatter + all-gather)."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(?:\([^)]*\)|\S+)\s+"
+                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)(?:-start|-done)?\(", line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if "-done(" in line:      # avoid double counting async pairs
+            continue
+        args = line[line.index("("):]
+        nbytes = sum(_type_bytes(t, d) for t, d in _TY_RE.findall(args))
+        mult = 2 if kind == "all-reduce" else 1
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += nbytes * mult
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
+             zero1: bool = False, overrides: dict | None = None,
+             variant: str = "baseline") -> dict:
+    rec = {"arch": arch, "shape": shape_name, "variant": variant,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        rec["status"] = "skip"
+        rec["reason"] = reason
+        return rec
+    cfg = get_config(arch)
+    rules = dict(shd.FSDP_RULES if cfg.fsdp else shd.DEFAULT_RULES)
+    t0 = time.time()
+    try:
+        with shd.use_sharding(mesh, rules):
+            cell = build_cell(arch, shape_name, zero1=zero1,
+                              overrides=dict(overrides or {}))
+            jitted = jax.jit(cell.fn, donate_argnums=cell.donate)
+            with mesh:
+                lowered = jitted.lower(*cell.args)
+                t_lower = time.time() - t0
+                t0 = time.time()
+                compiled = lowered.compile()
+                t_compile = time.time() - t0
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis()
+            if isinstance(ca, list):
+                ca = ca[0] if ca else {}
+            hlo = compiled.as_text()
+        # trip-count-corrected costs (XLA CPU counts loop bodies once; see
+        # hlo_analysis docstring)
+        hc = analyze_hlo(hlo)
+        colls = {k: {"count": v["count"], "bytes": v["bytes"]}
+                 for k, v in hc.collectives.items()}
+        colls["total_bytes"] = hc.collective_bytes
+        colls["total_count"] = sum(v["count"] for v in
+                                   hc.collectives.values())
+        nchips = mesh.size
+        flops_dev = float(hc.flops)
+        bytes_dev = float(hc.bytes)
+        coll_dev = float(hc.collective_bytes)
+        rec.update({
+            "status": "ok",
+            "lower_seconds": round(t_lower, 2),
+            "compile_seconds": round(t_compile, 2),
+            "chips": nchips,
+            "memory": {
+                "argument_bytes_per_dev": ma.argument_size_in_bytes,
+                "output_bytes_per_dev": ma.output_size_in_bytes,
+                "temp_bytes_per_dev": ma.temp_size_in_bytes,
+                "alias_bytes_per_dev": ma.alias_size_in_bytes,
+                "peak_bytes_per_dev": (ma.argument_size_in_bytes
+                                       + ma.output_size_in_bytes
+                                       + ma.temp_size_in_bytes
+                                       - ma.alias_size_in_bytes),
+            },
+            "hlo_flops_per_dev": flops_dev,
+            "hlo_bytes_per_dev": bytes_dev,
+            "xla_reported_flops_per_dev": float(ca.get("flops", 0.0)),
+            "xla_reported_bytes_per_dev": float(ca.get("bytes accessed",
+                                                       0.0)),
+            "while_trips": hc.while_trips,
+            "collectives": colls,
+            "model_flops": cell.model_flops,
+            "roofline": {
+                "compute_s": flops_dev / PEAK_FLOPS,
+                "memory_s": bytes_dev / HBM_BW,
+                "collective_s": coll_dev / LINK_BW,
+            },
+        })
+        r = rec["roofline"]
+        dom = max(r, key=r.get)
+        rec["roofline"]["dominant"] = dom
+        total_hlo_flops = flops_dev * nchips
+        rec["useful_flop_ratio"] = (cell.model_flops / total_hlo_flops
+                                    if total_hlo_flops else None)
+    except Exception as e:       # noqa: BLE001 - record, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--flash", action="store_true",
+                    help="Pallas flash-attention kernel (optimized variant)")
+    ap.add_argument("--moe-local", action="store_true",
+                    help="local-expert-slice MoE dispatch (optimized)")
+    ap.add_argument("--variant", default=None,
+                    help="variant label recorded with each cell")
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.flash:
+        overrides["flash"] = True
+    if args.moe_local:
+        overrides["moe_dispatch"] = "local"
+    variant = args.variant or ("baseline" if not overrides else
+                               "+".join(sorted(overrides)))
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"],
+             r.get("variant", "baseline")) for r in results}
+
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        for arch in archs:
+            shape_names = ([s.name for s in shapes_for(arch)]
+                           if args.shape == "all" else args.shape.split(","))
+            for shape_name in shape_names:
+                if (arch, shape_name, mesh_name, variant) in done:
+                    continue
+                rec = run_cell(arch, shape_name, mesh, multi_pod,
+                               zero1=args.zero1, overrides=overrides,
+                               variant=variant)
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f"compile={rec['compile_seconds']}s "
+                             f"dom={rec['roofline']['dominant']}")
+                    print(f"[{mesh_name}] {arch} x {shape_name}: OK {extra}",
+                          flush=True)
+                    print("  memory_analysis:", rec["memory"], flush=True)
+                    print("  cost_analysis: flops/dev=%.3e bytes/dev=%.3e"
+                          % (rec["hlo_flops_per_dev"],
+                             rec["hlo_bytes_per_dev"]), flush=True)
+                elif status == "skip":
+                    print(f"[{mesh_name}] {arch} x {shape_name}: SKIP "
+                          f"({rec['reason']})", flush=True)
+                else:
+                    print(f"[{mesh_name}] {arch} x {shape_name}: ERROR "
+                          f"{rec['error']}", flush=True)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"dry-run complete: {n_ok} ok, {n_skip} documented skips, "
+          f"{n_err} errors", flush=True)
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

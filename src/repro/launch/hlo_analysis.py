@@ -1,0 +1,320 @@
+"""Trip-count-aware cost analysis of compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` on the CPU backend counts each while-loop
+body ONCE, so scanned layers / microbatches / attention chunks are
+undercounted by their trip counts.  This module re-derives the roofline
+inputs from ``compiled.as_text()``:
+
+  * walks computations from ENTRY, multiplying by while-loop trip counts
+    (parsed from the canonical ``compare(iv, constant)`` loop condition);
+  * flops from ``dot`` ops (2 x prod(out) x contracted extent, read from
+    ``lhs_contracting_dims``) — matmuls dominate every model here;
+  * HBM bytes as operands+outputs of top-level ops (fusion internals are
+    excluded: a fusion's HBM traffic is its boundary);
+  * collective bytes per op kind (all-reduce counted 2x for ring cost).
+
+This intentionally models a TPU-like execution of the same HLO: per-iteration
+buffers live in HBM, fusions don't round-trip internal temps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e4m3": 1, "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4,
+                "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "copy", "after-all", "iota"}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(ty: str, dims: str) -> int:
+    return _shape_elems(dims) * _DTYPE_BYTES[ty]
+
+
+def _all_shape_bytes(text: str) -> int:
+    return sum(_shape_bytes(t, d) for t, d in _SHAPE_RE.findall(text))
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+    while_trips: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    opcode: str
+    out_types: str
+    operand_types: str            # raw operand segment (bare %refs)
+    raw: str
+    called: tuple
+    operand_names: tuple = ()
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}]+)\s+"
+    r"([\w\-]+)\(")
+
+
+def _parse_computations(hlo: str) -> dict:
+    comps: dict = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*\S.*\{\s*$",
+                     stripped)
+        if m and not stripped.startswith("ROOT") \
+                and "=" not in stripped.split("(")[0]:
+            cur = m.group(1)
+            comps[cur] = {"instrs": [], "entry": stripped.startswith("ENTRY")
+                          or "ENTRY" in line.split("%")[0], "types": {}}
+            # typed parameters in the header: "name: f32[...]"
+            for pname, ptype in re.findall(
+                    r"([\w.\-]+)\s*:\s*([a-z0-9]+\[[0-9,]*\])", stripped):
+                comps[cur]["types"][pname] = ptype
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(stripped)
+        if not mi:
+            continue
+        name, out_t, opcode = mi.groups()
+        rest = stripped[mi.end():]
+        # operands = up to the closing paren at depth 0
+        depth = 1
+        i = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operands = rest[:i]
+        attrs = rest[i:]
+        called = tuple(re.findall(
+            r"(?:calls|body|condition|to_apply|branch_computations)="
+            r"{?%?([\w.\-]+(?:, ?%?[\w.\-]+)*)}?", attrs))
+        called_flat = []
+        for c in called:
+            called_flat.extend(x.strip().lstrip("%") for x in c.split(","))
+        onames = tuple(re.findall(r"%([\w.\-]+)", operands))
+        comps[cur]["instrs"].append(
+            _Instr(name=name, opcode=opcode, out_types=out_t,
+                   operand_types=operands, raw=stripped,
+                   called=tuple(called_flat), operand_names=onames))
+        comps[cur]["types"][name] = out_t
+    return comps
+
+
+def _operand_bytes(comp: dict, ins: _Instr) -> int:
+    """Resolve bare %refs to their producers' output types."""
+    total = _all_shape_bytes(ins.operand_types)      # inline-typed operands
+    for nm in ins.operand_names:
+        total += _all_shape_bytes(comp["types"].get(nm, ""))
+    return total
+
+
+def _trip_count(while_raw: str, cond_comp: dict | None) -> int:
+    """Trip count: XLA annotates ``backend_config={"known_trip_count":
+    {"n":"48"}}``; fall back to the condition's comparison constant."""
+    m = re.search(r'known_trip_count[^0-9]*"?(\d+)"?', while_raw)
+    if m:
+        return int(m.group(1))
+    if cond_comp is None:
+        return 1
+    consts = {}
+    for ins in cond_comp["instrs"]:
+        if ins.opcode == "constant":
+            mc = re.search(r"constant\((-?\d+)\)", ins.raw)
+            if mc:
+                consts[ins.name] = int(mc.group(1))
+    for ins in cond_comp["instrs"]:
+        if ins.opcode == "compare":
+            for nm, v in consts.items():
+                if nm in ins.operand_types and v > 0:
+                    return v
+    vals = [v for v in consts.values() if v > 0]
+    return max(vals) if vals else 1
+
+
+def _dot_flops(comp: dict, ins: _Instr) -> float:
+    out_elems = sum(_shape_elems(d) for _, d in
+                    _SHAPE_RE.findall(ins.out_types))
+    ops = _SHAPE_RE.findall(ins.operand_types)
+    if not ops and ins.operand_names:
+        ops = _SHAPE_RE.findall(comp["types"].get(ins.operand_names[0], ""))
+    if not ops:
+        return 0.0
+    lhs_t, lhs_d = ops[0]
+    lhs_dims = [int(x) for x in lhs_d.split(",")] if lhs_d else []
+    m = re.search(r"lhs_contracting_dims={([0-9,]*)}", ins.raw)
+    k = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+    return 2.0 * out_elems * k
+
+
+def _op_hbm_bytes(comps: dict, comp: dict, ins: _Instr) -> int:
+    """HBM traffic of one top-level op.
+
+    * dynamic-slice reads only the slice;
+    * dynamic-update-slice (and DUS fusions) alias the big operand with the
+      output in place: traffic = update slice + output slice;
+    * fusions whose internals dynamic-slice/gather a parameter read only the
+      slice of that operand, not the whole buffer.
+    """
+    out_b = _all_shape_bytes(ins.out_types)
+    if ins.opcode == "dynamic-slice":
+        return 2 * out_b
+    per_op = [_all_shape_bytes(comp["types"].get(nm, ""))
+              for nm in ins.operand_names]
+    out_sig = _SHAPE_RE.findall(ins.out_types)
+
+    if ins.opcode == "dynamic-update-slice":
+        upd = per_op[1] if len(per_op) > 1 else 0
+        return 2 * upd + 0 * out_b
+
+    if ins.opcode == "fusion" and ins.called:
+        internal = comps.get(ins.called[0])
+        if internal is not None:
+            # params whose use is a slice/gather: traffic = slice out size
+            sliced: dict = {}
+            aliased = False
+            for sub in internal["instrs"]:
+                if sub.opcode in ("dynamic-slice", "gather") and \
+                        sub.operand_names:
+                    p = sub.operand_names[0]
+                    if p.startswith("param_"):
+                        try:
+                            idx = int(p.split("_")[1].split(".")[0])
+                        except ValueError:
+                            continue
+                        sliced[idx] = sliced.get(idx, 0) + \
+                            _all_shape_bytes(sub.out_types)
+                if sub.opcode == "dynamic-update-slice":
+                    aliased = True
+            total = 0
+            alias_consumed = False
+            for i, b in enumerate(per_op):
+                if i in sliced:
+                    total += min(sliced[i], b)
+                elif aliased and not alias_consumed and out_sig and \
+                        _SHAPE_RE.findall(
+                            comp["types"].get(ins.operand_names[i], "")) \
+                        == out_sig:
+                    # in-place big buffer: read+write only the update slice
+                    # (the update is another, small operand already counted)
+                    alias_consumed = True
+                else:
+                    total += b
+            return total + (0 if alias_consumed else out_b)
+    # in-place alias for raw scatter
+    if ins.opcode == "scatter" and per_op:
+        return sum(per_op[1:]) + out_b
+    return sum(per_op) + _all_shape_bytes(ins.operand_types) + out_b
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps = _parse_computations(hlo)
+    # computations called by fusions are internal — exclude from the walk
+    fusion_called = set()
+    while_bodies = {}
+    for cname, comp in comps.items():
+        for ins in comp["instrs"]:
+            if ins.opcode == "fusion":
+                fusion_called.update(ins.called)
+            if ins.opcode == "while":
+                body = cond = None
+                mb = re.search(r"body=%?([\w.\-]+)", ins.raw)
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.raw)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                while_bodies[(cname, ins.name)] = (body, cond)
+
+    cost = HloCost()
+    entry = next((c for c, v in comps.items() if v["entry"]), None)
+    if entry is None:
+        entry = next(iter(comps))
+    seen_mult: dict = {}
+
+    def walk(cname: str, mult: float):
+        if cname not in comps:
+            return
+        # allow revisits with different multipliers but bound recursion
+        key = (cname, mult)
+        if key in seen_mult:
+            return
+        seen_mult[key] = True
+        for ins in comps[cname]["instrs"]:
+            op = ins.opcode
+            if op in _SKIP_OPS:
+                continue
+            if op == "while":
+                body, cond = while_bodies.get((cname, ins.name),
+                                              (None, None))
+                trips = _trip_count(ins.raw, comps.get(cond))
+                cost.while_trips[ins.name] = trips
+                if body:
+                    walk(body, mult * trips)
+                continue
+            if op in ("call", "conditional", "custom-call", "async-start"):
+                for c in ins.called:
+                    if c in comps and c not in fusion_called:
+                        walk(c, mult)
+            comp = comps[cname]
+            if op.startswith("all-") or op.startswith("reduce-scatter") or \
+                    op.startswith("collective-permute"):
+                base = op.replace("-start", "").replace("-done", "")
+                if base in _COLLECTIVES and not op.endswith("-done"):
+                    b = _operand_bytes(comp, ins)
+                    factor = 2 if base == "all-reduce" else 1
+                    rec = cost.collectives.setdefault(base,
+                                                      {"count": 0,
+                                                       "bytes": 0.0})
+                    rec["count"] += mult
+                    rec["bytes"] += b * factor * mult
+                    cost.collective_bytes += b * factor * mult
+            if op == "dot":
+                cost.flops += _dot_flops(comp, ins) * mult
+            if op == "fusion":
+                # dots inside fusions still flop
+                for c in ins.called:
+                    if c in comps:
+                        for sub in comps[c]["instrs"]:
+                            if sub.opcode == "dot":
+                                cost.flops += _dot_flops(comps[c],
+                                                         sub) * mult
+            cost.bytes += _op_hbm_bytes(comps, comp, ins) * mult
+
+    walk(entry, 1.0)
+    return cost

@@ -1,0 +1,137 @@
+"""ShapeDtypeStruct stand-ins for every model input: the dry-run lowers
+against these (weak-type-correct, sharded, zero allocation).
+
+``build_cell(arch, shape)`` returns the step function + abstract args for one
+(architecture x shape) cell under the ACTIVE sharding context.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, shapes_for, skip_reason
+from ..configs.common import ShapeCell
+from ..distributed import sharding as shd
+from ..models.model import LM
+from ..models.params import ParamDef, abstract
+from ..serve.engine import make_decode_step, make_prefill_step
+from ..train.optimizer import OptimizerConfig, zero_moment_defs
+from ..train.trainer import make_train_step
+
+__all__ = ["build_cell", "Cell", "model_flops_estimate"]
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeCell
+    fn: Callable
+    args: tuple
+    donate: tuple
+    model: LM
+    model_flops: float          # 6ND-style useful flops for the cell
+
+
+def _sds(shape, dtype, logical_axes):
+    sh = shd.named_sharding(logical_axes, shape)
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype), sharding=sh)
+
+
+def _batch_specs(cfg, B: int, L: int, with_labels: bool) -> dict:
+    out = {}
+    if cfg.frontend == "tokens":
+        out["tokens"] = _sds((B, L), jnp.int32, ("batch", None))
+    else:
+        out["frames"] = _sds((B, L, cfg.d_model), jnp.bfloat16,
+                             ("batch", None, "act_embed"))
+    if with_labels:
+        out["labels"] = _sds((B, L), jnp.int32, ("batch", None))
+    if cfg.family == "vlm":
+        out["memory"] = _sds((B, cfg.n_memory_tokens, cfg.d_model),
+                             jnp.bfloat16, ("batch", None, "act_embed"))
+    return out
+
+
+def _abstract_cache(model: LM, batch: int, cache_len: int):
+    return abstract(model.cache_skeleton(batch, cache_len))
+
+
+def model_flops_estimate(model: LM, cell: ShapeCell) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N_active*D for single forward
+    (prefill) / per-token (decode); MoE counts active experts only."""
+    cfg = model.cfg
+    from ..models.params import count_params, is_def
+    total = count_params(model.skeleton())
+    active = total
+    if cfg.moe is not None:
+        expert_params = 0
+        for seg in model.skeleton()["segments"]:
+            if isinstance(seg, dict) and "moe" in seg:
+                for nm in ("w_gate", "w_up", "w_down"):
+                    expert_params += int(np.prod(seg["moe"][nm].shape))
+        active = total - expert_params \
+            + expert_params * (cfg.moe.top_k / cfg.moe.n_experts)
+    D = cell.seq_len * cell.global_batch
+    if cell.kind == "train":
+        return 6.0 * active * D
+    if cell.kind == "prefill":
+        return 2.0 * active * D
+    return 2.0 * active * cell.global_batch      # decode: one token per seq
+
+
+def build_cell(arch: str, shape_name: str,
+               opt_cfg: OptimizerConfig | None = None,
+               zero1: bool = False,
+               overrides: dict | None = None) -> Cell:
+    cfg = get_config(arch)
+    if overrides:
+        moe_over = overrides.pop("moe_dispatch", None)
+        cfg = dataclasses.replace(cfg, **overrides)
+        if moe_over and cfg.moe is not None:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, dispatch=moe_over))
+    cell = next(s for s in shapes_for(arch) if s.name == shape_name)
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        raise ValueError(f"cell ({arch} x {shape_name}) is a documented "
+                         f"skip: {reason}")
+    model = LM(cfg)
+    skel = model.skeleton()
+    params_abs = abstract(skel)
+
+    if cell.kind == "train":
+        opt_cfg = opt_cfg or OptimizerConfig(zero1=zero1)
+        mdefs = zero_moment_defs(skel) if (zero1 or opt_cfg.zero1) else \
+            jax.tree_util.tree_map(
+                lambda d: ParamDef(d.shape, d.axes, "float32", "zeros"),
+                skel, is_leaf=lambda x: isinstance(x, ParamDef))
+        opt_abs = {"m": abstract(mdefs), "v": abstract(mdefs),
+                   "count": jax.ShapeDtypeStruct((), jnp.int32)}
+        batch = _batch_specs(cfg, cell.global_batch, cell.seq_len,
+                             with_labels=True)
+        fn = make_train_step(model, opt_cfg, grad_accum=cfg.grad_accum)
+        return Cell(arch, cell, fn, (params_abs, opt_abs, batch),
+                    donate=(0, 1), model=model,
+                    model_flops=model_flops_estimate(model, cell))
+
+    if cell.kind == "prefill":
+        batch = _batch_specs(cfg, cell.global_batch, cell.seq_len,
+                             with_labels=False)
+        fn = make_prefill_step(model, cache_len=cell.seq_len)
+        return Cell(arch, cell, fn, (params_abs, batch), donate=(),
+                    model=model,
+                    model_flops=model_flops_estimate(model, cell))
+
+    # decode: one new token against a cache of seq_len
+    cache_abs = _abstract_cache(model, cell.global_batch, cell.seq_len)
+    tokens = _sds((cell.global_batch, 1), jnp.int32, ("batch", None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = make_decode_step(model)
+    return Cell(arch, cell, fn, (params_abs, cache_abs, tokens, pos),
+                donate=(1,), model=model,
+                model_flops=model_flops_estimate(model, cell))

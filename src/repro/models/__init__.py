@@ -1,0 +1,6 @@
+from .model import LM
+from .moe import MoEDims
+from .ssm import SSMDims
+from .transformer import ModelConfig
+
+__all__ = ["LM", "ModelConfig", "MoEDims", "SSMDims"]

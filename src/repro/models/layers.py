@@ -1,0 +1,130 @@
+"""Shared layer primitives: norms, rotary embeddings, MLPs, embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from .params import ParamDef
+
+__all__ = ["rms_norm", "rms_norm_def", "layer_norm", "layer_norm_defs",
+           "rope", "softcap", "mlp_defs", "mlp_forward", "embed_def",
+           "embed_lookup", "unembed_chunked", "cross_entropy_chunked"]
+
+_COMPUTE = jnp.bfloat16
+
+
+def rms_norm_def(dim: int) -> ParamDef:
+    return ParamDef((dim,), ("embed",), init="zeros")   # gemma-style (1+g)
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm_defs(dim: int) -> dict:
+    return {"g": ParamDef((dim,), ("embed",), init="ones"),
+            "b": ParamDef((dim,), ("embed",), init="zeros")}
+
+
+def layer_norm(x, p, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32)
+            + p["b"].astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, theta: float = 10000.0, rotary_dim: int | None = None):
+    """Rotary embedding over the trailing head_dim.  ``x``: (..., seq, D) with
+    ``positions`` broadcastable to (..., seq).  ``rotary_dim`` rotates only
+    the leading slice (stablelm rotary_pct)."""
+    D = x.shape[-1]
+    rd = rotary_dim or D
+    half = rd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., seq, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x_rot, x_pass = x[..., :rd], x[..., rd:]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+def softcap(x, cap: float | None):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+def mlp_defs(d_model: int, d_ff: int, gated: bool = True) -> dict:
+    d = {"w_up": ParamDef((d_model, d_ff), ("embed", "mlp"), init="fan_in"),
+         "w_down": ParamDef((d_ff, d_model), ("mlp", "embed"), init="fan_in")}
+    if gated:
+        d["w_gate"] = ParamDef((d_model, d_ff), ("embed", "mlp"),
+                               init="fan_in")
+    return d
+
+
+def mlp_forward(p, x, act: str = "silu"):
+    h = jnp.einsum("...m,mf->...f", x, p["w_up"].astype(x.dtype))
+    if "w_gate" in p:
+        g = jnp.einsum("...m,mf->...f", x, p["w_gate"].astype(x.dtype))
+        g = jax.nn.gelu(g) if act == "gelu" else jax.nn.silu(g)
+        h = g * h
+    else:
+        h = jax.nn.gelu(h) if act == "gelu" else jax.nn.silu(h)
+    h = shard(h, "batch", *([None] * (h.ndim - 2)), "act_mlp")
+    return jnp.einsum("...f,fm->...m", h, p["w_down"].astype(x.dtype))
+
+
+# -- embeddings / unembedding -------------------------------------------------
+
+def embed_def(vocab: int, d_model: int) -> ParamDef:
+    return ParamDef((vocab, d_model), ("vocab", "embed"), init="normal",
+                    scale=1.0)
+
+
+def embed_lookup(table, tokens, scale: bool = False):
+    x = jnp.take(table, tokens, axis=0).astype(_COMPUTE)
+    if scale:
+        x = x * jnp.sqrt(jnp.asarray(table.shape[-1], jnp.float32)).astype(x.dtype)
+    return x
+
+
+def unembed_chunked(x, table, final_cap: float | None = None):
+    """Logits = x @ table.T (vocab sharded).  Used only on small outputs
+    (decode / last position); training uses the fused chunked CE below."""
+    logits = jnp.einsum("...m,vm->...v", x, table.astype(x.dtype))
+    logits = softcap(logits.astype(jnp.float32), final_cap)
+    return logits
+
+
+def cross_entropy_chunked(x, table, labels, chunk: int = 512,
+                          final_cap: float | None = None):
+    """Next-token CE without materializing (B, L, V) logits: scans over
+    sequence chunks; per-chunk logits stay vocab-sharded."""
+    B, L, M = x.shape
+    n_chunks = max(1, L // chunk)
+    xs = x.reshape(B, n_chunks, L // n_chunks, M).swapaxes(0, 1)
+    ys = labels.reshape(B, n_chunks, L // n_chunks).swapaxes(0, 1)
+
+    def body(carry, xl):
+        xc, yc = xl
+        logits = jnp.einsum("blm,vm->blv", xc, table.astype(xc.dtype))
+        logits = softcap(logits.astype(jnp.float32), final_cap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ys))
+    return total / (B * L)

@@ -1,0 +1,185 @@
+"""The Model API: skeleton / forward / loss / prefill / decode.
+
+Everything is a pure function of (params, inputs); ``LM`` only holds the
+config.  Segments are scanned with stacked params; remat policy applies to
+each segment body.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from . import transformer as tfm
+from .layers import (cross_entropy_chunked, embed_def, embed_lookup,
+                     layer_norm, rms_norm, unembed_chunked)
+from .params import ParamDef, abstract, count_params, materialize, stack
+from .transformer import ModelConfig
+
+__all__ = ["LM"]
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def _stack_tree(defs: dict, n: int):
+    return jax.tree_util.tree_map(
+        lambda d: stack(d, n), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        if cfg.total_layers() != cfg.n_layers:
+            raise ValueError(
+                f"{cfg.name}: program covers {cfg.total_layers()} layers, "
+                f"config says {cfg.n_layers}")
+        self.cfg = cfg
+
+    # -- parameters ----------------------------------------------------------
+    def skeleton(self) -> dict:
+        cfg = self.cfg
+        sk: dict = {}
+        if cfg.frontend == "tokens":
+            sk["embed"] = embed_def(cfg.vocab, cfg.d_model)
+        sk["segments"] = []
+        for kind, count in cfg.program:
+            defs = tfm.block_defs(cfg, kind)
+            sk["segments"].append(_stack_tree(defs, count) if count > 1
+                                  else defs)
+        sk["final_norm"] = (tfm._norm_def(cfg))
+        if not cfg.tie_embed or cfg.frontend != "tokens":
+            sk["lm_head"] = ParamDef((cfg.vocab, cfg.d_model),
+                                     ("vocab", "embed"), init="fan_in")
+        return sk
+
+    def init(self, rng) -> dict:
+        return materialize(self.skeleton(), rng)
+
+    def num_params(self) -> int:
+        return count_params(self.skeleton())
+
+    # -- embedding / head -----------------------------------------------------
+    def _embed_in(self, params, batch):
+        cfg = self.cfg
+        if cfg.frontend == "tokens":
+            x = embed_lookup(params["embed"], batch["tokens"],
+                             scale=cfg.embed_scale)
+        else:
+            x = batch["frames"].astype(jnp.bfloat16)
+        return shard(x, "batch", None, "act_embed")
+
+    def _head_table(self, params):
+        return params.get("lm_head", params.get("embed"))
+
+    # -- forward --------------------------------------------------------------
+    def hidden(self, params, batch, collect_kv: bool = False):
+        """Runs the stack. Returns (hidden, aux, kv_per_segment)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        B, L, _ = x.shape
+        positions = jnp.arange(L)
+        memory = batch.get("memory")
+        aux = jnp.zeros((), jnp.float32)
+        kvs = []
+        for (kind, count), seg in zip(cfg.program, params["segments"]):
+            if count == 1:
+                x, a, kv = tfm.block_forward(cfg, kind, seg, x, positions,
+                                             memory, collect_kv)
+                aux = aux + a
+                kvs.append(kv)
+            else:
+                def body(carry, p_slice, _kind=kind):
+                    xx, aa = carry
+                    xx, a, kv = tfm.block_forward(cfg, _kind, p_slice, xx,
+                                                  positions, memory,
+                                                  collect_kv)
+                    return (xx, aa + a), kv
+                (x, aux), kv = jax.lax.scan(_remat(cfg, body), (x, aux), seg)
+                kvs.append(kv)
+        x = (rms_norm(x, params["final_norm"]) if cfg.norm == "rms"
+             else layer_norm(x, params["final_norm"]))
+        return x, aux, (kvs if collect_kv else None)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h, aux, _ = self.hidden(params, batch)
+        ce = cross_entropy_chunked(h, self._head_table(params),
+                                   batch["labels"], chunk=cfg.loss_chunk,
+                                   final_cap=cfg.final_cap)
+        return ce + cfg.aux_weight * aux, {"ce": ce, "aux": aux}
+
+    # -- serving --------------------------------------------------------------
+    def cache_skeleton(self, batch: int, cache_len: int):
+        out = []
+        for kind, count in self.cfg.program:
+            cd = tfm.block_cache_defs(self.cfg, kind, batch, cache_len)
+            out.append(_stack_tree(cd, count) if (count > 1 and cd is not None)
+                       else cd)
+        return out
+
+    def prefill(self, params, batch, cache_len: int | None = None):
+        """Full-sequence pass producing (last_token_logits, cache)."""
+        cfg = self.cfg
+        toks = batch.get("tokens", batch.get("frames"))
+        B, L = toks.shape[0], toks.shape[1]
+        cache_len = cache_len or L
+        h, _, kvs = self.hidden(params, batch, collect_kv=True)
+        cache_defs = self.cache_skeleton(B, cache_len)
+        caches = []
+        for (kind, count), kv, cd in zip(cfg.program, kvs, cache_defs):
+            if cd is None:
+                caches.append(None)
+                continue
+            if count == 1:
+                caches.append(tfm.block_prefill(cfg, kind, kv, cd, B, L))
+            else:
+                # kv arrays are stacked on the layer dim (scan ys); cache
+                # defs too. vmap the conversion across the layer dim.
+                cd_inner = jax.tree_util.tree_map(
+                    lambda d: ParamDef(d.shape[1:], d.axes[1:], d.dtype,
+                                       d.init, d.scale), cd,
+                    is_leaf=lambda x: isinstance(x, ParamDef))
+                fn = functools.partial(tfm.block_prefill, cfg, kind,
+                                       cache_defs_tree=cd_inner, batch=B, L=L)
+                caches.append(jax.vmap(lambda kvx: fn(kvx))(kv))
+        logits = unembed_chunked(h[:, -1:], self._head_table(params),
+                                 final_cap=cfg.final_cap)
+        return logits, caches
+
+    def decode_step(self, params, cache, tokens, pos):
+        """One token for the whole batch. ``tokens``: (B, 1). ``pos``: scalar
+        current position. Returns (logits, new_cache)."""
+        cfg = self.cfg
+        x = self._embed_in(params, {"tokens": tokens}
+                           if cfg.frontend == "tokens" else
+                           {"frames": tokens})
+        new_caches = []
+        for (kind, count), seg, c in zip(cfg.program, params["segments"],
+                                         cache):
+            if count == 1:
+                x, nc = tfm.block_decode(cfg, kind, seg, x, c, pos)
+                new_caches.append(nc)
+            else:
+                def body(xx, pc, _kind=kind):
+                    p_slice, c_slice = pc
+                    xx, nc = tfm.block_decode(cfg, _kind, p_slice, xx,
+                                              c_slice, pos)
+                    return xx, nc
+                x, nc = jax.lax.scan(body, x, (seg, c))
+                new_caches.append(nc)
+        x = (rms_norm(x, params["final_norm"]) if cfg.norm == "rms"
+             else layer_norm(x, params["final_norm"]))
+        logits = unembed_chunked(x, self._head_table(params),
+                                 final_cap=cfg.final_cap)
+        return logits, new_caches

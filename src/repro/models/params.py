@@ -1,0 +1,88 @@
+"""Parameter-definition skeletons.
+
+Models build a pytree of :class:`ParamDef` (shape + dtype + logical axes +
+init law).  From the skeleton we derive, without ever materializing weights:
+  * ``abstract(skel)`` — ShapeDtypeStruct tree for ``.lower()`` dry-runs;
+  * ``shardings(skel)`` — NamedSharding tree under the active sharding ctx;
+  * ``materialize(skel, rng)`` — actual initialization (tests/examples).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed import sharding as shd
+
+__all__ = ["ParamDef", "abstract", "shardings", "materialize", "stack",
+           "count_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple                   # logical axis name (or None) per dim
+    dtype: str = "float32"
+    init: str = "normal"          # normal | zeros | ones | fan_in
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def stack(d: ParamDef, n: int) -> ParamDef:
+    """Layer-stacked version for scanned segments."""
+    return ParamDef(shape=(n,) + tuple(d.shape), axes=("layers",) + d.axes,
+                    dtype=d.dtype, init=d.init, scale=d.scale)
+
+
+def tree_map_defs(fn, skel):
+    return jax.tree_util.tree_map(fn, skel, is_leaf=is_def)
+
+
+def abstract(skel, sharded: bool = True):
+    def mk(d: ParamDef):
+        sh = shd.named_sharding(d.axes, d.shape) if sharded else None
+        return jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype), sharding=sh)
+    return tree_map_defs(mk, skel)
+
+
+def shardings(skel):
+    return tree_map_defs(lambda d: shd.named_sharding(d.axes, d.shape), skel)
+
+
+def count_params(skel) -> int:
+    total = 0
+    for d in jax.tree_util.tree_leaves(skel, is_leaf=is_def):
+        total += int(np.prod(d.shape))
+    return total
+
+
+def materialize(skel, rng: jax.Array):
+    defs = jax.tree_util.tree_leaves(skel, is_leaf=is_def)
+    keys = jax.random.split(rng, len(defs))
+    it = iter(range(len(defs)))
+
+    def mk(d: ParamDef):
+        i = next(it)
+        dtype = jnp.dtype(d.dtype)
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        if d.init == "fan_in":
+            fan = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            s = 1.0 / math.sqrt(max(fan, 1))
+            return (jax.random.normal(keys[i], d.shape) * s).astype(dtype)
+        return (jax.random.normal(keys[i], d.shape) * d.scale).astype(dtype)
+
+    return tree_map_defs(mk, skel)

@@ -1,0 +1,195 @@
+"""Mamba-2 SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute inside chunks of ``chunk`` tokens, linear state passing across chunks
+(lax.scan).  Decode is the pure recurrence ``S <- exp(dt*A) S + dt B^T x``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from .layers import rms_norm
+from .params import ParamDef
+
+__all__ = ["ssd_defs", "ssd_forward", "ssd_forward_with_state", "ssd_decode",
+           "ssd_cache_defs", "SSMDims"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_inner: int
+    headdim: int
+    d_state: int
+    n_groups: int = 1
+    conv_width: int = 4
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def ssd_defs(dims: SSMDims) -> dict:
+    proj_out = 2 * dims.d_inner + 2 * dims.n_groups * dims.d_state + dims.n_heads
+    return {
+        "in_proj": ParamDef((dims.d_model, proj_out), ("embed", "ssm_heads"),
+                            init="fan_in"),
+        "conv_w": ParamDef((dims.conv_width, dims.conv_dim), (None, "ssm_heads"),
+                           init="fan_in"),
+        "conv_b": ParamDef((dims.conv_dim,), ("ssm_heads",), init="zeros"),
+        "A_log": ParamDef((dims.n_heads,), ("ssm_heads",), init="ones"),
+        "D": ParamDef((dims.n_heads,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamDef((dims.n_heads,), ("ssm_heads",), init="zeros"),
+        "norm": ParamDef((dims.d_inner,), ("ssm_heads",), init="zeros"),
+        "out_proj": ParamDef((dims.d_inner, dims.d_model),
+                             ("ssm_heads", "embed"), init="fan_in"),
+    }
+
+
+def _split_proj(p, x, dims: SSMDims):
+    zxbcdt = jnp.einsum("blm,mn->bln", x, p["in_proj"].astype(x.dtype))
+    z, xBC, dt = jnp.split(
+        zxbcdt, [dims.d_inner, dims.d_inner + dims.conv_dim], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(p, xBC, dims: SSMDims):
+    w = p["conv_w"].astype(xBC.dtype)           # (W, C) depthwise
+    pad = dims.conv_width - 1
+    xp = jnp.pad(xBC, ((0, 0), (pad, 0), (0, 0)))
+    out = jnp.zeros_like(xBC)
+    for i in range(dims.conv_width):            # W is tiny (4): unrolled taps
+        out = out + xp[:, i:i + xBC.shape[1], :] * w[i]
+    return jax.nn.silu(out + p["conv_b"].astype(xBC.dtype))
+
+
+def _split_xbc(xBC, dims: SSMDims):
+    x_, Bm, Cm = jnp.split(
+        xBC, [dims.d_inner, dims.d_inner + dims.n_groups * dims.d_state],
+        axis=-1)
+    B_, L = x_.shape[0], x_.shape[1]
+    x_ = x_.reshape(B_, L, dims.n_heads, dims.headdim)
+    Bm = Bm.reshape(B_, L, dims.n_groups, dims.d_state)
+    Cm = Cm.reshape(B_, L, dims.n_groups, dims.d_state)
+    hpg = dims.n_heads // dims.n_groups
+    Bm = jnp.repeat(Bm, hpg, axis=2)            # (B, L, H, N)
+    Cm = jnp.repeat(Cm, hpg, axis=2)
+    return x_, Bm, Cm
+
+
+def ssd_forward(p, x, dims: SSMDims, chunk: int = 256):
+    y, _ = _ssd_full(p, x, dims, chunk)
+    return y
+
+
+def ssd_forward_with_state(p, x, dims: SSMDims, chunk: int = 256):
+    """Prefill variant: also returns the decode cache
+    {"S": final state, "conv": last conv_width-1 raw xBC}."""
+    return _ssd_full(p, x, dims, chunk)
+
+
+def _ssd_full(p, x, dims: SSMDims, chunk: int = 256):
+    B, L, M = x.shape
+    z, xBC, dt = _split_proj(p, x, dims)
+    xBC_raw_tail = xBC[:, L - (dims.conv_width - 1):, :]
+    xBC = _causal_conv(p, xBC, dims)
+    xh, Bm, Cm = _split_xbc(xBC, dims)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B, L, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (H,)
+
+    Q = chunk if L % chunk == 0 else L
+    nc = L // Q
+    # chunked views: (nc, B, Q, ...)
+    def chunked(t):
+        return t.reshape(B, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (chunked(xh), chunked(Bm), chunked(Cm), chunked(dt))
+    S0 = jnp.zeros((B, dims.n_heads, dims.d_state, dims.headdim), jnp.float32)
+
+    def body(S, xs_c):
+        xc, Bc, Cc, dtc = xs_c                   # (B,Q,H,P),(B,Q,H,N),(B,Q,H)
+        a = dtc * A                              # (B,Q,H)
+        acum = jnp.cumsum(a, axis=1)             # (B,Q,H)
+        # intra-chunk (quadratic in Q)
+        cb = jnp.einsum("bqhn,bkhn->bhqk", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))
+        decay = jnp.exp(acum[:, :, None] - acum[:, None, :])   # (B,Q,K,H)
+        decay = decay.transpose(0, 3, 1, 2)                    # (B,H,Q,K)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        w = jnp.where(mask[None, None], cb * decay, 0.0)
+        w = w * dtc.transpose(0, 2, 1)[:, :, None, :]          # * dt_j
+        y_intra = jnp.einsum("bhqk,bkhp->bqhp", w,
+                             xc.astype(jnp.float32))
+        # inter-chunk: contribution of incoming state
+        y_inter = jnp.einsum("bqhn,bhnp->bqhp", Cc.astype(jnp.float32), S) \
+            * jnp.exp(acum)[..., None]
+        # state update
+        a_tot = acum[:, -1]                                    # (B,H)
+        rdecay = jnp.exp(a_tot[:, None] - acum)                # (B,Q,H)
+        Bw = Bc.astype(jnp.float32) * (dtc * rdecay)[..., None]
+        dBx = jnp.einsum("bkhn,bkhp->bhnp", Bw, xc.astype(jnp.float32))
+        S_new = jnp.exp(a_tot)[..., None, None] * S + dBx
+        return S_new, (y_intra + y_inter).astype(x.dtype)
+
+    S_final, ys = jax.lax.scan(body, S0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, L, dims.n_heads, dims.headdim)
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, L, dims.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    y = shard(y, "batch", None, "act_mlp")
+    out = jnp.einsum("bli,im->blm", y, p["out_proj"].astype(x.dtype))
+    cache = {"S": S_final,
+             "conv": xBC_raw_tail.astype(jnp.bfloat16)}
+    return out, cache
+
+
+# -- decode -------------------------------------------------------------------
+
+def ssd_cache_defs(batch: int, dims: SSMDims, dtype: str = "float32") -> dict:
+    return {
+        "S": ParamDef((batch, dims.n_heads, dims.d_state, dims.headdim),
+                      ("batch", "ssm_heads", None, None), dtype=dtype,
+                      init="zeros"),
+        "conv": ParamDef((batch, dims.conv_width - 1, dims.conv_dim),
+                         ("batch", None, "ssm_heads"), dtype="bfloat16",
+                         init="zeros"),
+    }
+
+
+def ssd_decode(p, x, cache, dims: SSMDims):
+    """One token. ``x``: (B, 1, M). Returns (y, new_cache)."""
+    B = x.shape[0]
+    z, xBC, dt = _split_proj(p, x, dims)        # (B,1,*)
+    window = jnp.concatenate(
+        [cache["conv"].astype(xBC.dtype), xBC], axis=1)   # (B, W, C)
+    w = p["conv_w"].astype(xBC.dtype)
+    conv_out = jnp.einsum("bwc,wc->bc", window, w) + p["conv_b"].astype(
+        xBC.dtype)
+    xBC1 = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = window[:, 1:, :].astype(cache["conv"].dtype)
+    xh, Bm, Cm = _split_xbc(xBC1, dims)         # (B,1,H,P),(B,1,H,N)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                       # (B,H)
+    S = cache["S"]
+    dBx = jnp.einsum("bhn,bhp->bhnp", Bm[:, 0].astype(jnp.float32)
+                     * dt[..., None], xh[:, 0].astype(jnp.float32))
+    S_new = dA[..., None, None] * S + dBx
+    y = jnp.einsum("bhn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), S_new)
+    y = y.astype(x.dtype) + xh[:, 0] * p["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(B, 1, dims.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bli,im->blm", y, p["out_proj"].astype(x.dtype))
+    return out, {"S": S_new, "conv": new_conv}

@@ -1,0 +1,369 @@
+"""Composable layer stacks.
+
+A model is a *layer program*: a tuple of segments ``(kind, count)``.  Each
+segment's parameters are stacked along a leading "layers" dim and the segment
+body is ``lax.scan``ned, so a 100-layer model lowers to compact HLO.
+Composite kinds (gemma2's local/global pair, llama-vision's 4-self+1-cross
+group) nest simple blocks inside one scanned body.
+
+Kinds:
+  attn      pre-norm self-attention (full, causal) + MLP
+  swa       sliding-window self-attention + MLP
+  enc       bidirectional (encoder) self-attention + MLP     [hubert]
+  moe       self-attention + MoE FFN (+ optional dense residual)  [arctic/deepseek]
+  ssd       Mamba-2 SSD block                                 [mamba2]
+  hyb_full  parallel attention+SSM heads, full attention      [hymba]
+  hyb_swa   parallel attention+SSM heads, windowed attention  [hymba]
+  xattn     cross-attention to memory tokens + MLP            [llama-vision]
+  pair_lg   composite: swa block then attn block              [gemma2]
+  group_sx  composite: 4 self blocks then 1 xattn block       [llama-vision]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (layer_norm, layer_norm_defs, mlp_defs, mlp_forward,
+                     rms_norm, rms_norm_def)
+from .moe import MoEDims
+from .params import ParamDef, stack
+from .ssm import SSMDims
+
+__all__ = ["ModelConfig", "block_defs", "block_forward", "block_decode",
+           "block_cache_defs", "block_prefill", "SIMPLE_KINDS"]
+
+SIMPLE_KINDS = ("attn", "swa", "enc", "moe", "ssd", "hyb_full", "hyb_swa",
+                "xattn")
+COMPOSITE = {"pair_lg": ("local:swa", "global:attn"),
+             "group_sx": ("self_0:attn", "self_1:attn", "self_2:attn",
+                          "self_3:attn", "cross:xattn")}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense|moe|ssm|hybrid|vlm|audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    program: tuple                  # ((kind, count), ...)
+    # attention
+    causal: bool = True
+    window: int | None = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rotary_pct: float = 1.0
+    use_rope: bool = True
+    attn_cap: float | None = None
+    final_cap: float | None = None
+    q_chunk: int = 512
+    norm: str = "rms"               # rms | ln
+    act: str = "silu"               # silu | gelu
+    gated_mlp: bool = True
+    post_norm: bool = False         # gemma2 post-attn/post-ffn norms
+    embed_scale: bool = False
+    tie_embed: bool = True
+    # moe / ssm / vlm
+    moe: MoEDims | None = None
+    dense_residual: bool = False
+    ssm: SSMDims | None = None
+    ssd_chunk: int = 256
+    n_memory_tokens: int = 0        # vision/audio memory length (vlm)
+    frontend: str = "tokens"        # tokens | frames
+    # runtime
+    remat: str = "dots"             # none | dots | full
+    fsdp: bool = False
+    loss_chunk: int = 512
+    aux_weight: float = 0.01
+    grad_accum: int = 8             # microbatches per train step
+    flash: bool = False             # Pallas flash-attention kernel
+    flash_block: int = 256
+
+    @property
+    def rotary_dim(self) -> int | None:
+        if self.rotary_pct >= 1.0:
+            return None
+        return int(self.head_dim * self.rotary_pct)
+
+    def layers_per_step(self, kind: str) -> int:
+        return len(COMPOSITE[kind]) if kind in COMPOSITE else 1
+
+    def total_layers(self) -> int:
+        return sum(self.layers_per_step(k) * c for k, c in self.program)
+
+
+def _norm_def(cfg):
+    return rms_norm_def(cfg.d_model) if cfg.norm == "rms" \
+        else layer_norm_defs(cfg.d_model)
+
+
+def _norm(cfg, p, x):
+    return rms_norm(x, p) if cfg.norm == "rms" else layer_norm(x, p)
+
+
+# ---------------------------------------------------------------------------
+# defs
+# ---------------------------------------------------------------------------
+
+def block_defs(cfg: ModelConfig, kind: str) -> dict:
+    if kind in COMPOSITE:
+        return {spec.split(":")[0]: block_defs(cfg, spec.split(":")[1])
+                for spec in COMPOSITE[kind]}
+    if kind == "ssd":
+        return {"norm": _norm_def(cfg), "ssm": ssm_mod.ssd_defs(cfg.ssm)}
+    d = {"ln1": _norm_def(cfg), "ln2": _norm_def(cfg)}
+    gated = kind == "xattn"
+    d["attn"] = attn.attn_defs(cfg.d_model, cfg.n_heads, cfg.n_kv,
+                               cfg.head_dim, qkv_bias=cfg.qkv_bias,
+                               gated=gated)
+    if kind in ("hyb_full", "hyb_swa"):
+        d["ssm"] = ssm_mod.ssd_defs(cfg.ssm)
+        d["mix_na"] = rms_norm_def(cfg.d_model)
+        d["mix_ns"] = rms_norm_def(cfg.d_model)
+    if cfg.post_norm:
+        d["post1"] = _norm_def(cfg)
+        d["post2"] = _norm_def(cfg)
+    if kind == "moe":
+        d["moe"] = moe_mod.moe_defs(cfg.moe)
+        if cfg.dense_residual:
+            d["dense"] = mlp_defs(cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp)
+    else:
+        d["mlp"] = mlp_defs(cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_kwargs(cfg: ModelConfig, kind: str) -> dict:
+    window = cfg.window if kind in ("swa", "hyb_swa") else None
+    causal = cfg.causal and kind != "enc"
+    return dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+                causal=causal, window=window, rope_theta=cfg.rope_theta,
+                rotary_dim=cfg.rotary_dim, use_rope=cfg.use_rope,
+                attn_cap=cfg.attn_cap, flash=cfg.flash,
+                flash_block=cfg.flash_block)
+
+
+def _ffn(cfg: ModelConfig, kind: str, p, h):
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "moe":
+        y, aux = moe_mod.moe_forward(p["moe"], h, cfg.moe)
+        if cfg.dense_residual:
+            y = y + mlp_forward(p["dense"], h, act=cfg.act)
+    else:
+        y = mlp_forward(p["mlp"], h, act=cfg.act)
+    return y, aux
+
+
+def block_forward(cfg: ModelConfig, kind: str, p, x, positions,
+                  memory=None, collect_kv: bool = False):
+    """Returns (x, aux, kv) — ``kv`` is the (k, v)/state bundle when
+    ``collect_kv`` (prefill), else None."""
+    if kind in COMPOSITE:
+        aux = jnp.zeros((), jnp.float32)
+        kvs = {}
+        for spec in COMPOSITE[kind]:
+            nm, sub = spec.split(":")
+            x, a, kv = block_forward(cfg, sub, p[nm], x, positions, memory,
+                                     collect_kv)
+            aux = aux + a
+            if collect_kv:
+                kvs[nm] = kv
+        return x, aux, (kvs if collect_kv else None)
+
+    aux = jnp.zeros((), jnp.float32)
+    kv = None
+    if kind == "ssd":
+        h = _norm(cfg, p["norm"], x)
+        if collect_kv:
+            y, kv = ssm_mod.ssd_forward_with_state(p["ssm"], h, cfg.ssm,
+                                                   chunk=cfg.ssd_chunk)
+        else:
+            y = ssm_mod.ssd_forward(p["ssm"], h, cfg.ssm, chunk=cfg.ssd_chunk)
+        return x + y, aux, kv
+
+    h = _norm(cfg, p["ln1"], x)
+    if kind == "xattn":
+        k, v = attn.cross_kv(p["attn"], memory)
+        y = attn.cross_attn_forward(p["attn"], h, k, v, n_heads=cfg.n_heads,
+                                    n_kv=cfg.n_kv, head_dim=cfg.head_dim)
+        if collect_kv:
+            kv = {"xk": k, "xv": v}
+    elif kind in ("hyb_full", "hyb_swa"):
+        kwargs = _attn_kwargs(cfg, kind)
+        ya, kva = _attn_with_kv(cfg, p["attn"], h, positions, kwargs,
+                                collect_kv)
+        if collect_kv:
+            ys, kvs_ = ssm_mod.ssd_forward_with_state(p["ssm"], h, cfg.ssm,
+                                                      chunk=cfg.ssd_chunk)
+            kv = {"attn": kva, "ssm": kvs_}
+        else:
+            ys = ssm_mod.ssd_forward(p["ssm"], h, cfg.ssm, chunk=cfg.ssd_chunk)
+        y = 0.5 * (rms_norm(ya, p["mix_na"]) + rms_norm(ys, p["mix_ns"]))
+    else:
+        kwargs = _attn_kwargs(cfg, kind)
+        y, kv = _attn_with_kv(cfg, p["attn"], h, positions, kwargs,
+                              collect_kv)
+    if cfg.post_norm:
+        y = _norm(cfg, p["post1"], y)
+    x = x + y
+    h2 = _norm(cfg, p["ln2"], x)
+    y2, aux = _ffn(cfg, kind, p, h2)
+    if cfg.post_norm:
+        y2 = _norm(cfg, p["post2"], y2)
+    return x + y2, aux, kv
+
+
+def _attn_with_kv(cfg, p, h, positions, kwargs, collect_kv):
+    y = attn.attn_forward(p, h, q_chunk=cfg.q_chunk, positions=positions,
+                          **kwargs)
+    if not collect_kv:
+        return y, None
+    # recompute k/v projections (cheap relative to attention) for the cache
+    k, v = attn.cross_kv(p, h)
+    if kwargs["use_rope"]:
+        from .layers import rope
+        k = rope(k.swapaxes(1, 2), positions, kwargs["rope_theta"],
+                 kwargs["rotary_dim"]).swapaxes(1, 2)
+    return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# caches + decode
+# ---------------------------------------------------------------------------
+
+def block_cache_defs(cfg: ModelConfig, kind: str, batch: int,
+                     cache_len: int) -> dict | None:
+    if kind in COMPOSITE:
+        out = {}
+        for spec in COMPOSITE[kind]:
+            nm, sub = spec.split(":")
+            c = block_cache_defs(cfg, sub, batch, cache_len)
+            if c is not None:
+                out[nm] = c
+        return out
+    if kind == "enc":
+        return None
+    seq_sharded = batch == 1           # long-context: shard cache over seq
+    if kind == "ssd":
+        return ssm_mod.ssd_cache_defs(batch, cfg.ssm)
+    if kind == "xattn":
+        return {
+            "xk": ParamDef((batch, cfg.n_memory_tokens, cfg.n_kv,
+                            cfg.head_dim), ("batch", None, "kv_heads", None),
+                           dtype="bfloat16", init="zeros"),
+            "xv": ParamDef((batch, cfg.n_memory_tokens, cfg.n_kv,
+                            cfg.head_dim), ("batch", None, "kv_heads", None),
+                           dtype="bfloat16", init="zeros"),
+        }
+    win = cfg.window if kind in ("swa", "hyb_swa") else None
+    S = min(win, cache_len) if win else cache_len
+    kv = attn.init_kv_cache_defs(batch, S, cfg.n_kv, cfg.head_dim,
+                                 seq_sharded=seq_sharded and win is None)
+    if kind in ("hyb_full", "hyb_swa"):
+        return {"attn": kv, "ssm": ssm_mod.ssd_cache_defs(batch, cfg.ssm)}
+    return kv
+
+
+def block_decode(cfg: ModelConfig, kind: str, p, x, cache, pos,
+                 memory=None):
+    """One-token step. Returns (x, new_cache)."""
+    if kind in COMPOSITE:
+        new = {}
+        for spec in COMPOSITE[kind]:
+            nm, sub = spec.split(":")
+            x, c = block_decode(cfg, sub, p[nm], x, cache[nm], pos, memory)
+            new[nm] = c
+        return x, new
+
+    if kind == "ssd":
+        h = _norm(cfg, p["norm"], x)
+        y, c = ssm_mod.ssd_decode(p["ssm"], h, cache, cfg.ssm)
+        return x + y, c
+
+    h = _norm(cfg, p["ln1"], x)
+    if kind == "xattn":
+        y = attn.cross_attn_forward(p["attn"], h, cache["xk"].astype(x.dtype),
+                                    cache["xv"].astype(x.dtype),
+                                    n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                                    head_dim=cfg.head_dim)
+        new_cache = cache
+    elif kind in ("hyb_full", "hyb_swa"):
+        kw = _attn_kwargs(cfg, kind)
+        for drop in ("causal", "flash", "flash_block"):
+            kw.pop(drop)
+        ya, ca = attn.attn_decode(p["attn"], h, cache["attn"], pos, **kw)
+        ys, cs = ssm_mod.ssd_decode(p["ssm"], h, cache["ssm"], cfg.ssm)
+        y = 0.5 * (rms_norm(ya, p["mix_na"]) + rms_norm(ys, p["mix_ns"]))
+        new_cache = {"attn": ca, "ssm": cs}
+    else:
+        kw = _attn_kwargs(cfg, kind)
+        for drop in ("causal", "flash", "flash_block"):
+            kw.pop(drop)
+        y, new_cache = attn.attn_decode(p["attn"], h, cache, pos, **kw)
+    if cfg.post_norm:
+        y = _norm(cfg, p["post1"], y)
+    x = x + y
+    h2 = _norm(cfg, p["ln2"], x)
+    y2, _ = _ffn(cfg, kind, p, h2)
+    if cfg.post_norm:
+        y2 = _norm(cfg, p["post2"], y2)
+    return x + y2, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill cache construction
+# ---------------------------------------------------------------------------
+
+def block_prefill(cfg: ModelConfig, kind: str, kv, cache_defs_tree,
+                  batch: int, L: int):
+    """Convert collected prefill k/v (or SSM state) into cache layout
+    matching ``block_cache_defs``.  ``kv`` comes from block_forward with
+    collect_kv=True; returns a pytree of arrays."""
+    if kind in COMPOSITE:
+        out = {}
+        for spec in COMPOSITE[kind]:
+            nm, sub = spec.split(":")
+            out[nm] = block_prefill(cfg, sub, kv[nm], cache_defs_tree[nm],
+                                    batch, L)
+        return out
+    if kind == "ssd":
+        return kv                      # already {"S":..., "conv":...}
+    if kind == "xattn":
+        return {"xk": kv["xk"].astype(jnp.bfloat16),
+                "xv": kv["xv"].astype(jnp.bfloat16)}
+    if kind in ("hyb_full", "hyb_swa"):
+        return {"attn": _kv_to_cache(kv["attn"],
+                                     cache_defs_tree["attn"], L),
+                "ssm": kv["ssm"]}
+    return _kv_to_cache(kv, cache_defs_tree, L)
+
+
+def _kv_to_cache(kv, cdefs, L):
+    S = cdefs["k"].shape[1]
+    out = {}
+    for nm in ("k", "v"):
+        src = kv[nm].astype(jnp.bfloat16)          # (B, L, K, D)
+        if S >= L:
+            buf = jnp.zeros(cdefs[nm].shape, jnp.bfloat16)
+            out[nm] = jax.lax.dynamic_update_slice_in_dim(buf, src, 0, axis=1)
+        else:       # ring: keep last S, placed at slot p % S
+            tail = src[:, L - S:]
+            slots = (jnp.arange(L - S, L)) % S
+            buf = jnp.zeros(cdefs[nm].shape, jnp.bfloat16)
+            out[nm] = buf.at[:, slots].set(tail)
+    return out

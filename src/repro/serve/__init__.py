@@ -1,0 +1,5 @@
+from .engine import ServeEngine, make_decode_step, make_prefill_step
+from .kv_cache import cache_bytes, cache_spec_summary, flatten_cache
+
+__all__ = ["ServeEngine", "make_decode_step", "make_prefill_step",
+           "cache_bytes", "cache_spec_summary", "flatten_cache"]

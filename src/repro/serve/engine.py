@@ -1,0 +1,95 @@
+"""Batched serving: prefill + decode with a persistent KV cache.
+
+``make_prefill_step`` / ``make_decode_step`` produce the pure functions the
+dry-run lowers (``serve_step`` == one decode step against a filled cache, per
+the shape-cell definitions); :class:`ServeEngine` drives them for real
+batched generation with donation of the cache buffers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import LM
+
+__all__ = ["make_prefill_step", "make_decode_step", "ServeEngine"]
+
+
+def make_prefill_step(model: LM, cache_len: int | None = None) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_len=cache_len)
+    return prefill_step
+
+
+def make_decode_step(model: LM) -> Callable:
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+    return serve_step
+
+
+@dataclasses.dataclass
+class GenStats:
+    prefill_seconds: float = 0.0
+    decode_seconds: float = 0.0
+    tokens_generated: int = 0
+
+    @property
+    def decode_tps(self) -> float:
+        return self.tokens_generated / max(self.decode_seconds, 1e-9)
+
+
+class ServeEngine:
+    """Static-batch generation engine (greedy / temperature sampling)."""
+
+    def __init__(self, model: LM, params, max_len: int = 512):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(make_prefill_step(model, cache_len=max_len))
+        self._decode = jax.jit(make_decode_step(model),
+                               donate_argnums=(1,))
+
+    def generate(self, tokens: np.ndarray, num_new: int,
+                 temperature: float = 0.0, rng=None,
+                 extra: dict | None = None) -> tuple:
+        """``tokens``: (B, L) prompt. Returns (generated (B, num_new), stats)."""
+        B, L = tokens.shape
+        if L + num_new > self.max_len:
+            raise ValueError("exceeds engine max_len")
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        if extra:
+            batch.update(extra)
+        stats = GenStats()
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, batch)
+        logits = jax.block_until_ready(logits)
+        stats.prefill_seconds = time.perf_counter() - t0
+
+        out = []
+        t0 = time.perf_counter()
+        pos = L
+        cur = self._sample(logits[:, -1], temperature, rng)
+        for i in range(num_new):
+            out.append(np.asarray(cur))
+            logits, cache = self._decode(self.params, cache, cur,
+                                         jnp.int32(pos))
+            cur = self._sample(logits[:, -1], temperature, rng)
+            pos += 1
+        jax.block_until_ready(logits)
+        stats.decode_seconds = time.perf_counter() - t0
+        stats.tokens_generated = num_new * B
+        return np.concatenate(out, axis=1), stats
+
+    @staticmethod
+    def _sample(logits, temperature, rng):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        key = rng if rng is not None else jax.random.key(0)
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1)[:, None].astype(jnp.int32)

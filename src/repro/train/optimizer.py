@@ -1,0 +1,108 @@
+"""AdamW with pytree state, cosine schedule, global-norm clipping, and
+optional ZeRO-1 sharding of the optimizer moments.
+
+ZeRO: ``zero_shard_defs`` returns ParamDef-style logical axes for the m/v
+moments where the largest divisible dim additionally carries the "data" mesh
+axis; under GSPMD this lowers the gradient reduction to
+reduce-scatter + sharded update + all-gather instead of all-reduce +
+replicated update (the §Perf "distributed optimizer" lever).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models.params import ParamDef
+
+__all__ = ["OptimizerConfig", "warmup_cosine", "adamw_init", "adamw_update",
+           "global_norm", "zero_moment_defs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    end_lr: float = 3e-5
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    zero1: bool = False           # shard moments over the data axis
+
+
+def warmup_cosine(cfg: OptimizerConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.end_lr + 0.5 * (cfg.peak_lr - cfg.end_lr) * (1 + jnp.cos(
+        jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state, params):
+    count = state["count"] + 1
+    lr = warmup_cosine(cfg, count)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / (1 - cfg.b1 ** count.astype(jnp.float32))
+        vh = v / (1 - cfg.b2 ** count.astype(jnp.float32))
+        step = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v,
+                                                 flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}, \
+        {"grad_norm": gn, "lr": lr}
+
+
+def zero_moment_defs(skel):
+    """Moment ParamDefs with an extra 'data' shard on the largest divisible
+    dim (ZeRO-1)."""
+    def zdef(d: ParamDef) -> ParamDef:
+        axes = list(d.axes)
+        # carry the data axis on the largest dim that the default rules
+        # leave replicated (None, or "embed"/"head_dim"/"state" which map
+        # to no mesh axis in non-FSDP runs)
+        order = sorted(range(len(d.shape)), key=lambda i: -d.shape[i])
+        for i in order:
+            if axes[i] in (None, "embed", "head_dim", "state") \
+                    and d.shape[i] >= 2:
+                axes[i] = "zero_data"
+                break
+        return ParamDef(d.shape, tuple(axes), "float32", "zeros")
+    return jax.tree_util.tree_map(
+        zdef, skel, is_leaf=lambda x: isinstance(x, ParamDef))

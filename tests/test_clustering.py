@@ -1,0 +1,124 @@
+"""Tests for the extended Berger–Rigoutsos clustering (Algorithm 1)."""
+
+import numpy as np
+
+from repro.core.blocks import (Block, blocks_disjoint, total_volume,
+                               uniform_grid_blocks, simulate_load_balance)
+from repro.core.clustering import cluster_blocks, merged_block_counts
+
+
+def _check_invariants(blocks, clusters, fully_filled=True):
+    # every block in exactly one cluster
+    seen = [m.block_id for c in clusters for m in c.members]
+    assert sorted(seen) == sorted(b.block_id for b in blocks)
+    # clusters fully filled (Algorithm 1's termination criterion)
+    if fully_filled:
+        for c in clusters:
+            assert c.cuboid.volume == sum(m.volume for m in c.members)
+        assert blocks_disjoint([c.cuboid for c in clusters])
+    # volume conservation
+    assert sum(sum(m.volume for m in c.members) for c in clusters) \
+        == total_volume(blocks)
+
+
+def test_single_block():
+    b = Block((0, 0, 0), (4, 4, 4), owner=0, block_id=0)
+    cls = cluster_blocks([b])
+    assert len(cls) == 1 and cls[0].cuboid.shape == (4, 4, 4)
+
+
+def test_full_slab_merges_to_one():
+    blocks = uniform_grid_blocks((64, 64, 16), (16, 16, 16))
+    cls = cluster_blocks(blocks)
+    assert len(cls) == 1
+    _check_invariants(blocks, cls)
+
+
+def test_two_separated_slabs():
+    blks, bid = [], 0
+    for base in (0, 6):
+        for i in range(2):
+            for j in range(4):
+                blks.append(Block(((base + i) * 8, j * 8, 0),
+                                  ((base + i + 1) * 8, (j + 1) * 8, 8),
+                                  owner=0, block_id=bid))
+                bid += 1
+    cls = cluster_blocks(blks)
+    assert len(cls) == 2
+    _check_invariants(blks, cls)
+
+
+def test_l_shape():
+    blks = [Block((0, 0, 0), (1, 1, 1), 0, 0),
+            Block((1, 0, 0), (2, 1, 1), 0, 1),
+            Block((0, 1, 0), (1, 2, 1), 0, 2)]
+    cls = cluster_blocks(blks)
+    assert len(cls) == 2
+    _check_invariants(blks, cls)
+
+
+def test_checkerboard_cannot_merge():
+    """Isolated alternating blocks have no fully-filled super-cuboid."""
+    blks = []
+    bid = 0
+    for i in range(4):
+        for j in range(4):
+            if (i + j) % 2 == 0:
+                blks.append(Block((i * 2, j * 2), ((i + 1) * 2, (j + 1) * 2),
+                                  0, bid))
+                bid += 1
+    cls = cluster_blocks(blks)
+    assert len(cls) == len(blks)
+    _check_invariants(blks, cls)
+
+
+def test_property_random_distributions():
+    """Property sweep: invariants hold for random load-balanced ownerships,
+    and merging never increases the block count."""
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        nb = int(rng.integers(2, 6))
+        blocks = uniform_grid_blocks((nb * 16, 64, 32), (16, 16, 16))
+        lb = simulate_load_balance(blocks, num_procs=5, seed=seed)
+        for p in range(5):
+            mine = [b for b in lb if b.owner == p]
+            if not mine:
+                continue
+            cls = cluster_blocks(mine)
+            _check_invariants(mine, cls)
+            assert len(cls) <= len(mine)
+
+
+def test_non_uniform_blocks():
+    """The loosened assumption: mixed block shapes still cluster correctly."""
+    blks = [Block((0, 0, 0), (4, 8, 8), 0, 0),      # tall
+            Block((4, 0, 0), (8, 8, 8), 0, 1),      # fills to a cube
+            Block((16, 0, 0), (24, 4, 8), 0, 2)]    # separate slab
+    cls = cluster_blocks(blks)
+    _check_invariants(blks, cls)
+    assert len(cls) == 2
+
+
+def test_max_clusters_cap():
+    blocks = uniform_grid_blocks((64, 64, 16), (8, 8, 8))
+    lb = simulate_load_balance(blocks, num_procs=3, rounds=6,
+                               exchange_frac=0.5, locality_bias=0.1, seed=1)
+    mine = [b for b in lb if b.owner == 0]
+    capped = cluster_blocks(mine, max_clusters=4)
+    assert len(capped) <= 4
+    # capped clusters may not be fully filled; membership still partitions
+    seen = [m.block_id for c in capped for m in c.members]
+    assert sorted(seen) == sorted(b.block_id for b in mine)
+
+
+def test_paper_metric_direction():
+    """Fig. 8 / §4.3: merging reduces ~10 blocks/proc to a few."""
+    blocks = uniform_grid_blocks((256, 256, 256), (32, 32, 64))
+    lb = simulate_load_balance(blocks, num_procs=50, seed=0)
+    ratios = []
+    for p in range(50):
+        mine = [b for b in lb if b.owner == p]
+        if len(mine) >= 4:
+            o, m = merged_block_counts(mine)
+            ratios.append(m / o)
+    assert np.mean(ratios) < 0.75   # at least ~25% reduction on average

@@ -1,0 +1,82 @@
+"""Unit + property tests for repro.core.blocks."""
+
+import numpy as np
+import pytest
+
+from repro.core.blocks import (Block, blocks_disjoint, bounding_box,
+                               regular_decomposition, shard_grid_blocks,
+                               simulate_load_balance, total_volume,
+                               uniform_grid_blocks)
+
+
+def test_block_basics():
+    b = Block((0, 0, 0), (4, 5, 6))
+    assert b.shape == (4, 5, 6)
+    assert b.volume == 120
+    assert b.ndim == 3
+
+
+def test_block_validation():
+    with pytest.raises(ValueError):
+        Block((0, 0), (0, 1))
+    with pytest.raises(ValueError):
+        Block((0,), (1, 2))
+
+
+def test_intersect_contains_overlap():
+    a = Block((0, 0), (4, 4))
+    b = Block((2, 2), (6, 6))
+    c = a.intersect(b)
+    assert c is not None and c.lo == (2, 2) and c.hi == (4, 4)
+    assert a.overlaps(b) and b.overlaps(a)
+    assert a.contains(Block((1, 1), (2, 2)))
+    assert not a.contains(b)
+    assert a.intersect(Block((4, 0), (5, 4))) is None
+
+
+def test_slices_translate():
+    b = Block((2, 3), (5, 7))
+    assert b.slices() == (slice(2, 5), slice(3, 7))
+    assert b.slices(origin=(2, 3)) == (slice(0, 3), slice(0, 4))
+    t = b.translate((10, 20))
+    assert t.lo == (12, 23) and t.hi == (15, 27)
+
+
+def test_uniform_grid_partition_property():
+    """Property: a uniform grid tiles the domain exactly (disjoint + total)."""
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        dims = rng.integers(1, 4, size=3)
+        bs = tuple(int(8 * d) for d in dims)
+        gs = tuple(int(b * rng.integers(1, 4)) for b in bs)
+        blocks = uniform_grid_blocks(gs, bs)
+        assert total_volume(blocks) == np.prod(gs)
+        assert blocks_disjoint(blocks)
+        assert bounding_box(blocks).shape == gs
+
+
+def test_regular_decomposition_remainders():
+    parts = regular_decomposition((10, 7), (3, 2))
+    assert total_volume(parts) == 70
+    assert blocks_disjoint(parts)
+    assert len(parts) == 6
+
+
+def test_load_balance_preserves_partition():
+    blocks = uniform_grid_blocks((64, 64, 64), (16, 16, 16))
+    lb = simulate_load_balance(blocks, num_procs=7, seed=3)
+    assert total_volume(lb) == 64 ** 3
+    assert blocks_disjoint(lb)
+    assert all(0 <= b.owner < 7 for b in lb)
+    # geometry untouched, only ownership changes
+    assert sorted(b.lo for b in lb) == sorted(b.lo for b in blocks)
+
+
+def test_shard_grid_blocks_owner_mapping():
+    blocks = shard_grid_blocks((8, 8), (2, 4), lambda idx: idx[0] * 4 + idx[1])
+    assert len(blocks) == 8
+    owners = {b.owner for b in blocks}
+    assert owners == set(range(8))
+    for b in blocks:
+        i, j = b.lo[0] // 4, b.lo[1] // 2
+        assert b.owner == i * 4 + j

@@ -1,0 +1,80 @@
+"""The §5.2 model must reproduce the paper's worked examples exactly."""
+
+import pytest
+
+from repro.core.cost_model import (PAPER_TIMINGS, breakeven_outputs,
+                                   is_blocking, onthefly_utilization,
+                                   posthoc_utilization, recommend,
+                                   tc_lower_bound_blocking,
+                                   tc_upper_bound_nonblocking)
+
+
+def test_table2_fixture():
+    t = PAPER_TIMINGS
+    assert (t.t_s, t.t_w_stage, t.t_w_sim, t.t_r_stage) == (19.4, 13.6, 1.4, 11.1)
+    assert (t.n, t.m) == (256, 2)
+
+
+def test_paper_example_tc40():
+    """t_c=40: non-blocking; U_o = 258(40N+33); U_p = 10647.8N; N >= 26."""
+    t = PAPER_TIMINGS
+    assert not is_blocking(t, 40.0)
+    assert onthefly_utilization(t, 40.0, 10) == pytest.approx(258 * (400 + 33))
+    assert posthoc_utilization(t, 40.0, 10) == pytest.approx(10647.8 * 10)
+    assert breakeven_outputs(t, 40.0) == 26
+    assert onthefly_utilization(t, 40, 26) < posthoc_utilization(t, 40, 26)
+    assert onthefly_utilization(t, 40, 25) >= posthoc_utilization(t, 40, 25)
+
+
+def test_paper_example_tc20():
+    """t_c=20: blocking; U_o = 258(20+33N) > U_p = 5527.8N always."""
+    t = PAPER_TIMINGS
+    assert is_blocking(t, 20.0)
+    assert onthefly_utilization(t, 20.0, 7) == pytest.approx(258 * (20 + 33 * 7))
+    assert posthoc_utilization(t, 20.0, 7) == pytest.approx(5527.8 * 7)
+    assert breakeven_outputs(t, 20.0) is None
+
+
+def test_paper_blocking_tc_window():
+    """Paper: need 31.66 < t_c (< 33 to stay blocking) for eventual win."""
+    t = PAPER_TIMINGS
+    assert tc_lower_bound_blocking(t) == pytest.approx(8106.2 / 256, abs=1e-6)
+    # just above the bound, a large-enough N wins
+    assert breakeven_outputs(t, 32.0) is not None
+    # just below, never
+    assert breakeven_outputs(t, 31.0) is None
+
+
+def test_paper_tc_upper_bound_N50():
+    """Paper formula (407.8N - 8514) / (2N) at N=50 -> 118.76 s.
+
+    (The paper's printed 150.26 is an arithmetic slip; we implement the
+    paper's own symbolic bound.)"""
+    t = PAPER_TIMINGS
+    assert tc_upper_bound_nonblocking(t, 50) == pytest.approx(118.76)
+    # asymptote: 407.8/2 = 203.9
+    assert tc_upper_bound_nonblocking(t, 10 ** 9) == pytest.approx(203.9, abs=1e-3)
+    # a t_c inside the bound wins at N=50, outside loses
+    assert onthefly_utilization(t, 118.0, 50) < posthoc_utilization(t, 118.0, 50)
+    assert onthefly_utilization(t, 120.0, 50) > posthoc_utilization(t, 120.0, 50)
+
+
+def test_recommend_policy():
+    t = PAPER_TIMINGS
+    r = recommend(t, 40.0, 100)
+    assert r["choose"] == "on_the_fly"
+    r = recommend(t, 20.0, 100)
+    assert r["choose"] == "post_hoc"
+
+
+def test_breakeven_matches_bruteforce():
+    """Property: the closed-form break-even equals brute-force scan."""
+    t = PAPER_TIMINGS
+    for t_c in (32.0, 35.0, 40.0, 60.0, 100.0):
+        n = breakeven_outputs(t, t_c)
+        brute = None
+        for k in range(1, 200000):
+            if onthefly_utilization(t, t_c, k) < posthoc_utilization(t, t_c, k):
+                brute = k
+                break
+        assert n == brute, (t_c, n, brute)

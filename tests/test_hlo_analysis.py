@@ -1,0 +1,77 @@
+"""Unit tests for the trip-count-aware HLO cost analyzer."""
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+SAMPLE = """
+HloModule jit_step, is_scheduled=true
+
+%fused_dus (param_0.1: f32[8,16,32], param_1.1: f32[1,16,32], param_2.1: s32[]) -> f32[8,16,32] {
+  %param_0.1 = f32[8,16,32]{2,1,0} parameter(0)
+  %param_1.1 = f32[1,16,32]{2,1,0} parameter(1)
+  %param_2.1 = s32[] parameter(2)
+  ROOT %dus = f32[8,16,32]{2,1,0} dynamic-update-slice(%param_0.1, %param_1.1, %param_2.1)
+}
+
+%body (arg: (s32[], f32[16,32], f32[8,32,32])) -> (s32[], f32[16,32], f32[8,32,32]) {
+  %arg = (s32[], f32[16,32], f32[8,32,32]) parameter(0)
+  %iv = s32[] get-tuple-element(%arg), index=0
+  %x = f32[16,32]{1,0} get-tuple-element(%arg), index=1
+  %ws = f32[8,32,32]{2,1,0} get-tuple-element(%arg), index=2
+  %w = f32[32,32]{1,0} dynamic-slice(%ws, %iv), dynamic_slice_sizes={1,32,32}
+  %y = f32[16,32]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %r = f32[16,32]{1,0} all-reduce(%y), replica_groups={}, to_apply=%body
+  %one = s32[] constant(1)
+  %ivn = s32[] add(%iv, %one)
+  ROOT %out = (s32[], f32[16,32], f32[8,32,32]) tuple(%ivn, %r, %ws)
+}
+
+%cond (arg2: (s32[], f32[16,32], f32[8,32,32])) -> pred[] {
+  %arg2 = (s32[], f32[16,32], f32[8,32,32]) parameter(0)
+  %iv2 = s32[] get-tuple-element(%arg2), index=0
+  %n = s32[] constant(8)
+  ROOT %lt = pred[] compare(%iv2, %n), direction=LT
+}
+
+ENTRY %main (p0: f32[16,32], p1: f32[8,32,32]) -> f32[16,32] {
+  %p0 = f32[16,32]{1,0} parameter(0)
+  %p1 = f32[8,32,32]{2,1,0} parameter(1)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[16,32], f32[8,32,32]) tuple(%zero, %p0, %p1)
+  %loop = (s32[], f32[16,32], f32[8,32,32]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"8"}}
+  ROOT %res = f32[16,32]{1,0} get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_trip_count_from_backend_config():
+    c = analyze_hlo(SAMPLE)
+    assert c.while_trips == {"loop": 8}
+
+
+def test_dot_flops_multiplied_by_trips():
+    c = analyze_hlo(SAMPLE)
+    # dot: 2 * out(16*32) * k(32) = 32768 flops, x8 trips
+    assert c.flops == 8 * 2 * 16 * 32 * 32
+
+
+def test_collective_bytes():
+    c = analyze_hlo(SAMPLE)
+    # all-reduce of f32[16,32] = 2048 B, ring 2x, x8 trips
+    assert c.collective_bytes == 8 * 2 * 2048
+    assert c.collectives["all-reduce"]["count"] == 8
+
+
+def test_dynamic_slice_counts_slice_only():
+    c = analyze_hlo(SAMPLE)
+    # the (8,32,32) weight stack must NOT be charged 8x32KB per trip for
+    # the dynamic-slice; each trip reads ~1 slice (32x32x4 = 4KB x2)
+    per_trip_ds = 2 * 32 * 32 * 4
+    assert c.bytes < 8 * (per_trip_ds + 5 * 16 * 32 * 4 + 8 * 32 * 32 * 4)
+
+
+def test_trip_count_fallback_from_condition():
+    # strip the backend_config so the condition constant is used
+    sample = SAMPLE.replace(
+        ', backend_config={"known_trip_count":{"n":"8"}}', "")
+    c = analyze_hlo(sample)
+    assert c.while_trips == {"loop": 8}

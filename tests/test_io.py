@@ -1,0 +1,144 @@
+"""Integration tests for the io substrate: every layout strategy must
+round-trip bit-exactly under whole-domain, sub-region, decomposed and
+pattern reads; staging and post-hoc reorganization must too."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (STRATEGIES, plan_layout, simulate_load_balance,
+                        uniform_grid_blocks)
+from repro.core.blocks import Block
+from repro.core.read_patterns import PATTERNS, pattern_region
+from repro.io import (Dataset, StagingExecutor, gather_to_nodes,
+                      rewrite_dataset, write_variable)
+
+GLOBAL = (64, 64, 64)
+BLOCK = (16, 16, 16)
+NPROCS, PPN = 8, 4
+
+
+@pytest.fixture(scope="module")
+def world():
+    rng = np.random.default_rng(0)
+    blocks = simulate_load_balance(uniform_grid_blocks(GLOBAL, BLOCK),
+                                   num_procs=NPROCS, seed=5)
+    data = {b.block_id: rng.standard_normal(b.shape).astype(np.float32)
+            for b in blocks}
+    ref = np.zeros(GLOBAL, np.float32)
+    for b in blocks:
+        ref[b.slices()] = data[b.block_id]
+    return blocks, data, ref
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_roundtrip_all_strategies(tmp_path, world, strategy):
+    blocks, data, ref = world
+    d = str(tmp_path / strategy)
+    plan = plan_layout(strategy, blocks, num_procs=NPROCS,
+                       procs_per_node=PPN, global_shape=GLOBAL,
+                       num_stagers=2)
+    if strategy == "merged_node":
+        _, data, _ = gather_to_nodes(blocks, data, PPN)
+    _, ws = write_variable(d, "B", np.float32, plan, data)
+    assert ws.bytes_written >= ref.nbytes     # >= because reorg may pad
+    ds = Dataset(d)
+    arr, st = ds.read("B", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+    assert st.chunks_touched == plan.num_chunks
+
+    sub = Block((5, 10, 3), (50, 33, 61))
+    arr, _ = ds.read("B", sub)
+    np.testing.assert_array_equal(arr, ref[sub.slices()])
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_patterns_and_decompositions(tmp_path, world, pattern):
+    blocks, data, ref = world
+    d = str(tmp_path / "ds")
+    plan = plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    write_variable(d, "B", np.float32, plan, data)
+    ds = Dataset(d)
+    region = pattern_region(pattern, GLOBAL)
+    for scheme in [(1, 1, 1), (2, 1, 1), (1, 2, 2)]:
+        st = ds.read_decomposed("B", region, scheme)
+        assert st.bytes_read == region.volume * 4
+    scheme, st = ds.read_pattern("B", pattern, num_readers=4)
+    assert int(np.prod(scheme)) <= 4
+
+
+def test_merged_layouts_reduce_chunks(world):
+    blocks, _, _ = world
+    chunked = plan_layout("chunked", blocks, num_procs=NPROCS)
+    merged_p = plan_layout("merged_process", blocks, num_procs=NPROCS)
+    merged_n = plan_layout("merged_node", blocks, num_procs=NPROCS,
+                           procs_per_node=PPN)
+    assert merged_p.num_chunks <= chunked.num_chunks
+    assert merged_n.num_chunks <= merged_p.num_chunks
+
+
+def test_staging_executor_roundtrip(tmp_path, world):
+    blocks, data, ref = world
+    sd = str(tmp_path / "staged")
+    plan = plan_layout("reorganized", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL, reorg_scheme=(2, 2, 2),
+                       num_stagers=2)
+    ex = StagingExecutor(sd, num_workers=2, queue_depth=2)
+    for step in range(3):
+        ex.submit(step, "B", np.float32, plan, data)
+    results = ex.drain()
+    ex.close()
+    assert [r.step for r in results] == [0, 1, 2]
+    assert all(r.num_chunks == 8 for r in results)
+    ds = Dataset(sd)
+    for step in range(3):
+        arr, _ = ds.read(f"B@{step}", Block((0, 0, 0), GLOBAL))
+        np.testing.assert_array_equal(arr, ref)
+
+
+def test_staging_blocking_regime(tmp_path, world):
+    """queue_depth=1 with slow writes must eventually stall the producer."""
+    blocks, data, ref = world
+    sd = str(tmp_path / "staged_slow")
+    plan = plan_layout("reorganized", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL, reorg_scheme=(4, 4, 4))
+    ex = StagingExecutor(sd, num_workers=1, queue_depth=1,
+                         link_gbps=None)
+    stalls = [ex.submit(step, "B", np.float32, plan, data)
+              for step in range(6)]
+    ex.drain()
+    ex.close()
+    assert len(stalls) == 6     # completed despite backpressure
+
+
+def test_posthoc_rewrite(tmp_path, world):
+    blocks, data, ref = world
+    src = str(tmp_path / "src")
+    dst = str(tmp_path / "dst")
+    plan = plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    write_variable(src, "B", np.float32, plan, data)
+    reorg = plan_layout("reorganized", blocks, num_procs=NPROCS,
+                        global_shape=GLOBAL, reorg_scheme=(4, 4, 4))
+    read_s, idx, ws = rewrite_dataset(src, dst, "B", reorg)
+    ds = Dataset(dst)
+    arr, st = ds.read("B", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+    assert st.chunks_touched == 64
+
+
+def test_multiple_variables_one_dataset(tmp_path, world):
+    blocks, data, ref = world
+    d = str(tmp_path / "multi")
+    plan = plan_layout("chunked", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    idx, _ = write_variable(d, "B", np.float32, plan, data)
+    data2 = {k: v * 2 for k, v in data.items()}
+    write_variable(d, "E", np.float32, plan, data2, index=idx)
+    ds = Dataset(d)
+    arr, _ = ds.read("E", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref * 2)
+    arr, _ = ds.read("B", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)

@@ -1,0 +1,87 @@
+"""Serving engine, read-pattern properties, and long-context decode caches."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.blocks import Block
+from repro.core.read_patterns import (PATTERNS, best_decompositions,
+                                      decompose_region, pattern_region)
+from repro.models import LM
+from repro.serve import ServeEngine, cache_bytes, cache_spec_summary
+
+
+def test_serve_engine_greedy_deterministic():
+    cfg = get_smoke_config("qwen2.5-3b")
+    model = LM(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, max_len=48)
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab, (2, 16))
+    out1, _ = engine.generate(prompts, num_new=8)
+    engine2 = ServeEngine(model, params, max_len=48)
+    out2, _ = engine2.generate(prompts, num_new=8)
+    np.testing.assert_array_equal(out1, out2)
+    assert out1.shape == (2, 8)
+
+
+def test_serve_engine_matches_stepwise_forward():
+    """Greedy generation must equal repeated full-forward argmax."""
+    cfg = get_smoke_config("yi-9b")
+    model = LM(cfg)
+    params = model.init(jax.random.key(1))
+    engine = ServeEngine(model, params, max_len=32)
+    rng = np.random.default_rng(1)
+    prompts = rng.integers(0, cfg.vocab, (1, 8))
+    out, _ = engine.generate(prompts, num_new=4)
+    # reference: roll forward with full recompute
+    from repro.models.layers import unembed_chunked
+    toks = jnp.asarray(prompts, jnp.int32)
+    ref = []
+    for _ in range(4):
+        h, _, _ = model.hidden(params, {"tokens": toks})
+        nxt = jnp.argmax(unembed_chunked(
+            h[:, -1:], params.get("lm_head", params.get("embed")),
+            final_cap=cfg.final_cap), axis=-1).astype(jnp.int32)
+        ref.append(int(nxt[0, 0]))
+        toks = jnp.concatenate([toks, nxt], axis=1)
+    assert out[0].tolist() == ref
+
+
+def test_window_cache_is_ring_sized():
+    """Sliding-window archs must allocate window-sized caches, and SSM archs
+    constant-size state — the long_500k feasibility property."""
+    cfg = get_smoke_config("gemma2-2b")      # window=8
+    model = LM(cfg)
+    summary = cache_spec_summary(model, batch=1, cache_len=1024)
+    # pair_lg = window(8) local + full(1024) global
+    full = cache_bytes(model, 1, 1024)
+    half = cache_bytes(model, 1, 2048)
+    # doubling context must NOT double cache (local layers stay at window)
+    assert half < 2 * full
+    cfg_ssm = get_smoke_config("mamba2-780m")
+    m2 = LM(cfg_ssm)
+    assert cache_bytes(m2, 1, 1024) == cache_bytes(m2, 1, 2 ** 16)
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_pattern_regions_inside_domain(pattern):
+    shape = (64, 48, 32)
+    r = pattern_region(pattern, shape)
+    assert all(0 <= lo < hi <= s for lo, hi, s in zip(r.lo, r.hi, shape))
+
+
+def test_decompose_region_partitions():
+    region = Block((4, 4, 4), (36, 20, 12))
+    for scheme in [(2, 2, 2), (4, 1, 1), (1, 3, 2), (8, 8, 8)]:
+        parts = decompose_region(region, scheme)
+        assert sum(p.volume for p in parts) == region.volume
+        for p in parts:
+            assert region.contains(p)
+
+
+def test_best_decompositions_cover_factorizations():
+    ds = best_decompositions(8)
+    assert (1, 1, 8) in ds and (2, 2, 2) in ds and (8, 1, 1) in ds
+    assert all(a * b * c == 8 for a, b, c in ds)
