@@ -1,0 +1,176 @@
+"""Algorithm-1 clustering throughput (ISSUE 1): level-batched engine vs the
+seed's per-candidate Python implementation, on a 16x16x16 uniform block grid
+(4096 blocks; 8x8x8 = 512 in smoke mode).
+
+Three workloads:
+  * ``single_call``   one fragmented owner set, one ``cluster_blocks`` call
+  * ``per_owner``     the paper's §4.3 loop: one call per process
+  * ``batched_many``  same work through ``cluster_blocks_many`` (one run)
+
+``speedup`` compares against ``_seed_cluster_blocks`` below — a verbatim
+port of the seed implementation kept as the timing reference; outputs are
+asserted identical before timing.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+from repro.core.blocks import (Block, bounding_box, simulate_load_balance,
+                               total_volume, uniform_grid_blocks)
+from repro.core.clustering import cluster_blocks, cluster_blocks_many
+
+from .common import GLOBAL, SMOKE, TmpDir, emit, timed
+
+_BLOCK = (8, 8, 8) if SMOKE else (16, 16, 16)
+_NPROCS = 8 if SMOKE else 48
+
+
+# -- seed reference (pre-vectorization implementation, for the ratio) -------
+
+def _seed_axis_cuts(blocks, box, axis):
+    bounds = set()
+    for b in blocks:
+        bounds.add(b.lo[axis])
+        bounds.add(b.hi[axis])
+    cand = sorted(c for c in bounds if box.lo[axis] < c < box.hi[axis])
+    return [c for c in cand
+            if all(not (b.lo[axis] < c < b.hi[axis]) for b in blocks)]
+
+
+def _seed_occupancy(blocks, box, axis, edges):
+    nslabs = len(edges) - 1
+    u = np.zeros(nslabs)
+    slab_vol = np.zeros(nslabs)
+    other = 1
+    for d in range(box.ndim):
+        if d != axis:
+            other *= box.hi[d] - box.lo[d]
+    for i in range(nslabs):
+        lo, hi = edges[i], edges[i + 1]
+        slab_vol[i] = (hi - lo) * other
+        filled = 0
+        for b in blocks:
+            olo, ohi = max(b.lo[axis], lo), min(b.hi[axis], hi)
+            if olo < ohi:
+                filled += b.volume // (b.hi[axis] - b.lo[axis]) * (ohi - olo)
+        u[i] = filled / slab_vol[i] if slab_vol[i] else 0.0
+    return u
+
+
+def _seed_lap(u):
+    p = np.concatenate([u[:1], u, u[-1:]])
+    return p[2:] - 2 * p[1:-1] + p[:-2]
+
+
+def _seed_best_split(blocks, box, axis):
+    cuts = _seed_axis_cuts(blocks, box, axis)
+    if not cuts:
+        return None
+    edges = [box.lo[axis]] + cuts + [box.hi[axis]]
+    u = _seed_occupancy(blocks, box, axis, edges)
+    if len(u) < 2:
+        return None
+    lap = _seed_lap(u)
+    best = None
+    for i in range(len(lap) - 1):
+        if lap[i] == 0.0 and lap[i + 1] == 0.0:
+            continue
+        if lap[i] * lap[i + 1] <= 0.0:
+            score = abs(lap[i + 1] - lap[i])
+            if best is None or score > best[0]:
+                best = (score, edges[i + 1])
+    if best is None:
+        grad = np.abs(np.diff(u))
+        if grad.size and grad.max() > 0:
+            i = int(np.argmax(grad))
+            best = (float(grad[i]), edges[i + 1])
+        else:
+            best = (0.0, edges[len(edges) // 2])
+    return best
+
+
+def _seed_halve(blocks):
+    box = bounding_box(blocks)
+    axis = int(np.argmax(box.shape))
+    order = sorted(blocks, key=lambda b: (b.lo[axis] + b.hi[axis]))
+    half = len(order) // 2
+    return order[:half], order[half:]
+
+
+def _seed_cluster_blocks(blocks):
+    blocks = list(blocks)
+    if not blocks:
+        return []
+    out = []
+    queue = deque([(bounding_box(blocks), tuple(blocks))])
+    while queue:
+        box, members = queue.popleft()
+        if box.volume == total_volume(members):
+            out.append((box, members))
+            continue
+        best = None
+        for axis in range(box.ndim):
+            cand = _seed_best_split(members, box, axis)
+            if cand is None:
+                continue
+            score, cut = cand
+            if best is None or score > best[0]:
+                best = (score, axis, cut)
+        if best is None:
+            l, r = _seed_halve(members)
+        else:
+            _, axis, cut = best
+            l = [b for b in members if b.hi[axis] <= cut]
+            r = [b for b in members if b.lo[axis] >= cut]
+            if not l or not r:
+                l, r = _seed_halve(members)
+        for part in (l, r):
+            if part:
+                queue.append((bounding_box(part), tuple(part)))
+    return out
+
+
+def _canon_new(clusters):
+    return sorted((c.cuboid.lo, c.cuboid.hi,
+                   tuple(m.block_id for m in c.members)) for c in clusters)
+
+
+def _canon_seed(clusters):
+    return sorted((b.lo, b.hi, tuple(m.block_id for m in ms))
+                  for b, ms in clusters)
+
+
+def run(tmp: TmpDir) -> None:
+    blocks = uniform_grid_blocks(GLOBAL, _BLOCK)
+    lb = simulate_load_balance(blocks, num_procs=_NPROCS, seed=0)
+    per_owner = [[b for b in lb if b.owner == p] for p in range(_NPROCS)]
+    # one heavily fragmented owner set for the single-call workload
+    lb2 = simulate_load_balance(blocks, num_procs=4, rounds=6,
+                                exchange_frac=0.5, locality_bias=0.1, seed=1)
+    frag = [b for b in lb2 if b.owner == 0]
+
+    # outputs must be identical before any timing is trusted
+    assert _canon_new(cluster_blocks(frag)) == \
+        _canon_seed(_seed_cluster_blocks(frag))
+
+    _, s_new = timed(lambda: cluster_blocks(frag), repeats=5)
+    _, s_seed = timed(lambda: _seed_cluster_blocks(frag), repeats=5)
+    emit("clustering/single_call", s_new * 1e6,
+         f"n={len(frag)};grid={'x'.join(map(str, _BLOCK))};"
+         f"seed_us={s_seed * 1e6:.0f};speedup={s_seed / s_new:.1f}x")
+
+    _, s_new = timed(
+        lambda: [cluster_blocks(g) for g in per_owner if g], repeats=5)
+    _, s_seed = timed(
+        lambda: [_seed_cluster_blocks(g) for g in per_owner if g], repeats=5)
+    emit("clustering/per_owner", s_new * 1e6,
+         f"blocks={len(blocks)};procs={_NPROCS};"
+         f"seed_us={s_seed * 1e6:.0f};speedup={s_seed / s_new:.1f}x")
+
+    _, s_many = timed(lambda: cluster_blocks_many(per_owner), repeats=5)
+    emit("clustering/batched_many", s_many * 1e6,
+         f"blocks={len(blocks)};procs={_NPROCS};"
+         f"seed_us={s_seed * 1e6:.0f};speedup={s_seed / s_many:.1f}x")

@@ -37,4 +37,7 @@ def run(tmp: TmpDir, readers=(1, 4, 16)) -> None:
                 emit(f"fig7_read/{pattern}/{strat}/r{r}", st.seconds * 1e6,
                      f"best={'x'.join(map(str, scheme))};"
                      f"GBps={st.bytes_read / max(st.seconds, 1e-9) / 1e9:.2f};"
-                     f"runs={st.runs};chunks={st.chunks_touched}")
+                     f"runs={st.runs};chunks={st.chunks_touched};"
+                     f"groups={st.groups};"
+                     f"probe_us={st.probe_seconds * 1e6:.0f};"
+                     f"plan_us={st.plan_seconds * 1e6:.0f}")

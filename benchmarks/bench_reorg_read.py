@@ -1,8 +1,11 @@
-"""Fig. 15 — read performance after full data layout reorganization.
+"""Fig. 15 — read performance after full data layout reorganization, plus
+the index-lookup/planning overhead of the indexed read path (ISSUE 1).
 
 Whole-variable reads vs reader count: the reorganized (regular 64-chunk)
 layout wins at low reader counts and degrades past 64 readers (chunk
-contention) — the paper's crossover.
+contention) — the paper's crossover.  The overhead section times spatial-
+index probe + extent planning against the seed's brute-force linear scan on
+a dataset with >= 1024 stored chunks.
 """
 
 from __future__ import annotations
@@ -11,9 +14,52 @@ import numpy as np
 
 from repro.core import plan_layout
 from repro.core.blocks import Block
-from repro.io import Dataset, write_variable
+from repro.core.read_patterns import PATTERNS, pattern_region
+from repro.io import Dataset, build_read_plan, linear_candidates, \
+    write_variable
 
-from .common import GLOBAL, NPROCS, TmpDir, build_world, emit, timed
+from .common import GLOBAL, NPROCS, SMOKE, TmpDir, build_world, emit, timed
+
+
+def _index_overhead(tmp: TmpDir) -> None:
+    """>=1024-chunk dataset: indexed probe+plan vs linear-scan baseline."""
+    block = (16, 16, 16) if not SMOKE else (8, 8, 8)
+    blocks, data = build_world(seed=7, block_shape=block)   # 4096/512 chunks
+    d = tmp.sub("rg_overhead")
+    plan = plan_layout("chunked", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    write_variable(d, "B", np.float32, plan, data)
+    ds = Dataset(d)
+    rows = ds.index.var_rows("B")
+    regions = [pattern_region(p, GLOBAL) for p in PATTERNS]
+
+    def probe_plan_indexed():
+        for r in regions:
+            build_read_plan(ds.index, "B", r)
+
+    def probe_linear():
+        # vectorized linear scan in place of the spatial probe
+        for r in regions:
+            cand = linear_candidates(rows, r)
+            build_read_plan(ds.index, "B", r, candidates=cand)
+
+    def scan_python():
+        # the literal seed loop: per-record Block intersection in Python
+        for r in regions:
+            hits = 0
+            for rec in ds.index.chunks_of("B"):
+                if r.intersect(rec.block) is not None:
+                    hits += 1
+
+    _, s_idx = timed(probe_plan_indexed, repeats=5)
+    _, s_lin = timed(probe_linear, repeats=5)
+    _, s_py = timed(scan_python, repeats=3)
+    emit("fig15_reorg/index_overhead/indexed", s_idx * 1e6,
+         f"chunks={rows.n};patterns={len(regions)}")
+    emit("fig15_reorg/index_overhead/linear_numpy", s_lin * 1e6,
+         f"speedup={s_lin / max(s_idx, 1e-12):.1f}x")
+    emit("fig15_reorg/index_overhead/linear_python_seed", s_py * 1e6,
+         f"speedup={s_py / max(s_idx, 1e-12):.1f}x")
 
 
 def run(tmp: TmpDir) -> None:
@@ -28,11 +74,15 @@ def run(tmp: TmpDir) -> None:
                            num_stagers=2)
         write_variable(d, "B", np.float32, plan, data)
         layouts[strat] = Dataset(d)
-    for readers in (1, 2, 8, 16, 64, 128):
+    readers_sweep = (1, 4, 16) if SMOKE else (1, 2, 8, 16, 64, 128)
+    for readers in readers_sweep:
         for strat, ds in layouts.items():
             (scheme, st), _ = timed(ds.read_pattern, "B", "whole_domain",
                                     readers)
             emit(f"fig15_reorg/{strat}/r{readers}", st.seconds * 1e6,
                  f"best={'x'.join(map(str, scheme))};"
                  f"GBps={st.bytes_read / max(st.seconds, 1e-9) / 1e9:.2f};"
-                 f"chunks={st.chunks_touched}")
+                 f"chunks={st.chunks_touched};runs={st.runs};"
+                 f"probe_us={st.probe_seconds * 1e6:.0f};"
+                 f"plan_us={st.plan_seconds * 1e6:.0f}")
+    _index_overhead(tmp)

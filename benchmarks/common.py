@@ -16,11 +16,19 @@ import numpy as np
 from repro.core import (plan_layout, simulate_load_balance,
                         uniform_grid_blocks)
 
-#: container-scale stand-in for the paper's 2048x4096x4096 variable
-GLOBAL = (256, 256, 256)          # 64 MB f32
-BLOCK = (32, 32, 64)              # 512 blocks ≈ dozens per process
-NPROCS = 48                       # "6 ranks/node x 8 nodes"
-PPN = 6
+#: container-scale stand-in for the paper's 2048x4096x4096 variable;
+#: BENCH_SMOKE=1 shrinks everything so the whole run fits a CI smoke budget
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+if SMOKE:
+    GLOBAL = (64, 64, 64)         # 1 MB f32
+    BLOCK = (16, 16, 16)
+    NPROCS = 8
+    PPN = 4
+else:
+    GLOBAL = (256, 256, 256)      # 64 MB f32
+    BLOCK = (32, 32, 64)          # 512 blocks ≈ dozens per process
+    NPROCS = 48                   # "6 ranks/node x 8 nodes"
+    PPN = 6
 
 _ROWS = []
 

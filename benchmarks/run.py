@@ -11,10 +11,10 @@ import os
 import sys
 import traceback
 
-from . import (bench_checkpoint, bench_cost_model, bench_end_to_end,
-               bench_merging, bench_read_decomposition, bench_read_patterns,
-               bench_reorg_read, bench_staging, bench_write_layouts,
-               roofline)
+from . import (bench_checkpoint, bench_clustering, bench_cost_model,
+               bench_end_to_end, bench_merging, bench_read_decomposition,
+               bench_read_patterns, bench_reorg_read, bench_staging,
+               bench_write_layouts, roofline)
 from .common import TmpDir
 
 SECTIONS = [
@@ -22,6 +22,7 @@ SECTIONS = [
     ("fig5_read_decomposition", bench_read_decomposition.run),
     ("fig7_read_patterns", bench_read_patterns.run),
     ("fig10_sec43_merging", bench_merging.run),
+    ("sec42_clustering", bench_clustering.run),
     ("fig11_12_end_to_end", bench_end_to_end.run),
     ("fig14_staging", bench_staging.run),
     ("tab2_sec52_cost_model", bench_cost_model.run),

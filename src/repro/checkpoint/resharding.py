@@ -15,6 +15,7 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from ..core.blocks import Block
+from ..io.planner import build_read_plan
 from ..io.reader import Dataset
 
 __all__ = ["ReshardPlan", "plan_reshard", "reshard_cost_report"]
@@ -32,22 +33,20 @@ class ReshardPlan:
 
 def plan_reshard(ds: Dataset, var: str,
                  target_blocks: Sequence[Block]) -> ReshardPlan:
-    dtype = ds.index.var_dtype(var)
-    chunks = ds.index.chunks_of(var)
+    """Each target shard is one indexed read plan — the spatial index visits
+    only intersecting chunks, and ``runs`` comes from the coalesced plans
+    rather than a per-pair analytic formula."""
     touched = set()
     runs = 0
     needed = 0
     whole = 0
     for t in target_blocks:
-        for rec in chunks:
-            inter = t.intersect(rec.block)
-            if inter is None:
-                continue
-            touched.add((rec.subfile, rec.offset))
-            needed += inter.volume * dtype.itemsize
-            whole += rec.nbytes
-            from ..io.reader import _contiguous_runs
-            runs += _contiguous_runs(inter.shape, rec.block.shape)
+        plan = build_read_plan(ds.index, var, t)
+        touched.update(zip(plan.subfiles.tolist(),
+                           plan.extent_offsets.tolist()))
+        runs += plan.runs
+        needed += plan.bytes_needed
+        whole += int(plan.extent_nbytes.sum())
     return ReshardPlan(var=var, targets=list(target_blocks),
                        chunks_touched=len(touched), runs=runs, bytes=needed,
                        amplification=whole / max(needed, 1))

@@ -1,0 +1,48 @@
+"""jax version-compat accessors.
+
+The public location and signature of ``shard_map`` (and mesh axis types —
+see :func:`repro.launch.mesh.make_mesh_compat`) moved across jax releases:
+``jax.experimental.shard_map.shard_map(auto=..., check_rep=...)`` became
+``jax.shard_map(axis_names=..., check_vma=...)``.  Resolve and translate
+once here so the rest of the codebase is version-agnostic.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+__all__ = ["shard_map"]
+
+if hasattr(jax, "shard_map"):
+    _raw_shard_map = jax.shard_map
+else:                                     # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map as _raw_shard_map
+
+_PARAMS = inspect.signature(_raw_shard_map).parameters
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=None, **kwargs):
+    """``shard_map`` with new-style kwargs, translated for the installed jax.
+
+    ``axis_names`` names the *manual* axes; older releases express the same
+    thing as ``auto`` (its complement over the mesh axes).  ``check_vma``
+    was called ``check_rep``.
+    """
+    kwargs.update(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if axis_names is not None:
+        manual = frozenset(axis_names)
+        if "axis_names" in _PARAMS:
+            kwargs["axis_names"] = manual
+        elif "auto" in _PARAMS and manual:
+            auto = frozenset(mesh.axis_names) - manual
+            if auto:
+                kwargs["auto"] = auto
+    if check_vma is not None:
+        if "check_vma" in _PARAMS:
+            kwargs["check_vma"] = check_vma
+        elif "check_rep" in _PARAMS:
+            kwargs["check_rep"] = check_vma
+    return _raw_shard_map(f, **kwargs)

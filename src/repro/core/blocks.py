@@ -18,6 +18,7 @@ import numpy as np
 
 __all__ = [
     "Block",
+    "fast_block",
     "bounding_box",
     "total_volume",
     "blocks_disjoint",
@@ -97,6 +98,21 @@ class Block:
 # ---------------------------------------------------------------------------
 # set-level helpers
 # ---------------------------------------------------------------------------
+
+def fast_block(lo: tuple, hi: tuple, owner: int = -1,
+               block_id: int = -1) -> Block:
+    """Construct a Block skipping ``__post_init__`` validation.
+
+    For hot paths (cluster emission) where ``lo < hi`` holds by
+    construction; callers are responsible for the invariant.
+    """
+    b = object.__new__(Block)
+    object.__setattr__(b, "lo", lo)
+    object.__setattr__(b, "hi", hi)
+    object.__setattr__(b, "owner", owner)
+    object.__setattr__(b, "block_id", block_id)
+    return b
+
 
 def bounding_box(blocks: Iterable[Block]) -> Block:
     blocks = list(blocks)

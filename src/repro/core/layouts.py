@@ -20,7 +20,7 @@ import dataclasses
 from typing import Sequence
 
 from .blocks import Block, bounding_box, regular_decomposition
-from .clustering import cluster_blocks
+from .clustering import cluster_blocks_many
 
 __all__ = ["STRATEGIES", "ChunkPlan", "LayoutPlan", "plan_layout",
            "node_of", "DEFAULT_REORG_SCHEME"]
@@ -70,9 +70,12 @@ class LayoutPlan:
 
 def _merged_chunks(blocks_by_group: dict, subfile_of_group,
                    max_clusters: int | None) -> list:
+    keys = sorted(blocks_by_group)
+    clustered = cluster_blocks_many([blocks_by_group[g] for g in keys],
+                                    max_clusters=max_clusters)
     chunks = []
-    for g, blks in sorted(blocks_by_group.items()):
-        for cl in cluster_blocks(blks, max_clusters=max_clusters):
+    for g, clusters in zip(keys, clustered):
+        for cl in clusters:
             chunks.append(ChunkPlan(chunk=cl.cuboid, sources=cl.members,
                                     writer=g, subfile=subfile_of_group(g)))
     return chunks

@@ -1,11 +1,16 @@
-"""I/O substrate: log-structured container, parallel writer/reader, staging."""
+"""I/O substrate: log-structured container, spatial chunk index, read
+planner, parallel writer/reader, staging."""
 
 from .aggregation import gather_to_nodes
-from .format import ChunkRecord, DatasetIndex, GPFS_BLOCK
+from .format import ChunkRecord, DatasetIndex, GPFS_BLOCK, VarRows
+from .planner import ReadPlan, build_read_plan, linear_candidates
 from .reader import Dataset, ReadStats
+from .spatial import SpatialChunkIndex
 from .staging import StageResult, StagingExecutor
 from .writer import WriteStats, rewrite_dataset, write_variable
 
-__all__ = ["ChunkRecord", "DatasetIndex", "GPFS_BLOCK", "Dataset",
-           "ReadStats", "StageResult", "StagingExecutor", "WriteStats",
-           "rewrite_dataset", "write_variable", "gather_to_nodes"]
+__all__ = ["ChunkRecord", "DatasetIndex", "GPFS_BLOCK", "VarRows",
+           "ReadPlan", "build_read_plan", "linear_candidates",
+           "SpatialChunkIndex", "Dataset", "ReadStats", "StageResult",
+           "StagingExecutor", "WriteStats", "rewrite_dataset",
+           "write_variable", "gather_to_nodes"]

@@ -4,7 +4,9 @@ A *dataset* is a directory holding:
   * one or more ``data_<k>.bin`` subfiles — extents appended log-style, the
     chunk's position in the global array is NOT encoded in file order;
   * ``index.json`` — the metadata the paper notes ADIOS2 must keep: for every
-    chunk, its global cuboid ``[lo, hi)``, its subfile, byte offset and size.
+    chunk, its global cuboid ``[lo, hi)``, its subfile, byte offset and size,
+    plus (format version 2) a per-variable spatial chunk index so readers
+    locate intersecting chunks without scanning the whole record list.
 
 Optional 16 MiB extent alignment mirrors GPFS's internal block size on Summit
 (§3.2: "GPFS internally splits big data chunks into 16MB blocks").
@@ -20,12 +22,14 @@ from typing import Sequence
 import numpy as np
 
 from ..core.blocks import Block
+from .spatial import SpatialChunkIndex
 
-__all__ = ["ChunkRecord", "DatasetIndex", "GPFS_BLOCK", "subfile_name",
-           "align_up"]
+__all__ = ["ChunkRecord", "DatasetIndex", "VarRows", "GPFS_BLOCK",
+           "subfile_name", "align_up"]
 
 GPFS_BLOCK = 16 * 1024 * 1024
 INDEX_NAME = "index.json"
+INDEX_VERSION = 2
 
 
 def subfile_name(k: int) -> str:
@@ -52,9 +56,11 @@ class ChunkRecord:
         return Block(tuple(self.lo), tuple(self.hi))
 
     def to_json(self) -> dict:
-        return {"var": self.var, "lo": list(self.lo), "hi": list(self.hi),
-                "subfile": self.subfile, "offset": self.offset,
-                "nbytes": self.nbytes}
+        return {"var": self.var,
+                "lo": [int(v) for v in self.lo],
+                "hi": [int(v) for v in self.hi],
+                "subfile": int(self.subfile), "offset": int(self.offset),
+                "nbytes": int(self.nbytes)}
 
     @staticmethod
     def from_json(d: dict) -> "ChunkRecord":
@@ -63,12 +69,42 @@ class ChunkRecord:
                            nbytes=d["nbytes"])
 
 
+@dataclasses.dataclass(frozen=True)
+class VarRows:
+    """Columnar view of one variable's chunk records (cached per variable).
+
+    ``ids[i]`` is the record's position in ``DatasetIndex.chunks``; the other
+    arrays are row-aligned with ``ids``.
+    """
+
+    ids: np.ndarray          # (n,)  positions into DatasetIndex.chunks
+    los: np.ndarray          # (n,d) chunk low corners
+    his: np.ndarray          # (n,d) chunk high corners
+    subfiles: np.ndarray     # (n,)
+    offsets: np.ndarray      # (n,)  byte offset of each extent
+    nbytes: np.ndarray       # (n,)  extent sizes
+
+    @property
+    def n(self) -> int:
+        return len(self.ids)
+
+
 @dataclasses.dataclass
 class DatasetIndex:
     variables: dict = dataclasses.field(default_factory=dict)
+    #: append-only — row/spatial caches are invalidated by record COUNT, so
+    #: records must never be replaced or reordered in place
     chunks: list = dataclasses.field(default_factory=list)
     num_subfiles: int = 0
     attrs: dict = dataclasses.field(default_factory=dict)
+    #: persisted spatial-index payloads per variable (format v2)
+    spatial: dict = dataclasses.field(default_factory=dict, repr=False)
+    _rows: dict = dataclasses.field(default_factory=dict, repr=False,
+                                    compare=False)
+    _spatial_built: dict = dataclasses.field(default_factory=dict, repr=False,
+                                             compare=False)
+    _cache_token: int = dataclasses.field(default=-1, repr=False,
+                                          compare=False)
 
     def add_variable(self, name: str, shape: Sequence[int], dtype,
                      strategy: str = "") -> None:
@@ -85,14 +121,80 @@ class DatasetIndex:
     def chunks_of(self, name: str) -> list:
         return [c for c in self.chunks if c.var == name]
 
+    # -- spatial lookup ------------------------------------------------------
+    def _check_cache(self) -> None:
+        if self._cache_token != len(self.chunks):
+            self._rows.clear()
+            self._spatial_built.clear()
+            self._cache_token = len(self.chunks)
+
+    def var_rows(self, name: str) -> VarRows:
+        """Columnar arrays for one variable's records (built once, cached).
+
+        All variables' rows are grouped in a single pass over the record
+        list, so repeated saves of many-variable datasets (checkpoints) stay
+        O(n) instead of O(vars * n).
+        """
+        self._check_cache()
+        if name not in self._rows:
+            by_var: dict = {v: [] for v in self.variables}
+            for i, c in enumerate(self.chunks):
+                by_var.setdefault(c.var, []).append(i)
+            for var, id_list in by_var.items():
+                ids = np.asarray(id_list, dtype=np.int64)
+                ndim = len(self.var_shape(var)) if var in self.variables \
+                    else (len(self.chunks[id_list[0]].lo) if id_list else 0)
+                los = np.empty((len(ids), ndim), dtype=np.int64)
+                his = np.empty((len(ids), ndim), dtype=np.int64)
+                subfiles = np.empty(len(ids), dtype=np.int64)
+                offsets = np.empty(len(ids), dtype=np.int64)
+                nbytes = np.empty(len(ids), dtype=np.int64)
+                for r, i in enumerate(id_list):
+                    c = self.chunks[i]
+                    los[r] = c.lo
+                    his[r] = c.hi
+                    subfiles[r] = c.subfile
+                    offsets[r] = c.offset
+                    nbytes[r] = c.nbytes
+                self._rows[var] = VarRows(ids=ids, los=los, his=his,
+                                          subfiles=subfiles, offsets=offsets,
+                                          nbytes=nbytes)
+        return self._rows[name]
+
+    def spatial_index(self, name: str) -> SpatialChunkIndex:
+        """The variable's spatial chunk index — loaded from the persisted v2
+        payload when it matches, else (re)built from the records."""
+        self._check_cache()
+        sp = self._spatial_built.get(name)
+        if sp is None:
+            rows = self.var_rows(name)
+            payload = self.spatial.get(name)
+            if payload is not None and payload.get("n") == rows.n:
+                sp = SpatialChunkIndex.from_json(payload, rows.los, rows.his)
+            else:
+                sp = SpatialChunkIndex(rows.los, rows.his)
+            self._spatial_built[name] = sp
+        return sp
+
     # -- persistence --------------------------------------------------------
     def save(self, dirpath: str) -> None:
+        # spatial_index() reuses a persisted payload whenever the variable's
+        # record count is unchanged (records are append-only), so repeated
+        # saves only rebuild the variables that grew
+        new_spatial = {}
+        for name in self.variables:
+            sp = self.spatial_index(name)
+            payload = sp.to_json()
+            payload["n"] = sp.n
+            new_spatial[name] = payload
+        self.spatial = new_spatial
         payload = {
-            "version": 1,
+            "version": INDEX_VERSION,
             "variables": self.variables,
             "num_subfiles": self.num_subfiles,
             "attrs": self.attrs,
             "chunks": [c.to_json() for c in self.chunks],
+            "spatial": self.spatial,
         }
         tmp = os.path.join(dirpath, INDEX_NAME + ".tmp")
         with open(tmp, "w") as f:
@@ -105,6 +207,7 @@ class DatasetIndex:
             payload = json.load(f)
         idx = DatasetIndex(variables=payload["variables"],
                            num_subfiles=payload["num_subfiles"],
-                           attrs=payload.get("attrs", {}))
+                           attrs=payload.get("attrs", {}),
+                           spatial=payload.get("spatial", {}))
         idx.chunks = [ChunkRecord.from_json(c) for c in payload["chunks"]]
         return idx

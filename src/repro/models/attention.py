@@ -14,6 +14,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from ..compat import shard_map
 from ..distributed.sharding import shard
 from .layers import rope, softcap
 from .params import ParamDef
@@ -179,7 +180,7 @@ def _flash_sharded(q, k, v, scale, causal, window, softcap, block):
                 c = jax.lax.dynamic_slice_in_dim(c, start, kvn, axis=1)
             return call(a, b, c)
 
-    return jax.shard_map(body, mesh=ctx.mesh,
+    return shard_map(body, mesh=ctx.mesh,
                          in_specs=(qspec, kspec, kspec),
                          out_specs=qspec,
                          axis_names=manual, check_vma=False)(q, k, v)

@@ -103,8 +103,8 @@ def test_flash_falls_back_on_indivisible_length():
 
 
 def test_moe_local_dispatch_matches_gather():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
     cfg = get_smoke_config("deepseek-moe-16b")
     cfg = dataclasses.replace(
         cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))

@@ -1,0 +1,227 @@
+"""Property tests for the spatial chunk index and the read planner (ISSUE 1).
+
+The indexed read path must be observationally identical to the seed's
+brute-force linear scan: byte-identical arrays, identical chunks_touched,
+across every layout strategy, random regions (including empty intersections)
+and both execution engines; the persisted v2 index must round-trip.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import STRATEGIES, plan_layout, simulate_load_balance, \
+    uniform_grid_blocks
+from repro.core.blocks import Block
+from repro.io import (Dataset, SpatialChunkIndex, build_read_plan,
+                      linear_candidates, write_variable)
+from repro.io.format import DatasetIndex
+
+GLOBAL = (64, 64, 64)
+BLOCK = (16, 16, 16)
+NPROCS = 8
+
+
+@pytest.fixture(scope="module")
+def world():
+    rng = np.random.default_rng(3)
+    blocks = simulate_load_balance(uniform_grid_blocks(GLOBAL, BLOCK),
+                                   num_procs=NPROCS, seed=7)
+    data = {b.block_id: rng.standard_normal(b.shape).astype(np.float32)
+            for b in blocks}
+    ref = np.zeros(GLOBAL, np.float32)
+    for b in blocks:
+        ref[b.slices()] = data[b.block_id]
+    return blocks, data, ref
+
+
+def _random_regions(rng, n=12):
+    regions = []
+    for _ in range(n):
+        lo = tuple(int(rng.integers(0, g - 1)) for g in GLOBAL)
+        hi = tuple(int(rng.integers(l + 1, g + 1))
+                   for l, g in zip(lo, GLOBAL))
+        regions.append(Block(lo, hi))
+    # degenerate slivers and exact chunk-aligned regions
+    regions.append(Block((0, 0, 0), (1, 1, 1)))
+    regions.append(Block((16, 16, 16), (32, 32, 32)))
+    regions.append(Block((63, 63, 63), (64, 64, 64)))
+    return regions
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_indexed_reads_match_linear_oracle(tmp_path, world, strategy):
+    blocks, data, ref = world
+    d = str(tmp_path / strategy)
+    plan = plan_layout(strategy, blocks, num_procs=NPROCS,
+                       procs_per_node=4, global_shape=GLOBAL,
+                       reorg_scheme=(2, 2, 2), num_stagers=2)
+    wdata = data
+    if strategy == "merged_node":
+        from repro.io import gather_to_nodes
+        _, wdata, _ = gather_to_nodes(blocks, data, 4)
+    write_variable(d, "B", np.float32, plan, wdata)
+    ds = Dataset(d)
+    rows = ds.index.var_rows("B")
+    sp = ds.index.spatial_index("B")
+    rng = np.random.default_rng(11)
+    for region in _random_regions(rng):
+        oracle = linear_candidates(rows, region)
+        got = sp.query(region.lo, region.hi)
+        assert np.array_equal(got, oracle)
+        arr, st = ds.read("B", region)
+        np.testing.assert_array_equal(arr, ref[region.slices()])
+        assert st.chunks_touched == len(oracle)
+        arr2, st2 = ds.read("B", region, engine="pread")
+        np.testing.assert_array_equal(arr2, ref[region.slices()])
+        assert st2.chunks_touched == st.chunks_touched
+        assert st2.runs == st.runs
+
+
+def test_empty_intersection_region(tmp_path, world):
+    blocks, data, ref = world
+    d = str(tmp_path / "empty")
+    plan = plan_layout("chunked", blocks, num_procs=NPROCS,
+                       global_shape=(128, 64, 64))
+    write_variable(d, "B", np.float32, plan, data)
+    ds = Dataset(d)
+    region = Block((100, 0, 0), (120, 8, 8))    # past every stored chunk
+    arr, st = ds.read("B", region)
+    assert st.chunks_touched == 0 and st.runs == 0 and st.bytes_read == 0
+    plan_ = ds.plan_read("B", region)
+    assert plan_.num_chunks == 0 and plan_.num_groups == 0
+
+
+def test_plan_structure_invariants(tmp_path, world):
+    blocks, data, ref = world
+    d = str(tmp_path / "inv")
+    plan = plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    write_variable(d, "B", np.float32, plan, data)
+    ds = Dataset(d)
+    rng = np.random.default_rng(5)
+    for region in _random_regions(rng, n=6):
+        rp = ds.plan_read("B", region)
+        if rp.num_chunks == 0:
+            continue
+        # execution order: sorted by (subfile, offset)
+        key = rp.subfiles * (1 << 48) + rp.file_lo
+        assert np.all(np.diff(key) > 0)
+        # groups cover contiguouly ascending spans; runs never exceed the
+        # per-chunk analytic sum and never undercut the group count
+        assert rp.runs <= int(rp.chunk_runs.sum())
+        assert rp.runs >= rp.num_groups
+        inter_vol = sum(
+            region.intersect(ds.index.chunks[i].block).volume
+            for i in rp.rec_ids)
+        assert rp.bytes_needed == inter_vol * 4
+        gb = rp.group_bounds
+        assert gb[0] == 0 and gb[-1] == rp.num_chunks
+        for g in range(rp.num_groups):
+            s, e = gb[g], gb[g + 1]
+            assert np.all(rp.subfiles[s:e] == rp.subfiles[s])
+            assert np.all(rp.file_lo[s + 1:e] >= rp.file_hi[s:e - 1])
+
+
+def test_candidate_narrowing_matches_full_probe(tmp_path, world):
+    blocks, data, ref = world
+    d = str(tmp_path / "narrow")
+    plan = plan_layout("chunked", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    write_variable(d, "B", np.float32, plan, data)
+    ds = Dataset(d)
+    region = Block((4, 4, 4), (60, 60, 60))
+    sp = ds.index.spatial_index("B")
+    cand = sp.query(region.lo, region.hi)
+    sub = Block((10, 10, 10), (30, 50, 20))
+    direct = build_read_plan(ds.index, "B", sub)
+    narrowed = build_read_plan(ds.index, "B", sub, candidates=cand)
+    assert np.array_equal(direct.rec_ids, narrowed.rec_ids)
+    st = ds.read_decomposed("B", region, (2, 2, 1))
+    assert st.bytes_read == region.volume * 4
+
+
+def test_spatial_index_persistence_roundtrip(tmp_path, world):
+    blocks, data, ref = world
+    d = str(tmp_path / "persist")
+    plan = plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    write_variable(d, "B", np.float32, plan, data)
+    with open(os.path.join(d, "index.json")) as f:
+        payload = json.load(f)
+    assert payload["version"] == 2
+    assert "B" in payload["spatial"]
+    ds = Dataset(d)
+    # loaded (persisted) index answers identically to a fresh rebuild
+    rows = ds.index.var_rows("B")
+    fresh = SpatialChunkIndex(rows.los, rows.his)
+    rng = np.random.default_rng(2)
+    for region in _random_regions(rng, n=6):
+        a = ds.index.spatial_index("B").query(region.lo, region.hi)
+        b = fresh.query(region.lo, region.hi)
+        assert np.array_equal(a, b)
+
+
+def test_v1_index_without_spatial_payload_still_reads(tmp_path, world):
+    blocks, data, ref = world
+    d = str(tmp_path / "v1")
+    plan = plan_layout("chunked", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    write_variable(d, "B", np.float32, plan, data)
+    path = os.path.join(d, "index.json")
+    with open(path) as f:
+        payload = json.load(f)
+    payload.pop("spatial")
+    payload["version"] = 1
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    ds = Dataset(d)
+    arr, st = ds.read("B", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+
+
+def test_appended_variable_invalidates_cache(tmp_path, world):
+    blocks, data, ref = world
+    d = str(tmp_path / "append")
+    plan = plan_layout("chunked", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    idx, _ = write_variable(d, "B", np.float32, plan, data)
+    _ = idx.spatial_index("B")           # warm the cache
+    data2 = {k: v * 3 for k, v in data.items()}
+    write_variable(d, "E", np.float32, plan, data2, index=idx)
+    # the same index object must see the appended records
+    sub = Block((3, 3, 3), (40, 41, 42))
+    got = idx.spatial_index("E").query(sub.lo, sub.hi)
+    oracle = linear_candidates(idx.var_rows("E"), sub)
+    assert np.array_equal(got, oracle)
+    ds = Dataset(d)
+    arr, _ = ds.read("E", sub)
+    np.testing.assert_array_equal(arr, ref[sub.slices()] * 3)
+
+
+def test_interval_fallback_for_irregular_chunks():
+    """Wildly mixed chunk sizes force the sorted-interval organization; the
+    query answers must still match the oracle."""
+    rng = np.random.default_rng(9)
+    los, his = [], []
+    x = 0
+    for _ in range(300):
+        w = int(rng.integers(1, 200))
+        y = int(rng.integers(0, 50))
+        h = int(rng.integers(1, 300))
+        los.append((x, y))
+        his.append((x + w, y + h))
+        x += max(1, w // 3)
+    los = np.array(los)
+    his = np.array(his)
+    sp = SpatialChunkIndex(los, his)
+    for _ in range(30):
+        qlo = (int(rng.integers(0, x)), int(rng.integers(0, 300)))
+        qhi = (qlo[0] + int(rng.integers(1, 200)),
+               qlo[1] + int(rng.integers(1, 200)))
+        got = sp.query(qlo, qhi)
+        oracle = np.flatnonzero(np.all(los < qhi, axis=1)
+                                & np.all(his > qlo, axis=1))
+        assert np.array_equal(got, oracle)
