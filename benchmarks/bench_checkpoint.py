@@ -17,7 +17,7 @@ from repro.configs import get_smoke_config
 from repro.core.blocks import regular_decomposition, shard_grid_blocks
 from repro.models import LM
 
-from .common import TmpDir, emit, timed
+from .common import ENGINE, TmpDir, emit, timed
 
 HOSTS = 8
 
@@ -50,7 +50,7 @@ def run(tmp: TmpDir) -> None:
     for strat, scheme in (("subfiled_fpp", None), ("merged_process", None),
                           ("reorganized", (2, 2))):
         mgr = CheckpointManager(tmp.sub(f"ck_{strat}"), strategy=strat,
-                                reorg_scheme=scheme)
+                                reorg_scheme=scheme, engine=ENGINE)
         stats, secs = timed(mgr.save, 1, params, block_map=bm)
         (restored, rstats), rsecs = timed(mgr.restore, 1, params)
         emit(f"ckpt/{strat}/save", secs * 1e6,

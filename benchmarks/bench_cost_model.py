@@ -17,9 +17,10 @@ from repro.core.cost_model import (PAPER_TIMINGS, StagingTimings,
                                    tc_lower_bound_blocking,
                                    tc_upper_bound_nonblocking)
 from repro.core.reorg import decide
-from repro.io import StagingExecutor, write_variable
+from repro.io import StagingExecutor
 
-from .common import GLOBAL, NPROCS, TmpDir, build_world, emit, timed
+from .common import (GLOBAL, NPROCS, TmpDir, build_world, emit, timed,
+                     write_dataset)
 
 
 def run(tmp: TmpDir) -> None:
@@ -43,7 +44,7 @@ def run(tmp: TmpDir) -> None:
     nbytes = sum(v.nbytes for v in data.values())
     plan_w = plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
                          global_shape=GLOBAL)
-    (_, ws), _ = timed(write_variable, tmp.sub("cm_direct"), "B", np.float32,
+    (_, ws), _ = timed(write_dataset, tmp.sub("cm_direct"), "B",
                        plan_w, data)
     plan_r = plan_layout("reorganized", blocks, num_procs=NPROCS,
                          global_shape=GLOBAL, reorg_scheme=(4, 4, 4),

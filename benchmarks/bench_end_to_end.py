@@ -11,9 +11,10 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import merge_blocks, plan_layout
-from repro.io import Dataset, gather_to_nodes, write_variable
+from repro.io import Dataset, gather_to_nodes
 
-from .common import GLOBAL, NPROCS, PPN, TmpDir, build_world, emit, timed
+from .common import (ENGINE, GLOBAL, NPROCS, PPN, TmpDir, build_world,
+                     emit, timed, write_dataset)
 
 
 def run(tmp: TmpDir) -> None:
@@ -42,8 +43,8 @@ def run(tmp: TmpDir) -> None:
         plan = plan_layout(strat, blocks, num_procs=NPROCS,
                            procs_per_node=PPN, global_shape=GLOBAL)
         wdata = ndata if strat == "merged_node" else data
-        write_variable(d, "B", np.float32, plan, wdata)
-        ds[strat] = Dataset(d)
+        write_dataset(d, "B", plan, wdata)
+        ds[strat] = Dataset.open(d, engine=ENGINE)
 
     for pattern in ("whole_domain", "plane_yz", "sub_area"):
         for readers in (1, 2, 4):

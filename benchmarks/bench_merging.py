@@ -14,9 +14,10 @@ import numpy as np
 from repro.core import merge_blocks, plan_layout
 from repro.core.clustering import merged_block_counts
 from repro.core.layouts import node_of
-from repro.io import Dataset, gather_to_nodes, write_variable
+from repro.io import Dataset, gather_to_nodes
 
-from .common import GLOBAL, NPROCS, PPN, TmpDir, build_world, emit, timed
+from .common import (ENGINE, GLOBAL, NPROCS, PPN, TmpDir, build_world,
+                     emit, timed, write_dataset)
 
 
 def run(tmp: TmpDir) -> None:
@@ -72,8 +73,8 @@ def run(tmp: TmpDir) -> None:
         plan = plan_layout(strat, blocks, num_procs=NPROCS,
                            procs_per_node=PPN, global_shape=GLOBAL)
         wdata = ndata if strat == "merged_node" else data
-        write_variable(d, "B", np.float32, plan, wdata)
-        ds = Dataset(d)
+        write_dataset(d, "B", plan, wdata)
+        ds = Dataset.open(d, engine=ENGINE)
         for pattern in ("whole_domain", "plane_yz", "sub_area", "plane_xy"):
             (scheme, st), _ = timed(ds.read_pattern, "B", pattern, 4)
             emit(f"fig10_read/{pattern}/{strat}", st.seconds * 1e6,

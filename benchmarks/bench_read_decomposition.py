@@ -10,9 +10,10 @@ import numpy as np
 
 from repro.core import STRATEGIES, plan_layout
 from repro.core.blocks import Block
-from repro.io import Dataset, gather_to_nodes, write_variable
+from repro.io import Dataset, gather_to_nodes
 
-from .common import GLOBAL, NPROCS, PPN, TmpDir, build_world, emit, timed
+from .common import (ENGINE, GLOBAL, NPROCS, PPN, TmpDir, build_world,
+                     emit, timed, write_dataset)
 
 
 def run(tmp: TmpDir) -> None:
@@ -25,8 +26,8 @@ def run(tmp: TmpDir) -> None:
         wdata = data
         if strat == "merged_node":
             _, wdata, _ = gather_to_nodes(blocks, data, PPN)
-        write_variable(d, "B", np.float32, plan, wdata)
-        ds = Dataset(d)
+        write_dataset(d, "B", plan, wdata)
+        ds = Dataset.open(d, engine=ENGINE)
         for scheme in ((1, 1, 2), (1, 2, 1), (2, 1, 1)):
             st, secs = timed(ds.read_decomposed, "B", region, scheme,
                              repeats=2)

@@ -10,9 +10,10 @@ import numpy as np
 
 from repro.core import plan_layout
 from repro.core.read_patterns import PATTERNS
-from repro.io import Dataset, gather_to_nodes, write_variable
+from repro.io import Dataset, gather_to_nodes
 
-from .common import GLOBAL, NPROCS, PPN, TmpDir, build_world, emit, timed
+from .common import (ENGINE, GLOBAL, NPROCS, PPN, TmpDir, build_world,
+                     emit, timed, write_dataset)
 
 LAYOUTS = ("contiguous", "chunked", "subfiled_fpp", "subfiled_fpn",
            "merged_process", "merged_node")
@@ -28,8 +29,8 @@ def run(tmp: TmpDir, readers=(1, 4, 16)) -> None:
         wdata = data
         if strat == "merged_node":
             _, wdata, _ = gather_to_nodes(blocks, data, PPN)
-        write_variable(d, "B", np.float32, plan, wdata)
-        datasets[strat] = Dataset(d)
+        write_dataset(d, "B", plan, wdata)
+        datasets[strat] = Dataset.open(d, engine=ENGINE)
     for pattern in PATTERNS:
         for strat, ds in datasets.items():
             for r in readers:

@@ -5,6 +5,11 @@ Measured on the local FS: per-strategy write wall time + the rearrangement
 The paper's network-rearrangement penalty appears as ``inter_moved`` (the
 elements that would cross processes), reported in the derived column — on
 Summit that term is what kills the contiguous layout at scale.
+
+Writes go through the plan/engine API (``Dataset.plan_write`` +
+``write_planned``); set BENCH_ENGINE to sweep engines — CI runs this once
+per engine and compares the emitted extent/subfile/byte columns, which must
+not diverge.
 """
 
 from __future__ import annotations
@@ -13,9 +18,9 @@ import numpy as np
 
 from repro.core import STRATEGIES, plan_layout, simulate_load_balance, \
     uniform_grid_blocks
-from repro.io import gather_to_nodes, write_variable
+from repro.io import gather_to_nodes
 
-from .common import TmpDir, emit, timed
+from .common import ENGINE, TmpDir, emit, timed, write_dataset
 
 
 def run(tmp: TmpDir) -> None:
@@ -37,10 +42,10 @@ def run(tmp: TmpDir) -> None:
             gather_s = 0.0
             if strat == "merged_node":
                 _, wdata, gather_s = gather_to_nodes(blocks, data, 6)
-            (_, ws), secs = timed(write_variable, d, "B", np.float32, plan,
-                                  wdata)
+            (_, ws), secs = timed(write_dataset, d, "B", plan, wdata)
             emit(f"fig4_write/{strat}/p{nprocs}", secs * 1e6,
                  f"GBps={nbytes / ws.write_seconds / 1e9:.2f};"
                  f"assemble_s={ws.assemble_seconds + gather_s:.3f};"
                  f"chunks={plan.num_chunks};subfiles={ws.num_subfiles};"
+                 f"groups={ws.groups};engine={ENGINE};"
                  f"inter_moved_MB={plan.inter_process_moved * 4 / 1e6:.0f}")

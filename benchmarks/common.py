@@ -19,6 +19,10 @@ from repro.core import (plan_layout, simulate_load_balance,
 #: container-scale stand-in for the paper's 2048x4096x4096 variable;
 #: BENCH_SMOKE=1 shrinks everything so the whole run fits a CI smoke budget
 SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+
+#: execution engine every benchmark section runs through (CI runs the smoke
+#: suite once per engine and fails on result divergence)
+ENGINE = os.environ.get("BENCH_ENGINE", "memmap")
 if SMOKE:
     GLOBAL = (64, 64, 64)         # 1 MB f32
     BLOCK = (16, 16, 16)
@@ -52,6 +56,17 @@ def build_world(seed: int = 0, global_shape=GLOBAL, block_shape=BLOCK,
     data = {b.block_id: np.ascontiguousarray(
         rng.standard_normal(b.shape, dtype=np.float32)) for b in blocks}
     return blocks, data
+
+
+def write_dataset(d, name, plan, data, dtype=np.float32, align=None,
+                  engine=None):
+    """Write one variable through the plan/engine API (session per call).
+    Returns (DatasetIndex, WriteStats) like the old ``write_variable``."""
+    from repro.io import Dataset
+    ds = Dataset.create(d, engine=engine or ENGINE)
+    ws = ds.write_planned(ds.plan_write(name, plan, dtype, align=align), data)
+    ds.close()
+    return ds.index, ws
 
 
 def timed(fn, *args, repeats: int = 1, **kwargs):

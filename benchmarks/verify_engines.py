@@ -1,0 +1,102 @@
+"""Cross-engine divergence check (CI gate for the plan/engine split).
+
+Writes the same world once per engine, reads every dataset back through
+every engine, and compares SHA-256 digests of (a) the produced subfiles and
+(b) the assembled arrays.  Any engine-result divergence — write side or
+read side — exits nonzero, so the benchmark smoke matrix fails loudly
+instead of comparing subtly different datasets.
+
+Run: PYTHONPATH=src python -m benchmarks.verify_engines
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import sys
+
+import numpy as np
+
+from repro.core import plan_layout
+from repro.core.blocks import Block
+from repro.io import Dataset, ENGINES, GPFS_BLOCK
+
+from .common import TmpDir, build_world
+
+STRATEGIES = (("subfiled_fpp", None), ("reorganized", (4, 4, 4)))
+GLOBAL = (64, 64, 64)
+
+
+def _digest_dir(d: str) -> dict:
+    out = {}
+    for f in sorted(os.listdir(d)):
+        if not f.endswith(".bin"):
+            continue
+        h = hashlib.sha256()
+        with open(os.path.join(d, f), "rb") as fh:
+            while True:
+                blk = fh.read(1 << 22)
+                if not blk:
+                    break
+                h.update(blk)
+        out[f] = h.hexdigest()
+    return out
+
+
+def main() -> int:
+    tmp = TmpDir(prefix="repro_verify_engines_")
+    failures = []
+    try:
+        blocks, data = build_world(seed=13, global_shape=GLOBAL,
+                                   block_shape=(16, 16, 16), nprocs=8)
+        whole = Block((0, 0, 0), GLOBAL)
+        sub = Block((5, 9, 2), (61, 40, 63))
+        for strat, scheme in STRATEGIES:
+            for align in (None, GPFS_BLOCK):
+                plan = plan_layout(strat, blocks, num_procs=8,
+                                   global_shape=GLOBAL, reorg_scheme=scheme,
+                                   num_stagers=2)
+                file_digests = {}
+                read_digests = {}
+                for eng in sorted(ENGINES):
+                    d = tmp.sub(f"ve_{strat}_{align or 0}_{eng}")
+                    ds = Dataset.create(d, engine=eng)
+                    ds.write("B", plan, np.float32, data, align=align)
+                    file_digests[eng] = _digest_dir(d)
+                    for reng in sorted(ENGINES):
+                        arr, _ = ds.read("B", whole, engine=reng)
+                        arr2, _ = ds.read("B", sub, engine=reng)
+                        read_digests[(eng, reng)] = (
+                            hashlib.sha256(arr.tobytes()).hexdigest(),
+                            hashlib.sha256(arr2.tobytes()).hexdigest())
+                    ds.close()
+                ref_files = file_digests[sorted(ENGINES)[0]]
+                ref_reads = read_digests[(sorted(ENGINES)[0],
+                                          sorted(ENGINES)[0])]
+                for eng, dig in file_digests.items():
+                    if dig != ref_files:
+                        failures.append(
+                            f"write divergence: {strat}/align={align} "
+                            f"engine={eng}")
+                for key, dig in read_digests.items():
+                    if dig != ref_reads:
+                        failures.append(
+                            f"read divergence: {strat}/align={align} "
+                            f"write={key[0]} read={key[1]}")
+                tag = f"{strat}/align={'16M' if align else 'none'}"
+                print(f"verify_engines/{tag}: "
+                      f"{len(ENGINES)} writers x {len(ENGINES)} readers "
+                      f"{'DIVERGED' if failures else 'identical'}",
+                      flush=True)
+    finally:
+        tmp.cleanup()
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print("verify_engines: all engines byte-identical")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

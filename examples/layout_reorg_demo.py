@@ -18,7 +18,7 @@ from repro.core import (StagingTimings, plan_layout, simulate_load_balance,
                         uniform_grid_blocks)
 from repro.core.blocks import Block
 from repro.core.reorg import decide
-from repro.io import Dataset, StagingExecutor, rewrite_dataset, write_variable
+from repro.io import Dataset, StagingExecutor, reorganize
 
 GLOBAL = (128, 128, 128)
 N_OUTPUTS = 4
@@ -43,8 +43,11 @@ def main() -> None:
         data = {b.block_id: rng.standard_normal(b.shape).astype(np.float32)
                 for b in blocks}
         time.sleep(T_C)                                   # the simulation
-        _, ws = write_variable(os.path.join(tmp, f"direct_{step}"), "B",
-                               np.float32, direct_plan, data)
+        dds = Dataset.create(os.path.join(tmp, f"direct_{step}"),
+                             engine="pread")
+        ws = dds.write_planned(dds.plan_write("B", direct_plan, np.float32),
+                               data)
+        dds.close()
         t_w_direct.append(ws.total_seconds)
         stall = stager.submit(step, "B", np.float32, reorg_plan, data)
         print(f"step {step}: direct write {ws.total_seconds:.3f}s, "
@@ -54,8 +57,9 @@ def main() -> None:
 
     # -- post-hoc reorganization of the last output -------------------------
     t0 = time.perf_counter()
-    rewrite_dataset(os.path.join(tmp, f"direct_{N_OUTPUTS - 1}"),
-                    os.path.join(tmp, "posthoc"), "B", reorg_plan)
+    _, pds, _ = reorganize(os.path.join(tmp, f"direct_{N_OUTPUTS - 1}"),
+                           os.path.join(tmp, "posthoc"), "B", reorg_plan)
+    pds.close()
     posthoc_s = time.perf_counter() - t0
 
     t = StagingTimings(

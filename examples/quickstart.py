@@ -18,7 +18,7 @@ from repro.core import (PAPER_TIMINGS, merged_block_counts, plan_layout,
                         recommend, simulate_load_balance,
                         uniform_grid_blocks)
 from repro.core.blocks import Block
-from repro.io import Dataset, write_variable
+from repro.io import Dataset
 
 GLOBAL = (128, 128, 128)
 
@@ -43,8 +43,8 @@ def main() -> None:
         d = os.path.join(tmp, strat)
         plan = plan_layout(strat, blocks, num_procs=8, global_shape=GLOBAL,
                            reorg_scheme=(2, 2, 2))
-        _, ws = write_variable(d, "B", np.float32, plan, data)
-        ds = Dataset(d)
+        ds = Dataset.create(d, engine="pread")
+        ws = ds.write_planned(ds.plan_write("B", plan, np.float32), data)
         arr, st = ds.read("B", whole)
         print(f"  {strat:15s} chunks={plan.num_chunks:3d} "
               f"write={ws.write_seconds * 1e3:6.1f} ms  "

@@ -1,8 +1,9 @@
 from .async_ckpt import AsyncCheckpointer
 from .blocks_map import blocks_from_sharding, flatten_pytree, unflatten_like
-from .manager import CheckpointManager, SaveStats
+from .manager import CheckpointManager, RestoreStats, SaveStats
 from .resharding import ReshardPlan, plan_reshard, reshard_cost_report
 
-__all__ = ["AsyncCheckpointer", "CheckpointManager", "SaveStats",
-           "ReshardPlan", "blocks_from_sharding", "flatten_pytree",
-           "plan_reshard", "reshard_cost_report", "unflatten_like"]
+__all__ = ["AsyncCheckpointer", "CheckpointManager", "RestoreStats",
+           "SaveStats", "ReshardPlan", "blocks_from_sharding",
+           "flatten_pytree", "plan_reshard", "reshard_cost_report",
+           "unflatten_like"]

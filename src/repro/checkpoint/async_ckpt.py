@@ -44,11 +44,13 @@ class AsyncCheckpointer:
     def __init__(self, root: str, reorg_scheme=(4, 4),
                  num_workers: int = 2, queue_depth: int = 2,
                  n_compute: int = 256, m_staging: int = 2,
-                 t_w_direct: float | None = None):
+                 t_w_direct: float | None = None,
+                 align: int | None = None, engine: str = "pread"):
         self.root = root
         self.scheme = tuple(reorg_scheme)
         self.executor = StagingExecutor(root, num_workers=num_workers,
-                                        queue_depth=queue_depth)
+                                        queue_depth=queue_depth,
+                                        align=align, engine=engine)
         self.records: list = []
         self.n_compute = n_compute
         self.m_staging = m_staging

@@ -14,6 +14,13 @@ is a policy knob:
 
 Restore is resharding-aware: a different target mesh/sharding reads each new
 shard as a region query against the stored chunk index.
+
+Both directions execute through the symmetric plan/engine API: save plans
+every variable with ``Dataset.plan_write`` (one session per step dir),
+restore probes each variable's spatial index once and replays per-shard
+:class:`~repro.io.planner.ReadPlan`\\ s via ``read_planned`` —
+:class:`RestoreStats` reports the per-variable :class:`~repro.io.reader.
+ReadStats` alongside the aggregate.
 """
 
 from __future__ import annotations
@@ -30,11 +37,11 @@ import numpy as np
 
 from ..core.blocks import Block
 from ..core.layouts import plan_layout
+from ..io.engine import IOEngine
 from ..io.reader import Dataset, ReadStats
-from ..io.writer import write_variable
 from .blocks_map import blocks_from_sharding, flatten_pytree, unflatten_like
 
-__all__ = ["CheckpointManager", "SaveStats"]
+__all__ = ["CheckpointManager", "SaveStats", "RestoreStats"]
 
 MANIFEST = "manifest.json"
 
@@ -49,10 +56,20 @@ class SaveStats:
     per_var_seconds: dict
 
 
+@dataclasses.dataclass
+class RestoreStats(ReadStats):
+    """Aggregate restore stats plus the per-variable breakdown
+    (``per_var[name]`` is that variable's merged :class:`ReadStats`,
+    including its single shared index probe)."""
+
+    per_var: dict = dataclasses.field(default_factory=dict)
+
+
 class CheckpointManager:
     def __init__(self, root: str, strategy: str = "merged_process",
                  devices_per_host: int = 4, hosts_per_node: int = 1,
-                 keep: int = 3, reorg_scheme=None, align=None):
+                 keep: int = 3, reorg_scheme=None, align=None,
+                 engine: str | IOEngine = "memmap"):
         self.root = root
         self.strategy = strategy
         self.devices_per_host = devices_per_host
@@ -60,6 +77,7 @@ class CheckpointManager:
         self.keep = keep
         self.reorg_scheme = reorg_scheme
         self.align = align
+        self.engine = engine
         os.makedirs(root, exist_ok=True)
 
     # -- paths ---------------------------------------------------------------
@@ -83,10 +101,9 @@ class CheckpointManager:
         hosts)."""
         t0 = time.perf_counter()
         d = self.step_dir(step)
-        os.makedirs(d, exist_ok=True)
         flat = flatten_pytree(tree)
         flat_sh = flatten_pytree(shardings) if shardings is not None else {}
-        index = None
+        ds = Dataset.create(d, engine=self.engine)
         per_var = {}
         total_bytes = 0
         n_chunks = 0
@@ -117,12 +134,14 @@ class CheckpointManager:
                                procs_per_node=self.hosts_per_node,
                                global_shape=arr.shape,
                                reorg_scheme=scheme)
-            index, _ = write_variable(d, name, arr.dtype, plan, data,
-                                      index=index, align=self.align)
+            # index.json is re-committed per variable, so a crash mid-save
+            # leaves a readable prefix of the checkpoint
+            ds.write(name, plan, arr.dtype, data, align=self.align)
             per_var[name] = time.perf_counter() - tv
             total_bytes += arr.nbytes
             n_chunks += plan.num_chunks
             n_blocks += len(blocks)
+        ds.close()
         manifest = {"step": step, "strategy": self.strategy,
                     "scalars": scalars,
                     "variables": sorted(k for k in flat if k not in scalars)}
@@ -141,31 +160,49 @@ class CheckpointManager:
 
     # -- restore -----------------------------------------------------------------
     def restore(self, step: int, template=None,
-                target_blocks: Mapping[str, Sequence[Block]] | None = None):
+                target_blocks: Mapping[str, Sequence[Block]] | None = None,
+                engine: str | IOEngine | None = None):
         """Restore full arrays (or per-host shards when ``target_blocks``
         names a new decomposition — elastic restart).  Returns
-        (tree_or_flat, ReadStats)."""
+        (tree_or_flat, RestoreStats).
+
+        Every variable is probed exactly once (its full stored region);
+        per-shard :class:`~repro.io.planner.ReadPlan`\\ s narrow that shared
+        candidate set vectorized and are replayed with ``read_planned``.
+        ``RestoreStats.per_var`` carries each variable's merged stats.
+        """
         d = self.step_dir(step)
         with open(os.path.join(d, MANIFEST)) as f:
             manifest = json.load(f)
-        ds = Dataset(d)
-        agg = ReadStats()
+        agg = RestoreStats()
         flat = {}
+        ds = None
+        if manifest["variables"]:
+            ds = Dataset.open(d, engine=engine if engine is not None
+                              else self.engine)
         for name in manifest["variables"]:
             shape = ds.index.var_shape(name)
-            if target_blocks and name in target_blocks:
-                shards = {}
-                for b in target_blocks[name]:
-                    arr, st = ds.read(name, b)
-                    agg.merge(st)
-                    agg.seconds += st.seconds
-                    shards[b.block_id] = arr
-                flat[name] = shards
-            else:
-                arr, st = ds.read(name, Block((0,) * len(shape), shape))
-                agg.merge(st)
-                agg.seconds += st.seconds
-                flat[name] = arr
+            full = Block((0,) * len(shape), shape)
+            tp = time.perf_counter()
+            cand = ds.index.spatial_index(name).query(full.lo, full.hi)
+            vstats = ReadStats(probe_seconds=time.perf_counter() - tp)
+            regions = (list(target_blocks[name])
+                       if target_blocks and name in target_blocks else [full])
+            shards = {}
+            for b in regions:
+                plan = ds.plan_read(name, b, candidates=cand)
+                arr, st = ds.read_planned(plan)
+                st.seconds += st.probe_seconds + st.plan_seconds
+                vstats.merge(st)
+                vstats.seconds += st.seconds
+                shards[b.block_id] = arr
+            flat[name] = (shards if target_blocks and name in target_blocks
+                          else shards[full.block_id])
+            agg.merge(vstats)
+            agg.seconds += vstats.seconds
+            agg.per_var[name] = vstats
+        if ds is not None:
+            ds.close()
         for name, rec in manifest["scalars"].items():
             flat[name] = np.asarray(rec["value"], dtype=rec["dtype"])
         if template is not None:

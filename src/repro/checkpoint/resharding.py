@@ -54,7 +54,7 @@ def plan_reshard(ds: Dataset, var: str,
 
 def reshard_cost_report(ckpt_dir: str, var: str,
                         target_blocks: Sequence[Block]) -> dict:
-    ds = Dataset(ckpt_dir)
+    ds = Dataset.open(ckpt_dir)
     plan = plan_reshard(ds, var, target_blocks)
     return {"var": var, "num_targets": len(plan.targets),
             "chunks_touched": plan.chunks_touched, "runs": plan.runs,

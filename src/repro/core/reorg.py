@@ -3,7 +3,7 @@
 Planning + policy only (pure index-space / cost-model math).  Execution:
   * on-the-fly: :class:`repro.io.staging.StagingExecutor` consumes the plans
     produced here while the producer keeps computing;
-  * post-hoc: :func:`repro.io.writer.rewrite_dataset` reads a written dataset
+  * post-hoc: :func:`repro.io.reorganize` reads a written dataset
     back and re-writes it with the reorganized plan.
 
 The policy layer is what :mod:`repro.checkpoint.async_ckpt` calls to decide,

@@ -1,16 +1,39 @@
-"""I/O substrate: log-structured container, spatial chunk index, read
-planner, parallel writer/reader, staging."""
+"""I/O substrate: log-structured container, spatial chunk index, symmetric
+read/write extent plans, pluggable execution engines, staging.
+
+Public surface (ISSUE 2): :class:`Dataset` is the session object for both
+directions (``Dataset.create`` / ``Dataset.open``, ``plan_write`` +
+``write_planned``, ``plan_read`` + ``read_planned``); plans come from
+:mod:`repro.io.planner` and are executed by an :class:`IOEngine`
+(``memmap`` / ``pread`` / ``overlapped``).  ``write_variable`` and
+``rewrite_dataset`` remain as deprecated shims for one release.
+"""
 
 from .aggregation import gather_to_nodes
+from .engine import (ENGINES, IOEngine, MemmapEngine, OverlappedPreadEngine,
+                     PreadEngine, SubfileStore, WriteStats, assemble_chunk,
+                     get_engine)
 from .format import ChunkRecord, DatasetIndex, GPFS_BLOCK, VarRows
-from .planner import ReadPlan, build_read_plan, linear_candidates
-from .reader import Dataset, ReadStats
+from .planner import (ReadPlan, WritePlan, build_read_plan, build_write_plan,
+                      linear_candidates)
+from .reader import Dataset, ReadStats, reorganize
 from .spatial import SpatialChunkIndex
 from .staging import StageResult, StagingExecutor
-from .writer import WriteStats, rewrite_dataset, write_variable
+from .writer import rewrite_dataset, write_variable   # deprecated shims
 
-__all__ = ["ChunkRecord", "DatasetIndex", "GPFS_BLOCK", "VarRows",
-           "ReadPlan", "build_read_plan", "linear_candidates",
-           "SpatialChunkIndex", "Dataset", "ReadStats", "StageResult",
-           "StagingExecutor", "WriteStats", "rewrite_dataset",
-           "write_variable", "gather_to_nodes"]
+__all__ = [
+    # container + metadata
+    "ChunkRecord", "DatasetIndex", "GPFS_BLOCK", "VarRows",
+    "SpatialChunkIndex",
+    # plans
+    "ReadPlan", "WritePlan", "build_read_plan", "build_write_plan",
+    "linear_candidates",
+    # engines
+    "ENGINES", "IOEngine", "MemmapEngine", "PreadEngine",
+    "OverlappedPreadEngine", "SubfileStore", "get_engine",
+    # session + execution
+    "Dataset", "ReadStats", "WriteStats", "assemble_chunk", "reorganize",
+    "StageResult", "StagingExecutor", "gather_to_nodes",
+    # deprecated shims (one release)
+    "rewrite_dataset", "write_variable",
+]

@@ -1,7 +1,7 @@
-"""Region-read planning (ISSUE 1 tentpole).
+"""Extent planning for both I/O directions (ISSUE 1 + ISSUE 2 tentpoles).
 
-Converts a region query into an explicit, ordered extent plan before any I/O
-happens:
+Read side — converts a region query into an explicit, ordered extent plan
+before any I/O happens:
 
 1. **probe** — the variable's :class:`~repro.io.spatial.SpatialChunkIndex`
    (or a caller-supplied candidate superset, narrowed vectorized) yields
@@ -15,9 +15,17 @@ happens:
    (one ``preadv``-style grouped read each); ``ReadStats.runs`` is fed from
    this real plan, not an analytic estimate.
 
-The plan is pure metadata — executors in :mod:`repro.io.reader` replay it
-against memmaps or ``preadv`` batches, and resharding/reorg planners consume
-it for cost reports without touching data at all.
+Write side — converts a :class:`~repro.core.layouts.LayoutPlan` into the
+same vectorized extent representation: per-extent subfile/offset/size
+arrays, alignment padding folded in *at plan time* (log-structured append
+offsets are pure metadata), rows sorted by ``(subfile, offset)`` and
+adjacent extents coalesced into groups that one ``pwritev`` can service.
+
+Plans are pure metadata — the engines in :mod:`repro.io.engine` replay
+either kind against memmaps or ``preadv``/``pwritev`` batches, and
+resharding/reorg planners consume them for cost reports without touching
+data at all.  All byte-offset arithmetic of the container lives in this
+module; everything downstream executes plans verbatim.
 """
 
 from __future__ import annotations
@@ -28,10 +36,12 @@ import time
 import numpy as np
 
 from ..core.blocks import Block
-from .format import DatasetIndex, VarRows
+from ..core.layouts import LayoutPlan
+from .format import DatasetIndex, VarRows, align_up
 from .spatial import aabb_mask
 
-__all__ = ["ReadPlan", "build_read_plan", "linear_candidates"]
+__all__ = ["ReadPlan", "WritePlan", "build_read_plan", "build_write_plan",
+           "linear_candidates"]
 
 
 def linear_candidates(rows: VarRows, region: Block) -> np.ndarray:
@@ -203,3 +213,135 @@ def build_read_plan(index: DatasetIndex, var: str, region: Block,
         probe_seconds=probe_seconds,
         plan_seconds=time.perf_counter() - t1)
     return plan
+
+
+@dataclasses.dataclass
+class WritePlan:
+    """Explicit extent list for writing one variable, in execution order.
+
+    The write-side mirror of :class:`ReadPlan`: all per-extent arrays are
+    row-aligned and sorted by ``(subfile, file_lo)``; ``group_bounds``
+    delimits coalesced groups of byte-adjacent extents (one
+    ``pwritev``-style vectored write each).  Append offsets — including any
+    alignment padding — are assigned here, at plan time; executors never do
+    offset arithmetic.
+
+    ``chunk_ids[row]`` is the index into ``layout.chunks`` whose assembled
+    buffer plan row ``row`` writes, so executors can pair buffers (built in
+    layout order) with extents (sorted for sequential access).
+    """
+
+    var: str
+    layout: LayoutPlan
+    dtype: np.dtype
+    chunk_ids: np.ndarray      # (m,) rows into layout.chunks, execution order
+    chunk_los: np.ndarray      # (m,d) cuboid each extent covers
+    chunk_his: np.ndarray
+    writers: np.ndarray        # (m,) logical writer of each extent
+    subfiles: np.ndarray       # (m,)
+    file_lo: np.ndarray        # (m,) aligned absolute start offset
+    file_hi: np.ndarray        # (m,) end of extent (file_lo + nbytes)
+    nbytes: np.ndarray         # (m,) extent sizes
+    group_bounds: np.ndarray   # (g+1,) coalesced byte-adjacent groups
+    file_sizes: dict           # subfile -> required end size after this plan
+    align: int | None
+    bytes_total: int           # payload bytes (no padding)
+    span_bytes: int            # bytes spanned if every group is one write
+    plan_seconds: float = 0.0
+
+    @property
+    def strategy(self) -> str:
+        return self.layout.strategy
+
+    @property
+    def global_shape(self) -> tuple:
+        return self.layout.global_shape
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self.chunk_ids)
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.group_bounds) - 1
+
+
+def build_write_plan(layout: LayoutPlan, var: str, dtype,
+                     align: int | None = None,
+                     base_offsets: dict | None = None) -> WritePlan:
+    """Plan the write of ``var`` under ``layout``.
+
+    ``base_offsets`` maps subfile -> first free byte (log-structured append
+    past existing extents; empty/missing means a fresh subfile).  Extents
+    are laid out in ``layout.chunks`` order per subfile — each start offset
+    aligned up to ``align`` — then sorted by ``(subfile, offset)`` and
+    coalesced: consecutive extents with no padding gap form one group.
+    """
+    t0 = time.perf_counter()
+    dtype = np.dtype(dtype)
+    m = layout.num_chunks
+    ndim = len(layout.global_shape)
+    if m == 0:
+        z = np.empty(0, dtype=np.int64)
+        z2 = np.empty((0, ndim), dtype=np.int64)
+        return WritePlan(var=var, layout=layout, dtype=dtype, chunk_ids=z,
+                         chunk_los=z2, chunk_his=z2, writers=z, subfiles=z,
+                         file_lo=z, file_hi=z, nbytes=z,
+                         group_bounds=np.zeros(1, dtype=np.int64),
+                         file_sizes={}, align=align, bytes_total=0,
+                         span_bytes=0,
+                         plan_seconds=time.perf_counter() - t0)
+
+    los = np.asarray([cp.chunk.lo for cp in layout.chunks], dtype=np.int64)
+    his = np.asarray([cp.chunk.hi for cp in layout.chunks], dtype=np.int64)
+    writers = np.asarray([cp.writer for cp in layout.chunks], dtype=np.int64)
+    subf = np.asarray([cp.subfile for cp in layout.chunks], dtype=np.int64)
+    nbytes = (his - los).prod(axis=1) * dtype.itemsize
+
+    # Append-order offsets, vectorized per subfile: every extent start is
+    # aligned, so within a subfile the starts are an exclusive prefix sum of
+    # the aligned sizes on top of the (aligned-up) base offset.
+    a = int(align) if align else 1
+    aligned_nb = -(-nbytes // a) * a
+    stable = np.argsort(subf, kind="stable")   # groups subfiles, keeps order
+    s_sorted = subf[stable]
+    seg_first = np.flatnonzero(np.concatenate(
+        ([True], s_sorted[1:] != s_sorted[:-1])))
+    cs = np.cumsum(aligned_nb[stable]) - aligned_nb[stable]   # exclusive
+    seg_id = np.cumsum(np.concatenate(
+        ([0], (s_sorted[1:] != s_sorted[:-1]).astype(np.int64))))
+    base = np.zeros(len(seg_first), dtype=np.int64)
+    if base_offsets:
+        for i, f in enumerate(seg_first):
+            base[i] = align_up(int(base_offsets.get(int(s_sorted[f]), 0)),
+                               align)
+    starts_sorted = base[seg_id] + (cs - cs[seg_first][seg_id])
+    file_lo = np.empty(m, dtype=np.int64)
+    file_lo[stable] = starts_sorted
+    file_hi = file_lo + nbytes
+
+    order = np.lexsort((file_lo, subf))
+    subf_o = subf[order]
+    lo_o, hi_o = file_lo[order], file_hi[order]
+
+    new_group = np.empty(m, dtype=bool)
+    new_group[0] = True
+    if m > 1:
+        new_group[1:] = (subf_o[1:] != subf_o[:-1]) | (lo_o[1:] > hi_o[:-1])
+    group_bounds = np.concatenate(
+        (np.flatnonzero(new_group), [m])).astype(np.int64)
+    span_bytes = int((hi_o[group_bounds[1:] - 1]
+                      - lo_o[group_bounds[:-1]]).sum())
+    file_sizes = {}
+    for g in range(len(group_bounds) - 1):
+        sf = int(subf_o[group_bounds[g]])
+        file_sizes[sf] = max(file_sizes.get(sf, 0),
+                             int(hi_o[group_bounds[g + 1] - 1]))
+
+    return WritePlan(
+        var=var, layout=layout, dtype=dtype, chunk_ids=order,
+        chunk_los=los[order], chunk_his=his[order], writers=writers[order],
+        subfiles=subf_o, file_lo=lo_o, file_hi=hi_o, nbytes=nbytes[order],
+        group_bounds=group_bounds, file_sizes=file_sizes, align=align,
+        bytes_total=int(nbytes.sum()), span_bytes=span_bytes,
+        plan_seconds=time.perf_counter() - t0)

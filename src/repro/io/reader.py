@@ -1,24 +1,29 @@
-"""Arbitrary-decomposition dataset reader (paper §3.3).
+"""Dataset session object: symmetric plan/execute I/O in both directions.
 
-Each reader process maps to a thread; a reader's sub-region is assembled by
-locating every stored chunk that intersects it (index lookup), pulling the
-intersecting byte runs and linearizing them into the reader's output buffer —
-exactly the "find all needed chunks ... linearize those chunks" cost the paper
-identifies as the read-side penalty of chunked/sub-filed layouts.
+A :class:`Dataset` is the single handle on a dataset directory for writers
+*and* readers — ``Dataset.create`` starts a new container, ``Dataset.open``
+attaches to an existing one, and both directions go through the same
+plan/engine split:
 
-The lookup goes through the per-variable spatial chunk index and the read
-planner (:mod:`repro.io.planner`): only intersecting records are visited,
-extents are pulled in ``(subfile, offset)`` order, adjacent byte runs
-coalesce into grouped reads, and ``ReadStats.runs`` reports the plan's real
-run count.  Two execution engines replay a plan:
+* **write** — ``plan_write`` turns a :class:`~repro.core.layouts.LayoutPlan`
+  into a :class:`~repro.io.planner.WritePlan` (append offsets + alignment
+  assigned at plan time); ``write_planned`` assembles chunk buffers and
+  hands the plan to the session's :class:`~repro.io.engine.IOEngine`.  The
+  index is committed only after every extent landed, so a crashed write
+  leaves ``index.json`` unwritten (log-structured recovery: data extents
+  without index entries are dead space, never corruption).
+* **read** — ``plan_read`` probes the variable's spatial chunk index and
+  emits a :class:`~repro.io.planner.ReadPlan` (paper §3.3: locate all
+  intersecting chunks, linearize); ``read_planned`` replays it through the
+  engine.  Decomposed/pattern reads share one index probe across all reader
+  threads and schemes.
 
-* ``"memmap"`` (default) — zero-copy strided gathers out of per-subfile maps;
-* ``"pread"`` — explicit ``os.preadv``-style grouped reads into staging
-  buffers (one vectored syscall per coalesced group), the cold-storage path.
-
-Stats expose the *structural* costs (chunks touched, contiguous byte runs ==
-seeks on cold storage, bytes) alongside measured wall time, so layout effects
-are visible even when the container's page cache hides device seeks.
+Engines (``memmap`` / ``pread`` / ``overlapped``, see
+:mod:`repro.io.engine`) are interchangeable per session or per call; stats
+expose the *structural* costs (chunks touched, contiguous byte runs ==
+seeks on cold storage, coalesced groups, bytes) alongside measured wall
+time, so layout effects are visible even when the page cache hides device
+seeks.
 """
 
 from __future__ import annotations
@@ -28,20 +33,20 @@ import os
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Sequence
+from typing import Mapping, Sequence
 
 import numpy as np
 
 from ..core.blocks import Block
+from ..core.layouts import ChunkPlan, LayoutPlan
 from ..core.read_patterns import (best_decompositions, decompose_region,
                                   pattern_region)
-from .format import DatasetIndex, subfile_name
-from .planner import ReadPlan, build_read_plan
+from .engine import (IOEngine, SubfileStore, WriteStats, assemble_chunk,
+                     get_engine)
+from .format import ChunkRecord, DatasetIndex
+from .planner import ReadPlan, WritePlan, build_read_plan, build_write_plan
 
-__all__ = ["ReadStats", "Dataset"]
-
-#: Linux caps one preadv at IOV_MAX iovecs
-_IOV_MAX = 1024
+__all__ = ["ReadStats", "Dataset", "reorganize"]
 
 
 @dataclasses.dataclass
@@ -68,115 +73,152 @@ class ReadStats:
 
 
 class Dataset:
-    """Read access to a written dataset directory."""
+    """Read/write session on a dataset directory.
 
-    def __init__(self, dirpath: str, engine: str = "memmap"):
-        if engine not in ("memmap", "pread"):
-            raise ValueError(f"unknown engine {engine!r}")
+    ``Dataset(dir)`` attaches to an existing dataset (read paths work
+    immediately, writes append); ``Dataset.create(dir)`` starts an empty
+    one.  ``engine`` is an engine name (``"memmap"``, ``"pread"``,
+    ``"overlapped"``/``"overlapped:<depth>"``) or an
+    :class:`~repro.io.engine.IOEngine` instance.
+    """
+
+    def __init__(self, dirpath: str, engine: str | IOEngine = "memmap", *,
+                 create: bool = False, index: DatasetIndex | None = None):
         self.dirpath = dirpath
-        self.index = DatasetIndex.load(dirpath)
-        self.engine = engine
-        self._maps: dict = {}
-        self._fds: dict = {}
-        self._handle_lock = threading.Lock()
+        self._engine = get_engine(engine)
+        if index is not None:
+            self.index = index
+        elif create:
+            self.index = DatasetIndex()
+        else:
+            self.index = DatasetIndex.load(dirpath)
+        if create or index is not None:
+            os.makedirs(dirpath, exist_ok=True)
+        self._store = SubfileStore(dirpath)
+        self._lock = threading.Lock()     # index mutation + append cursor
+        self._cursor: dict | None = None  # subfile -> first free byte
+
+    # -- session management --------------------------------------------------
+    @classmethod
+    def create(cls, dirpath: str,
+               engine: str | IOEngine = "memmap") -> "Dataset":
+        """Start a new (empty) dataset. ``index.json`` is not written until
+        the first successful :meth:`write_planned` commit."""
+        return cls(dirpath, engine, create=True)
+
+    @classmethod
+    def open(cls, dirpath: str,
+             engine: str | IOEngine = "memmap") -> "Dataset":
+        """Attach to an existing dataset directory."""
+        return cls(dirpath, engine)
+
+    @property
+    def engine(self) -> str:
+        """Name of the session's default engine."""
+        return self._engine.name
+
+    def flush(self) -> None:
+        """Persist ``index.json`` (atomic replace)."""
+        self.index.save(self.dirpath)
 
     def close(self) -> None:
-        with self._handle_lock:
-            for fd in self._fds.values():
-                os.close(fd)
-            self._fds.clear()
-            self._maps.clear()
+        self._store.close()
 
-    # -- internals -----------------------------------------------------------
-    def _subfile_map(self, k: int) -> np.memmap:
-        mm = self._maps.get(k)
-        if mm is None:
-            with self._handle_lock:      # decomposed reads race this cache
-                mm = self._maps.get(k)
-                if mm is None:
-                    path = os.path.join(self.dirpath, subfile_name(k))
-                    mm = self._maps[k] = np.memmap(path, dtype=np.uint8,
-                                                   mode="r")
-        return mm
+    # -- write path ----------------------------------------------------------
+    def _cursor_dict(self) -> dict:
+        """subfile -> first free byte, log-structured append (lazy-built from
+        the index, then maintained by :meth:`plan_write`). Caller holds the
+        lock."""
+        if self._cursor is None:
+            cur: dict = {}
+            for rec in self.index.chunks:
+                end = rec.offset + rec.nbytes
+                if end > cur.get(rec.subfile, 0):
+                    cur[rec.subfile] = end
+            self._cursor = cur
+        return self._cursor
 
-    def _subfile_fd(self, k: int) -> int:
-        fd = self._fds.get(k)
-        if fd is None:
-            with self._handle_lock:
-                fd = self._fds.get(k)
-                if fd is None:
-                    path = os.path.join(self.dirpath, subfile_name(k))
-                    fd = self._fds[k] = os.open(path, os.O_RDONLY)
-        return fd
+    def plan_write(self, var: str, layout: LayoutPlan, dtype,
+                   align: int | None = None) -> WritePlan:
+        """Plan (but do not execute) the append of ``var`` under ``layout``.
 
-    @staticmethod
-    def _scatter(plan: ReadPlan, row: int, span: np.ndarray,
-                 out: np.ndarray) -> None:
-        """Strided-gather plan row ``row`` from its byte span into ``out``."""
-        elems = span.view(plan.dtype)
-        ishape = tuple(int(s) for s in
-                       (plan.inter_his[row] - plan.inter_los[row]))
-        byte_strides = tuple(int(s) * plan.dtype.itemsize
-                             for s in plan.strides[row])
-        view = np.lib.stride_tricks.as_strided(elems, shape=ishape,
-                                               strides=byte_strides)
-        out[plan.out_slices(row)] = view
+        Reserves the extents immediately: concurrent planners (staging
+        workers) get disjoint offsets even before either plan commits.
+        """
+        with self._lock:
+            cursor = self._cursor_dict()
+            plan = build_write_plan(layout, var, dtype, align=align,
+                                    base_offsets=cursor)
+            for sf, end in plan.file_sizes.items():
+                if end > cursor.get(sf, 0):
+                    cursor[sf] = end
+        return plan
 
-    def _execute_memmap(self, plan: ReadPlan, out: np.ndarray) -> None:
-        for row in range(plan.num_chunks):
-            raw = self._subfile_map(int(plan.subfiles[row]))
-            span = raw[plan.file_lo[row]:plan.file_hi[row]]
-            self._scatter(plan, row, span, out)
+    def write_planned(self, plan: WritePlan,
+                      data: Mapping[int, np.ndarray], *,
+                      engine: str | IOEngine | None = None,
+                      fsync: bool = False, flush: bool = True) -> WriteStats:
+        """Execute a write plan: assemble each chunk from its source blocks,
+        run the engine over the extent groups, then commit the records.
+        Returns :class:`~repro.io.engine.WriteStats`.
+        """
+        eng = get_engine(engine) if engine is not None else self._engine
+        t_start = time.perf_counter()
 
-    @staticmethod
-    def _pread_into(fd: int, buf: np.ndarray, offset: int) -> None:
-        mv = memoryview(buf)
-        while mv:
-            data = os.pread(fd, len(mv), offset)
-            if not data:
-                raise IOError(f"short read at offset {offset}")
-            mv[:len(data)] = data
-            mv = mv[len(data):]
-            offset += len(data)
+        t0 = time.perf_counter()
+        buffers = [assemble_chunk(plan.layout.chunks[int(cid)], data,
+                                  plan.dtype)
+                   for cid in plan.chunk_ids]
+        assemble_seconds = time.perf_counter() - t0
 
-    def _execute_pread(self, plan: ReadPlan, out: np.ndarray) -> None:
-        gb = plan.group_bounds
-        for g in range(plan.num_groups):
-            s, e = int(gb[g]), int(gb[g + 1])
-            fd = self._subfile_fd(int(plan.subfiles[s]))
-            glo = int(plan.file_lo[s])
-            ghi = int(plan.file_hi[e - 1])
-            buf = np.empty(ghi - glo, dtype=np.uint8)
-            # vectored read: one iovec per member extent when they tile the
-            # span exactly (gap coalescing leaves holes -> read span whole)
-            views, pos, tiled = [], glo, True
-            for row in range(s, e):
-                if int(plan.file_lo[row]) != pos:
-                    tiled = False
-                    break
-                views.append(buf[int(plan.file_lo[row]) - glo:
-                                 int(plan.file_hi[row]) - glo])
-                pos = int(plan.file_hi[row])
-            if tiled and pos == ghi and hasattr(os, "preadv"):
-                off = glo
-                for i in range(0, len(views), _IOV_MAX):
-                    batch = views[i:i + _IOV_MAX]
-                    got = os.preadv(fd, batch, off)
-                    want = sum(v.nbytes for v in batch)
-                    off += got
-                    if got != want:
-                        # preadv may legally return short; the views tile
-                        # buf, so finish the tail with plain preads
-                        self._pread_into(fd, buf[off - glo:], off)
-                        break
-            else:
-                self._pread_into(fd, buf, glo)
-            for row in range(s, e):
-                span = buf[int(plan.file_lo[row]) - glo:
-                           int(plan.file_hi[row]) - glo]
-                self._scatter(plan, row, span, out)
+        t0 = time.perf_counter()
+        for sf, size in plan.file_sizes.items():
+            self._store.ensure_size(sf, size)
+        eng.write_plan(plan, buffers, self._store)
+        if fsync:
+            self._store.fsync()
+        write_seconds = time.perf_counter() - t0
 
-    # -- API -----------------------------------------------------------------
+        # commit: records enter the index only after every extent landed
+        with self._lock:
+            if plan.var not in self.index.variables:
+                self.index.add_variable(plan.var, plan.global_shape,
+                                        plan.dtype, plan.strategy)
+            for row in np.argsort(plan.chunk_ids):   # original layout order
+                self.index.chunks.append(ChunkRecord(
+                    var=plan.var, lo=tuple(int(v) for v in plan.chunk_los[row]),
+                    hi=tuple(int(v) for v in plan.chunk_his[row]),
+                    subfile=int(plan.subfiles[row]),
+                    offset=int(plan.file_lo[row]),
+                    nbytes=int(plan.nbytes[row])))
+            cursor = self._cursor_dict()
+            for sf, end in plan.file_sizes.items():   # plans built directly
+                if end > cursor.get(sf, 0):
+                    cursor[sf] = end
+            self.index.num_subfiles = max(self.index.num_subfiles,
+                                          len(cursor))
+            if flush:
+                self.flush()
+
+        return WriteStats(assemble_seconds=assemble_seconds,
+                          write_seconds=write_seconds,
+                          total_seconds=time.perf_counter() - t_start,
+                          bytes_written=int(plan.bytes_total),
+                          num_extents=plan.num_chunks,
+                          num_subfiles=len(plan.file_sizes),
+                          groups=plan.num_groups,
+                          plan_seconds=plan.plan_seconds)
+
+    def write(self, var: str, layout: LayoutPlan, dtype,
+              data: Mapping[int, np.ndarray], *,
+              align: int | None = None, fsync: bool = False) -> WriteStats:
+        """Plan + execute in one call (the common non-staged case).
+        Argument order mirrors :meth:`plan_write`."""
+        return self.write_planned(self.plan_write(var, layout, dtype,
+                                                  align=align),
+                                  data, fsync=fsync)
+
+    # -- read path -----------------------------------------------------------
     def plan_read(self, var: str, region: Block,
                   candidates: np.ndarray | None = None,
                   coalesce_gap: int = 0) -> ReadPlan:
@@ -187,26 +229,24 @@ class Dataset:
                                coalesce_gap=coalesce_gap)
 
     def read_planned(self, plan: ReadPlan, out: np.ndarray | None = None,
-                     engine: str | None = None) -> tuple:
+                     engine: str | IOEngine | None = None) -> tuple:
         """Execute a read plan. Returns (array, ReadStats)."""
         if out is None:
             out = np.empty(plan.region.shape, dtype=plan.dtype)
+        eng = get_engine(engine) if engine is not None else self._engine
         stats = ReadStats(chunks_touched=plan.num_chunks, runs=plan.runs,
                           groups=plan.num_groups,
                           bytes_read=plan.bytes_needed,
                           probe_seconds=plan.probe_seconds,
                           plan_seconds=plan.plan_seconds)
         t0 = time.perf_counter()
-        if (engine or self.engine) == "pread":
-            self._execute_pread(plan, out)
-        else:
-            self._execute_memmap(plan, out)
+        eng.read_plan(plan, self._store, out)
         stats.seconds = time.perf_counter() - t0
         return out, stats
 
     def read(self, var: str, region: Block,
              candidates: np.ndarray | None = None,
-             engine: str | None = None) -> tuple:
+             engine: str | IOEngine | None = None) -> tuple:
         """Assemble ``region`` of ``var``. Returns (array, ReadStats)."""
         plan = self.plan_read(var, region, candidates=candidates)
         arr, stats = self.read_planned(plan, engine=engine)
@@ -217,7 +257,7 @@ class Dataset:
                         scheme: Sequence[int],
                         materialize: bool = True,
                         candidates: np.ndarray | None = None,
-                        engine: str | None = None) -> ReadStats:
+                        engine: str | IOEngine | None = None) -> ReadStats:
         """Concurrent read of ``region`` split over ``prod(scheme)`` readers
         (threads). Returns aggregated stats; ``seconds`` is wall time.
 
@@ -254,7 +294,7 @@ class Dataset:
     def read_pattern(self, var: str, pattern: str,
                      num_readers: int = 1,
                      slab_thickness: int | None = None,
-                     engine: str | None = None) -> tuple:
+                     engine: str | IOEngine | None = None) -> tuple:
         """Read a Fig.-6 pattern with the best decomposition for
         ``num_readers`` (the paper reports best-of over schemes).
         Returns (best_scheme, ReadStats of best).
@@ -279,3 +319,40 @@ class Dataset:
         # the one shared index probe is attributed to the reported best
         best[1].probe_seconds += probe_seconds
         return best
+
+
+def reorganize(src_dir: str, dst_dir: str, var: str, layout: LayoutPlan, *,
+               engine: str | IOEngine = "memmap",
+               align: int | None = None) -> tuple:
+    """Post-hoc reorganization (paper §5.1): pull each chunk region of the
+    new ``layout`` from ``src_dir`` through the read planner and write the
+    reorganized dataset to ``dst_dir`` through the write planner.
+
+    Returns ``(read_seconds, Dataset, WriteStats)`` — the returned session
+    is open on the destination.
+    """
+    src = Dataset.open(src_dir, engine=engine)
+    t0 = time.perf_counter()
+    data = {}
+    synth = []
+    for i, cp in enumerate(layout.chunks):
+        arr, _ = src.read(var, cp.chunk)
+        synth.append(Block(cp.chunk.lo, cp.chunk.hi, owner=cp.writer,
+                           block_id=i))
+        data[i] = arr
+    read_seconds = time.perf_counter() - t0
+    src.close()
+    # rewrite with chunk==source identity
+    ident = LayoutPlan(strategy=layout.strategy,
+                       global_shape=layout.global_shape,
+                       chunks=tuple(ChunkPlan(chunk=b, sources=(b,),
+                                              writer=b.owner,
+                                              subfile=layout.chunks[i].subfile)
+                                    for i, b in enumerate(synth)),
+                       num_subfiles=layout.num_subfiles,
+                       inter_process_moved=layout.inter_process_moved,
+                       intra_node_moved=layout.intra_node_moved)
+    dst = Dataset.create(dst_dir, engine=engine)
+    wstats = dst.write(var, ident, src.index.var_dtype(var), data,
+                       align=align)
+    return read_seconds, dst, wstats

@@ -6,6 +6,13 @@ producer keeps computing.  A bounded queue of depth ``queue_depth`` models the
 staging nodes' buffer space: when it is full the producer blocks — the paper's
 ``t_s + t_w > t_c`` regime where "the computation will be delayed".
 
+Workers write through a shared :class:`~repro.io.reader.Dataset` session:
+offsets (and alignment padding) are reserved by ``plan_write`` under the
+session lock, then each worker executes its :class:`~repro.io.planner.
+WritePlan` through the session's engine concurrently.  No offset arithmetic
+lives here anymore — the historical off-by-alignment drift between staging
+appends and writer appends cannot recur, since both run the same planner.
+
 Measured per output:
   t_s  — transfer+assembly time (producer-side copy + worker-side layout build)
   t_w  — write time of the reorganized chunks
@@ -19,18 +26,17 @@ measured, not simulated.
 from __future__ import annotations
 
 import dataclasses
-import os
 import queue
 import threading
 import time
-from typing import Mapping, Sequence
+from typing import Mapping
 
 import numpy as np
 
-from ..core.blocks import Block
 from ..core.layouts import LayoutPlan
-from .format import DatasetIndex, ChunkRecord, align_up, subfile_name
-from .writer import assemble_chunk
+from .engine import IOEngine
+from .format import DatasetIndex
+from .reader import Dataset
 
 __all__ = ["StageResult", "StagingExecutor"]
 
@@ -50,18 +56,16 @@ class StagingExecutor:
 
     def __init__(self, dirpath: str, num_workers: int = 2,
                  queue_depth: int = 2, link_gbps: float | None = None,
-                 align: int | None = None):
+                 align: int | None = None,
+                 engine: str | IOEngine = "pread"):
         self.dirpath = dirpath
-        os.makedirs(dirpath, exist_ok=True)
         self.num_workers = num_workers
         self.link_gbps = link_gbps
         self.align = align
+        self._ds = Dataset.create(dirpath, engine=engine)
         self._q: queue.Queue = queue.Queue(maxsize=queue_depth)
         self._results: list = []
         self._lock = threading.Lock()
-        self._index = DatasetIndex()
-        self._offsets: dict = {}
-        self._fds: dict = {}
         self._stop = False
         self._workers = [threading.Thread(target=self._worker, daemon=True)
                          for _ in range(num_workers)]
@@ -105,22 +109,18 @@ class StagingExecutor:
                 pass
         for w in self._workers:
             w.join(timeout=5)
-        for fd in self._fds.values():
-            os.close(fd)
-        self._fds.clear()
-        self._index.save(self.dirpath)
+        self._ds.flush()
+        self._ds.close()
 
     @property
     def index(self) -> DatasetIndex:
-        return self._index
+        return self._ds.index
+
+    @property
+    def dataset(self) -> Dataset:
+        return self._ds
 
     # -- worker side -----------------------------------------------------------
-    def _fd(self, subfile: int) -> int:
-        if subfile not in self._fds:
-            path = os.path.join(self.dirpath, subfile_name(subfile))
-            self._fds[subfile] = os.open(path, os.O_RDWR | os.O_CREAT)
-        return self._fds[subfile]
-
     def _worker(self) -> None:
         while not self._stop:
             item = self._q.get()
@@ -130,35 +130,14 @@ class StagingExecutor:
             step, var, dtype, plan, staged, copy_s = item
             res = StageResult(step=step)
             try:
-                t0 = time.perf_counter()
-                bufs = [assemble_chunk(cp, staged, dtype)
-                        for cp in plan.chunks]
-                res.t_s = copy_s + (time.perf_counter() - t0)
-                t0 = time.perf_counter()
-                vname = f"{var}@{step}"
+                wplan = self._ds.plan_write(f"{var}@{step}", plan, dtype,
+                                            align=self.align)
+                ws = self._ds.write_planned(wplan, staged, flush=False)
+                res.t_s = copy_s + ws.assemble_seconds
+                res.t_w = ws.write_seconds
+                res.bytes_staged = ws.bytes_written
+                res.num_chunks = ws.num_extents
                 with self._lock:
-                    placements = []
-                    for cp, buf in zip(plan.chunks, bufs):
-                        off = align_up(self._offsets.get(cp.subfile, 0),
-                                       self.align)
-                        self._offsets[cp.subfile] = off + buf.nbytes
-                        placements.append((cp, buf, off))
-                for cp, buf, off in placements:
-                    mv = memoryview(np.ascontiguousarray(buf)
-                                    .reshape(-1).view(np.uint8))
-                    os.pwrite(self._fd(cp.subfile), mv, off)
-                res.t_w = time.perf_counter() - t0
-                res.bytes_staged = sum(b.nbytes for b in bufs)
-                res.num_chunks = len(bufs)
-                with self._lock:
-                    self._index.add_variable(vname, plan.global_shape, dtype,
-                                             plan.strategy)
-                    for cp, buf, off in placements:
-                        self._index.chunks.append(ChunkRecord(
-                            var=vname, lo=cp.chunk.lo, hi=cp.chunk.hi,
-                            subfile=cp.subfile, offset=off, nbytes=buf.nbytes))
-                    self._index.num_subfiles = max(self._index.num_subfiles,
-                                                   len(self._offsets))
                     self._results.append(res)
             finally:
                 self._q.task_done()

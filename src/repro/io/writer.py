@@ -1,184 +1,69 @@
-"""Parallel dataset writer: executes a :class:`repro.core.layouts.LayoutPlan`
-with real file I/O.
+"""Deprecated write-path shims (kept for one release).
 
-Logical writers (processes / node leaders / stagers, per the plan) run as
-threads; each subfile is appended by exactly one thread except the
-single-shared-file strategies (contiguous/chunked/reorganized with one
-subfile) where all writers ``pwrite`` into one file at precomputed offsets —
-the shared-file seek/locking motif of §2.2.
+The bespoke parallel writer moved behind the symmetric plan/engine API:
+offset assignment (including alignment) happens in
+:func:`repro.io.planner.build_write_plan`, execution in
+:mod:`repro.io.engine`, and :class:`repro.io.reader.Dataset` is the session
+object for both directions::
+
+    ds = Dataset.create(dirpath, engine="pread")
+    ws = ds.write_planned(ds.plan_write("B", layout, np.float32), data)
+
+These wrappers keep the old entry points working and emit a
+``DeprecationWarning``; they will be removed in the next release.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import os
-import time
-from concurrent.futures import ThreadPoolExecutor
-from typing import Mapping, Sequence
+import warnings
 
-import numpy as np
-
-from ..core.blocks import Block
-from ..core.layouts import ChunkPlan, LayoutPlan
-from .format import ChunkRecord, DatasetIndex, align_up, subfile_name
+from ..core.layouts import LayoutPlan
+# re-exported for backward compatibility
+from .engine import WriteStats, assemble_chunk  # noqa: F401
+from .reader import Dataset, reorganize
 
 __all__ = ["WriteStats", "write_variable", "assemble_chunk",
            "rewrite_dataset"]
-
-
-@dataclasses.dataclass
-class WriteStats:
-    assemble_seconds: float = 0.0     # data rearrangement (memcpy analogue)
-    write_seconds: float = 0.0        # wall time of the parallel write phase
-    total_seconds: float = 0.0
-    bytes_written: int = 0
-    num_extents: int = 0
-    num_subfiles: int = 0
-
-    @property
-    def write_gbps(self) -> float:
-        return self.bytes_written / max(self.write_seconds, 1e-12) / 1e9
-
-
-def assemble_chunk(cp: ChunkPlan, data: Mapping[int, np.ndarray],
-                   dtype) -> np.ndarray:
-    """Build the chunk buffer from its source blocks (zero-copy when the
-    chunk IS a single source block)."""
-    if len(cp.sources) == 1 and cp.sources[0].lo == cp.chunk.lo \
-            and cp.sources[0].hi == cp.chunk.hi:
-        arr = data[cp.sources[0].block_id]
-        return np.ascontiguousarray(arr)
-    buf = np.empty(cp.chunk.shape, dtype=dtype)
-    for src in cp.sources:
-        inter = cp.chunk.intersect(src)
-        if inter is None:
-            continue
-        src_arr = data[src.block_id]
-        buf[inter.slices(origin=cp.chunk.lo)] = \
-            src_arr[inter.slices(origin=src.lo)]
-    return buf
 
 
 def write_variable(dirpath: str,
                    name: str,
                    dtype,
                    plan: LayoutPlan,
-                   data: Mapping[int, np.ndarray],
+                   data,
                    num_threads: int | None = None,
                    align: int | None = None,
                    fsync: bool = False,
-                   index: DatasetIndex | None = None) -> tuple:
-    """Write one variable per ``plan``. Returns (DatasetIndex, WriteStats).
+                   index=None) -> tuple:
+    """Deprecated: use ``Dataset.create(dirpath).write_planned(...)``.
 
+    Writes one variable per ``plan``. Returns (DatasetIndex, WriteStats).
     Pass an existing ``index`` to append more variables to the same dataset.
+    ``num_threads`` is ignored — engines manage their own parallelism.
     """
-    os.makedirs(dirpath, exist_ok=True)
-    dtype = np.dtype(dtype)
-    t_start = time.perf_counter()
-
-    # -- phase 1: assemble chunk buffers (the rearrangement cost) ----------
-    t0 = time.perf_counter()
-    buffers = [assemble_chunk(cp, data, dtype) for cp in plan.chunks]
-    assemble_seconds = time.perf_counter() - t0
-
-    # -- phase 2: lay out extents within each subfile ----------------------
-    offsets = {}          # subfile -> next free offset
-    if index is not None:         # appending: start past existing extents
-        for rec in index.chunks:
-            end = rec.offset + rec.nbytes
-            if end > offsets.get(rec.subfile, 0):
-                offsets[rec.subfile] = end
-    placed = []           # (ChunkPlan, buffer, subfile, offset)
-    for cp, buf in zip(plan.chunks, buffers):
-        off = offsets.get(cp.subfile, 0)
-        off = align_up(off, align)
-        placed.append((cp, buf, cp.subfile, off))
-        offsets[cp.subfile] = off + buf.nbytes
-
-    # -- phase 3: parallel write -------------------------------------------
-    by_writer: dict = {}
-    for rec in placed:
-        by_writer.setdefault(rec[0].writer, []).append(rec)
-
-    fds = {}
-    for sf, end in offsets.items():
-        path = os.path.join(dirpath, subfile_name(sf))
-        fd = os.open(path, os.O_RDWR | os.O_CREAT)
-        os.ftruncate(fd, max(end, os.fstat(fd).st_size))
-        fds[sf] = fd
-
-    def run_writer(recs):
-        n = 0
-        for cp, buf, sf, off in recs:
-            mv = memoryview(buf.reshape(-1).view(np.uint8))
-            os.pwrite(fds[sf], mv, off)
-            n += 1
-        return n
-
-    t0 = time.perf_counter()
-    nthreads = num_threads or min(16, len(by_writer)) or 1
-    if len(by_writer) <= 1:
-        for recs in by_writer.values():
-            run_writer(recs)
-    else:
-        with ThreadPoolExecutor(max_workers=nthreads) as ex:
-            list(ex.map(run_writer, by_writer.values()))
-    if fsync:
-        for fd in fds.values():
-            os.fsync(fd)
-    write_seconds = time.perf_counter() - t0
-    for fd in fds.values():
-        os.close(fd)
-
-    # -- metadata ------------------------------------------------------------
-    if index is None:
-        index = DatasetIndex()
-    index.add_variable(name, plan.global_shape, dtype, plan.strategy)
-    for cp, buf, sf, off in placed:
-        index.chunks.append(ChunkRecord(var=name, lo=cp.chunk.lo,
-                                        hi=cp.chunk.hi, subfile=sf,
-                                        offset=off, nbytes=buf.nbytes))
-    index.num_subfiles = max(index.num_subfiles, len(offsets))
-    index.save(dirpath)
-
-    stats = WriteStats(assemble_seconds=assemble_seconds,
-                       write_seconds=write_seconds,
-                       total_seconds=time.perf_counter() - t_start,
-                       bytes_written=sum(b.nbytes for b in buffers),
-                       num_extents=len(placed),
-                       num_subfiles=len(offsets))
-    return index, stats
+    warnings.warn("write_variable is deprecated; use Dataset.create(...)/"
+                  "Dataset.open(...) with plan_write + write_planned",
+                  DeprecationWarning, stacklevel=2)
+    ds = Dataset(dirpath, engine="pread", create=index is None, index=index)
+    try:
+        stats = ds.write_planned(ds.plan_write(name, plan, dtype, align=align),
+                                 data, fsync=fsync)
+    finally:
+        ds.close()
+    return ds.index, stats
 
 
 def rewrite_dataset(src_dir: str, dst_dir: str, var: str,
                     plan: LayoutPlan, num_threads: int | None = None,
                     align: int | None = None) -> tuple:
-    """Post-hoc reorganization (§5.1): read a variable back from ``src_dir``
+    """Deprecated: use :func:`repro.io.reader.reorganize`.
+
+    Post-hoc reorganization (§5.1): read a variable back from ``src_dir``
     and rewrite it to ``dst_dir`` under a new plan.  Returns
     (read_seconds, DatasetIndex, WriteStats)."""
-    from .reader import Dataset      # local import; reader imports format too
-    ds = Dataset(src_dir)
-    t0 = time.perf_counter()
-    # post-hoc reader pulls whatever regions the new plan's chunks need
-    data = {}
-    synth = []
-    for i, cp in enumerate(plan.chunks):
-        arr, _ = ds.read(var, cp.chunk)
-        blk = Block(cp.chunk.lo, cp.chunk.hi, owner=cp.writer, block_id=i)
-        synth.append(blk)
-        data[i] = arr
-    read_seconds = time.perf_counter() - t0
-    # rewrite with chunk==source identity
-    ident = LayoutPlan(strategy=plan.strategy,
-                       global_shape=plan.global_shape,
-                       chunks=tuple(ChunkPlan(chunk=b, sources=(b,),
-                                              writer=b.owner,
-                                              subfile=plan.chunks[i].subfile)
-                                    for i, b in enumerate(synth)),
-                       num_subfiles=plan.num_subfiles,
-                       inter_process_moved=plan.inter_process_moved,
-                       intra_node_moved=plan.intra_node_moved)
-    index, wstats = write_variable(dst_dir, var, ds.index.var_dtype(var),
-                                   ident, data, num_threads=num_threads,
-                                   align=align)
-    return read_seconds, index, wstats
+    warnings.warn("rewrite_dataset is deprecated; use repro.io.reorganize",
+                  DeprecationWarning, stacklevel=2)
+    read_seconds, dst, wstats = reorganize(src_dir, dst_dir, var, plan,
+                                           engine="pread", align=align)
+    dst.close()
+    return read_seconds, dst.index, wstats

@@ -1,7 +1,12 @@
 """Integration tests for the io substrate: every layout strategy must
 round-trip bit-exactly under whole-domain, sub-region, decomposed and
-pattern reads; staging and post-hoc reorganization must too."""
+pattern reads, through every execution engine; staging and post-hoc
+reorganization must too.  The write path must stay byte-identical to the
+seed writer (offset logic embedded below as the oracle), and a partially
+executed WritePlan must leave ``index.json`` unwritten."""
 
+import hashlib
+import json
 import os
 
 import numpy as np
@@ -11,8 +16,12 @@ from repro.core import (STRATEGIES, plan_layout, simulate_load_balance,
                         uniform_grid_blocks)
 from repro.core.blocks import Block
 from repro.core.read_patterns import PATTERNS, pattern_region
-from repro.io import (Dataset, StagingExecutor, gather_to_nodes,
-                      rewrite_dataset, write_variable)
+from repro.io import (Dataset, ENGINES, GPFS_BLOCK, PreadEngine,
+                      StagingExecutor, assemble_chunk, build_write_plan,
+                      gather_to_nodes, reorganize, rewrite_dataset,
+                      write_variable)
+from repro.io.format import (ChunkRecord, DatasetIndex, align_up,
+                             subfile_name)
 
 GLOBAL = (64, 64, 64)
 BLOCK = (16, 16, 16)
@@ -32,6 +41,14 @@ def world():
     return blocks, data, ref
 
 
+def _write(d, name, plan, data, dtype=np.float32, align=None,
+           engine="pread"):
+    ds = Dataset.create(d, engine=engine)
+    ws = ds.write_planned(ds.plan_write(name, plan, dtype, align=align), data)
+    ds.close()
+    return ws
+
+
 @pytest.mark.parametrize("strategy", STRATEGIES)
 def test_roundtrip_all_strategies(tmp_path, world, strategy):
     blocks, data, ref = world
@@ -41,9 +58,9 @@ def test_roundtrip_all_strategies(tmp_path, world, strategy):
                        num_stagers=2)
     if strategy == "merged_node":
         _, data, _ = gather_to_nodes(blocks, data, PPN)
-    _, ws = write_variable(d, "B", np.float32, plan, data)
+    ws = _write(d, "B", plan, data)
     assert ws.bytes_written >= ref.nbytes     # >= because reorg may pad
-    ds = Dataset(d)
+    ds = Dataset.open(d)
     arr, st = ds.read("B", Block((0, 0, 0), GLOBAL))
     np.testing.assert_array_equal(arr, ref)
     assert st.chunks_touched == plan.num_chunks
@@ -53,14 +70,50 @@ def test_roundtrip_all_strategies(tmp_path, world, strategy):
     np.testing.assert_array_equal(arr, ref[sub.slices()])
 
 
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+def test_engine_roundtrip(tmp_path, world, engine):
+    """Every engine must write and read every other engine's datasets."""
+    blocks, data, ref = world
+    d = str(tmp_path / f"eng_{engine}")
+    plan = plan_layout("merged_process", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    _write(d, "B", plan, data, engine=engine)
+    sub = Block((3, 0, 17), (64, 40, 60))
+    for read_engine in sorted(ENGINES):
+        ds = Dataset.open(d, engine=read_engine)
+        arr, st = ds.read("B", Block((0, 0, 0), GLOBAL))
+        np.testing.assert_array_equal(arr, ref)
+        arr, _ = ds.read("B", sub)
+        np.testing.assert_array_equal(arr, ref[sub.slices()])
+        ds.close()
+
+
+def test_engine_overlapped_depth_spec(tmp_path, world):
+    """'overlapped:<depth>' engine spec and per-call engine override."""
+    blocks, data, ref = world
+    d = str(tmp_path / "depth")
+    plan = plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    _write(d, "B", plan, data)
+    ds = Dataset.open(d, engine="overlapped:2")
+    assert ds.engine == "overlapped"
+    arr, _ = ds.read("B", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+    arr, _ = ds.read("B", Block((0, 0, 0), GLOBAL), engine="memmap")
+    np.testing.assert_array_equal(arr, ref)
+    with pytest.raises(ValueError):
+        Dataset.open(d, engine="io_uring")
+    ds.close()
+
+
 @pytest.mark.parametrize("pattern", PATTERNS)
 def test_patterns_and_decompositions(tmp_path, world, pattern):
     blocks, data, ref = world
     d = str(tmp_path / "ds")
     plan = plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
                        global_shape=GLOBAL)
-    write_variable(d, "B", np.float32, plan, data)
-    ds = Dataset(d)
+    _write(d, "B", plan, data)
+    ds = Dataset.open(d)
     region = pattern_region(pattern, GLOBAL)
     for scheme in [(1, 1, 1), (2, 1, 1), (1, 2, 2)]:
         st = ds.read_decomposed("B", region, scheme)
@@ -79,6 +132,173 @@ def test_merged_layouts_reduce_chunks(world):
     assert merged_n.num_chunks <= merged_p.num_chunks
 
 
+# -- write-plan structure ----------------------------------------------------
+
+def test_write_plan_sorted_and_coalesced(world):
+    blocks, _, _ = world
+    plan = plan_layout("chunked", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    wp = build_write_plan(plan, "B", np.float32)
+    # rows sorted by (subfile, offset), extents disjoint
+    order = np.lexsort((wp.file_lo, wp.subfiles))
+    assert (order == np.arange(wp.num_chunks)).all()
+    same = wp.subfiles[1:] == wp.subfiles[:-1]
+    assert (wp.file_lo[1:][same] >= wp.file_hi[:-1][same]).all()
+    # unaligned single-subfile append has zero padding: one group spanning
+    # exactly the payload
+    assert wp.num_groups == 1
+    assert wp.span_bytes == wp.bytes_total
+
+
+def test_write_plan_alignment_folded_in(world):
+    blocks, _, _ = world
+    plan = plan_layout("chunked", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    align = 1 << 20
+    wp = build_write_plan(plan, "B", np.float32, align=align)
+    assert (wp.file_lo % align == 0).all()
+    # every aligned extent starts its own group (16 KiB chunks << 1 MiB)
+    assert wp.num_groups == wp.num_chunks
+    # appending continues past the existing end, aligned up
+    wp2 = build_write_plan(plan, "E", np.float32, align=align,
+                           base_offsets=wp.file_sizes)
+    assert int(wp2.file_lo.min()) == align_up(wp.file_sizes[0], align)
+
+
+# -- byte-identity vs the seed writer ---------------------------------------
+
+def _seed_write_variable(dirpath, name, dtype, plan, data, align=None,
+                         index=None):
+    """The pre-refactor writer's exact offset/append/ftruncate logic,
+    kept verbatim as the byte-identity oracle."""
+    os.makedirs(dirpath, exist_ok=True)
+    dtype = np.dtype(dtype)
+    buffers = [assemble_chunk(cp, data, dtype) for cp in plan.chunks]
+    offsets = {}
+    if index is not None:
+        for rec in index.chunks:
+            end = rec.offset + rec.nbytes
+            if end > offsets.get(rec.subfile, 0):
+                offsets[rec.subfile] = end
+    placed = []
+    for cp, buf in zip(plan.chunks, buffers):
+        off = align_up(offsets.get(cp.subfile, 0), align)
+        placed.append((cp, buf, cp.subfile, off))
+        offsets[cp.subfile] = off + buf.nbytes
+    fds = {}
+    for sf, end in offsets.items():
+        fd = os.open(os.path.join(dirpath, subfile_name(sf)),
+                     os.O_RDWR | os.O_CREAT)
+        os.ftruncate(fd, max(end, os.fstat(fd).st_size))
+        fds[sf] = fd
+    for cp, buf, sf, off in placed:
+        os.pwrite(fds[sf], memoryview(buf.reshape(-1).view(np.uint8)), off)
+    for fd in fds.values():
+        os.close(fd)
+    if index is None:
+        index = DatasetIndex()
+    index.add_variable(name, plan.global_shape, dtype, plan.strategy)
+    for cp, buf, sf, off in placed:
+        index.chunks.append(ChunkRecord(var=name, lo=cp.chunk.lo,
+                                        hi=cp.chunk.hi, subfile=sf,
+                                        offset=off, nbytes=buf.nbytes))
+    index.num_subfiles = max(index.num_subfiles, len(offsets))
+    index.save(dirpath)
+    return index
+
+
+def _file_digest(path):
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(1 << 22)
+            if not chunk:
+                break
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _assert_datasets_bit_identical(d_a, d_b, compare_index=True):
+    bins_a = sorted(f for f in os.listdir(d_a) if f.endswith(".bin"))
+    bins_b = sorted(f for f in os.listdir(d_b) if f.endswith(".bin"))
+    assert bins_a == bins_b
+    for f in bins_a:
+        pa, pb = os.path.join(d_a, f), os.path.join(d_b, f)
+        assert os.path.getsize(pa) == os.path.getsize(pb), f
+        assert _file_digest(pa) == _file_digest(pb), f
+    if compare_index:
+        with open(os.path.join(d_a, "index.json")) as f:
+            ja = json.load(f)
+        with open(os.path.join(d_b, "index.json")) as f:
+            jb = json.load(f)
+        assert ja == jb
+
+
+@pytest.mark.parametrize("align", [None, GPFS_BLOCK],
+                         ids=["unaligned", "gpfs16M"])
+@pytest.mark.parametrize("strategy", ["chunked", "subfiled_fpp",
+                                      "merged_process", "reorganized"])
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+def test_engine_write_matches_seed_writer(tmp_path, align, strategy, engine):
+    """WritePlan + every engine produce datasets byte-identical to the seed
+    writer — data subfiles AND index.json — for two appended variables."""
+    rng = np.random.default_rng(3)
+    gshape = (32, 32, 32)          # small world: 16 MiB alignment => ~100 MB
+    blocks = simulate_load_balance(uniform_grid_blocks(gshape, (16, 16, 16)),
+                                   num_procs=4, seed=3)
+    data = {b.block_id: rng.standard_normal(b.shape).astype(np.float32)
+            for b in blocks}
+    data2 = {k: v * 2 for k, v in data.items()}
+    plan = plan_layout(strategy, blocks, num_procs=4, procs_per_node=2,
+                       global_shape=gshape, reorg_scheme=(2, 2, 2),
+                       num_stagers=2)
+    d_seed = str(tmp_path / "seed")
+    idx = _seed_write_variable(d_seed, "B", np.float32, plan, data,
+                               align=align)
+    _seed_write_variable(d_seed, "E", np.float32, plan, data2, align=align,
+                         index=idx)
+
+    d_new = str(tmp_path / "new")
+    ds = Dataset.create(d_new, engine=engine)
+    ds.write("B", plan, np.float32, data, align=align)
+    ds.write("E", plan, np.float32, data2, align=align)
+    ds.close()
+    _assert_datasets_bit_identical(d_seed, d_new)
+
+
+# -- crash consistency -------------------------------------------------------
+
+class _CrashAfterFirstGroup(PreadEngine):
+    """Writes the first extent group, then dies mid-plan."""
+
+    name = "crash-test"
+
+    def write_plan(self, plan, buffers, store):
+        self._write_group(plan, 0, buffers, store)
+        raise OSError("injected crash after first group")
+
+
+def test_partial_write_plan_leaves_index_unwritten(tmp_path, world):
+    blocks, data, _ = world
+    d = str(tmp_path / "crash")
+    plan = plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    ds = Dataset.create(d, engine=_CrashAfterFirstGroup())
+    wplan = ds.plan_write("B", plan, np.float32)
+    assert wplan.num_groups > 1
+    with pytest.raises(OSError, match="injected crash"):
+        ds.write_planned(wplan, data)
+    # data extents may exist (dead space), but the commit never happened:
+    assert not os.path.exists(os.path.join(d, "index.json"))
+    assert "B" not in ds.index.variables and not ds.index.chunks
+    ds.close()
+    # the next session sees no dataset at all
+    with pytest.raises(FileNotFoundError):
+        Dataset.open(d)
+
+
+# -- staging -----------------------------------------------------------------
+
 def test_staging_executor_roundtrip(tmp_path, world):
     blocks, data, ref = world
     sd = str(tmp_path / "staged")
@@ -92,7 +312,7 @@ def test_staging_executor_roundtrip(tmp_path, world):
     ex.close()
     assert [r.step for r in results] == [0, 1, 2]
     assert all(r.num_chunks == 8 for r in results)
-    ds = Dataset(sd)
+    ds = Dataset.open(sd)
     for step in range(3):
         arr, _ = ds.read(f"B@{step}", Block((0, 0, 0), GLOBAL))
         np.testing.assert_array_equal(arr, ref)
@@ -113,20 +333,55 @@ def test_staging_blocking_regime(tmp_path, world):
     assert len(stalls) == 6     # completed despite backpressure
 
 
-def test_posthoc_rewrite(tmp_path, world):
+@pytest.mark.parametrize("align", [None, GPFS_BLOCK],
+                         ids=["unaligned", "gpfs16M"])
+def test_staging_bit_identical_to_writer(tmp_path, align):
+    """Regression for the historical off-by-alignment drift: staging appends
+    (which used to re-implement align_up) must produce datasets bit-identical
+    to writer appends for the same LayoutPlan sequence."""
+    rng = np.random.default_rng(11)
+    gshape = (32, 32, 32)
+    blocks = simulate_load_balance(uniform_grid_blocks(gshape, (16, 16, 16)),
+                                   num_procs=4, seed=7)
+    data = {b.block_id: rng.standard_normal(b.shape).astype(np.float32)
+            for b in blocks}
+    plan = plan_layout("reorganized", blocks, num_procs=4,
+                       global_shape=gshape, reorg_scheme=(2, 2, 2),
+                       num_stagers=2)
+
+    sd = str(tmp_path / "staged")
+    # one worker => deterministic append order across steps
+    ex = StagingExecutor(sd, num_workers=1, queue_depth=2, align=align)
+    for step in range(2):
+        ex.submit(step, "B", np.float32, plan, data)
+    ex.drain()
+    ex.close()
+
+    wd = str(tmp_path / "written")
+    ds = Dataset.create(wd, engine="pread")
+    for step in range(2):
+        ds.write(f"B@{step}", plan, np.float32, data, align=align)
+    ds.close()
+    _assert_datasets_bit_identical(sd, wd)
+
+
+# -- post-hoc reorganization -------------------------------------------------
+
+def test_posthoc_reorganize(tmp_path, world):
     blocks, data, ref = world
     src = str(tmp_path / "src")
     dst = str(tmp_path / "dst")
     plan = plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
                        global_shape=GLOBAL)
-    write_variable(src, "B", np.float32, plan, data)
+    _write(src, "B", plan, data)
     reorg = plan_layout("reorganized", blocks, num_procs=NPROCS,
                         global_shape=GLOBAL, reorg_scheme=(4, 4, 4))
-    read_s, idx, ws = rewrite_dataset(src, dst, "B", reorg)
-    ds = Dataset(dst)
-    arr, st = ds.read("B", Block((0, 0, 0), GLOBAL))
+    read_s, dst_ds, ws = reorganize(src, dst, "B", reorg)
+    assert ws.num_extents == 64
+    arr, st = dst_ds.read("B", Block((0, 0, 0), GLOBAL))
     np.testing.assert_array_equal(arr, ref)
     assert st.chunks_touched == 64
+    dst_ds.close()
 
 
 def test_multiple_variables_one_dataset(tmp_path, world):
@@ -134,11 +389,40 @@ def test_multiple_variables_one_dataset(tmp_path, world):
     d = str(tmp_path / "multi")
     plan = plan_layout("chunked", blocks, num_procs=NPROCS,
                        global_shape=GLOBAL)
-    idx, _ = write_variable(d, "B", np.float32, plan, data)
+    ds = Dataset.create(d)
+    ds.write("B", plan, np.float32, data)
     data2 = {k: v * 2 for k, v in data.items()}
-    write_variable(d, "E", np.float32, plan, data2, index=idx)
-    ds = Dataset(d)
+    ds.write("E", plan, np.float32, data2)
+    ds.close()
+    ds = Dataset.open(d)
     arr, _ = ds.read("E", Block((0, 0, 0), GLOBAL))
     np.testing.assert_array_equal(arr, ref * 2)
     arr, _ = ds.read("B", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+
+
+# -- deprecated shims (one release) ------------------------------------------
+
+def test_deprecated_shims_still_work(tmp_path, world):
+    blocks, data, ref = world
+    d = str(tmp_path / "shim")
+    plan = plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    with pytest.deprecated_call():
+        idx, ws = write_variable(d, "B", np.float32, plan, data)
+    assert ws.bytes_written == ref.nbytes
+    data2 = {k: v + 1 for k, v in data.items()}
+    with pytest.deprecated_call():
+        write_variable(d, "E", np.float32, plan, data2, index=idx)
+    ds = Dataset.open(d)
+    arr, _ = ds.read("E", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref + 1)
+    reorg = plan_layout("reorganized", blocks, num_procs=NPROCS,
+                        global_shape=GLOBAL, reorg_scheme=(2, 2, 2))
+    with pytest.deprecated_call():
+        read_s, ridx, ws = rewrite_dataset(d, str(tmp_path / "shim_dst"),
+                                           "B", reorg)
+    assert ws.num_extents == 8
+    arr, _ = Dataset.open(str(tmp_path / "shim_dst")).read(
+        "B", Block((0, 0, 0), GLOBAL))
     np.testing.assert_array_equal(arr, ref)

@@ -16,7 +16,7 @@ from repro.core import STRATEGIES, plan_layout, simulate_load_balance, \
     uniform_grid_blocks
 from repro.core.blocks import Block
 from repro.io import (Dataset, SpatialChunkIndex, build_read_plan,
-                      linear_candidates, write_variable)
+                      linear_candidates)
 from repro.io.format import DatasetIndex
 
 GLOBAL = (64, 64, 64)
@@ -35,6 +35,13 @@ def world():
     for b in blocks:
         ref[b.slices()] = data[b.block_id]
     return blocks, data, ref
+
+
+def _write(d, name, plan, data):
+    ds = Dataset.create(d)
+    ds.write(name, plan, np.float32, data)
+    ds.close()
+    return ds.index
 
 
 def _random_regions(rng, n=12):
@@ -62,7 +69,7 @@ def test_indexed_reads_match_linear_oracle(tmp_path, world, strategy):
     if strategy == "merged_node":
         from repro.io import gather_to_nodes
         _, wdata, _ = gather_to_nodes(blocks, data, 4)
-    write_variable(d, "B", np.float32, plan, wdata)
+    _write(d, "B", plan, wdata)
     ds = Dataset(d)
     rows = ds.index.var_rows("B")
     sp = ds.index.spatial_index("B")
@@ -85,7 +92,7 @@ def test_empty_intersection_region(tmp_path, world):
     d = str(tmp_path / "empty")
     plan = plan_layout("chunked", blocks, num_procs=NPROCS,
                        global_shape=(128, 64, 64))
-    write_variable(d, "B", np.float32, plan, data)
+    _write(d, "B", plan, data)
     ds = Dataset(d)
     region = Block((100, 0, 0), (120, 8, 8))    # past every stored chunk
     arr, st = ds.read("B", region)
@@ -99,7 +106,7 @@ def test_plan_structure_invariants(tmp_path, world):
     d = str(tmp_path / "inv")
     plan = plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
                        global_shape=GLOBAL)
-    write_variable(d, "B", np.float32, plan, data)
+    _write(d, "B", plan, data)
     ds = Dataset(d)
     rng = np.random.default_rng(5)
     for region in _random_regions(rng, n=6):
@@ -130,7 +137,7 @@ def test_candidate_narrowing_matches_full_probe(tmp_path, world):
     d = str(tmp_path / "narrow")
     plan = plan_layout("chunked", blocks, num_procs=NPROCS,
                        global_shape=GLOBAL)
-    write_variable(d, "B", np.float32, plan, data)
+    _write(d, "B", plan, data)
     ds = Dataset(d)
     region = Block((4, 4, 4), (60, 60, 60))
     sp = ds.index.spatial_index("B")
@@ -148,7 +155,7 @@ def test_spatial_index_persistence_roundtrip(tmp_path, world):
     d = str(tmp_path / "persist")
     plan = plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
                        global_shape=GLOBAL)
-    write_variable(d, "B", np.float32, plan, data)
+    _write(d, "B", plan, data)
     with open(os.path.join(d, "index.json")) as f:
         payload = json.load(f)
     assert payload["version"] == 2
@@ -169,7 +176,7 @@ def test_v1_index_without_spatial_payload_still_reads(tmp_path, world):
     d = str(tmp_path / "v1")
     plan = plan_layout("chunked", blocks, num_procs=NPROCS,
                        global_shape=GLOBAL)
-    write_variable(d, "B", np.float32, plan, data)
+    _write(d, "B", plan, data)
     path = os.path.join(d, "index.json")
     with open(path) as f:
         payload = json.load(f)
@@ -187,10 +194,13 @@ def test_appended_variable_invalidates_cache(tmp_path, world):
     d = str(tmp_path / "append")
     plan = plan_layout("chunked", blocks, num_procs=NPROCS,
                        global_shape=GLOBAL)
-    idx, _ = write_variable(d, "B", np.float32, plan, data)
+    sess = Dataset.create(d)
+    sess.write("B", plan, np.float32, data)
+    idx = sess.index
     _ = idx.spatial_index("B")           # warm the cache
     data2 = {k: v * 3 for k, v in data.items()}
-    write_variable(d, "E", np.float32, plan, data2, index=idx)
+    sess.write("E", plan, np.float32, data2)
+    sess.close()
     # the same index object must see the appended records
     sub = Block((3, 3, 3), (40, 41, 42))
     got = idx.spatial_index("E").query(sub.lo, sub.hi)
