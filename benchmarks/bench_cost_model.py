@@ -11,9 +11,11 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import plan_layout
+from repro.core.blocks import Block
 from repro.core.cost_model import (PAPER_TIMINGS, StagingTimings,
-                                   breakeven_outputs, onthefly_utilization,
-                                   posthoc_utilization,
+                                   breakeven_outputs, choose_engine,
+                                   onthefly_utilization,
+                                   posthoc_utilization, storage_calibration,
                                    tc_lower_bound_blocking,
                                    tc_upper_bound_nonblocking)
 from repro.core.reorg import decide
@@ -66,3 +68,25 @@ def run(tmp: TmpDir) -> None:
              f"choose={d.mode};blocking={d.blocking};"
              f"breakeven_N={d.breakeven_N};Uo={d.utilization_on_the_fly:.0f};"
              f"Up={d.utilization_post_hoc:.0f}")
+
+    # per-engine cost model (ISSUE 3): calibrate the container's storage,
+    # then predict + record the decision for a real grouped-read plan
+    cal = storage_calibration(tmp.path, use_cache=False)
+    emit("engine_model/calibration",
+         cal.seek_latency_s * 1e6,
+         f"seq_read_GBps={cal.seq_read_bps / 1e9:.2f};"
+         f"memmap_GBps={cal.memmap_bps / 1e9:.2f};"
+         f"page_miss_us={cal.page_miss_s * 1e6:.2f};"
+         f"preadv_ovh_us={cal.preadv_group_overhead_s * 1e6:.2f};"
+         f"parallel_x={cal.parallel_scaling:.1f}")
+    from repro.io import Dataset
+    ds = Dataset.open(tmp.sub("cm_direct"), engine="auto", calibration=cal)
+    rplan = ds.plan_read("B", Block((0, 0, 0), GLOBAL))
+    choice = choose_engine(cal, groups=rplan.num_groups, runs=rplan.runs,
+                           bytes_moved=rplan.bytes_needed,
+                           span_bytes=rplan.span_bytes)
+    (_, st), meas_s = timed(ds.read_planned, rplan, repeats=3)
+    emit("engine_model/decision", choice.predicted_seconds * 1e6,
+         f"chose={choice.engine};measured_us={meas_s * 1e6:.0f};"
+         f"groups={rplan.num_groups};runs={rplan.runs}")
+    ds.close()

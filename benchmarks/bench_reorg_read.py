@@ -110,14 +110,22 @@ def _engine_comparison(tmp: TmpDir) -> None:
     rplan = ds.plan_read("B", Block((0, 0, 0), gshape))
     out = np.empty(rplan.region.shape, dtype=rplan.dtype)
     secs = {}
-    for eng in ("memmap", "pread", "overlapped"):
+    chosen = {}
+    for eng in ("memmap", "pread", "overlapped", "auto"):
         # repeats keep the page-cache state comparable across engines
-        _, secs[eng] = timed(ds.read_planned, rplan, out, engine=eng,
-                             repeats=5)
+        (_, st), secs[eng] = timed(ds.read_planned, rplan, out, engine=eng,
+                                   repeats=5)
+        chosen[eng] = st.engine
         emit(f"fig15_reorg/engines/{eng}", secs[eng] * 1e6,
              f"groups={rplan.num_groups};runs={rplan.runs};"
              f"MB={rplan.bytes_needed / 1e6:.0f};"
-             f"GBps={rplan.bytes_needed / max(secs[eng], 1e-9) / 1e9:.2f}")
+             f"GBps={rplan.bytes_needed / max(secs[eng], 1e-9) / 1e9:.2f}"
+             + (f";chose={st.engine}" if eng == "auto" else ""))
+    best_static = min(("memmap", "pread", "overlapped"),
+                      key=lambda k: secs[k])
+    emit("fig15_reorg/engines/auto_vs_best_static",
+         secs["auto"] / max(secs[best_static], 1e-12),
+         f"chose={chosen['auto']};best={best_static}")
     emit("fig15_reorg/engines/overlap_speedup_vs_pread",
          secs["pread"] / max(secs["overlapped"], 1e-12),
          f"depth=8;pread_ms={secs['pread'] * 1e3:.1f};"

@@ -20,7 +20,10 @@ every variable with ``Dataset.plan_write`` (one session per step dir),
 restore probes each variable's spatial index once and replays per-shard
 :class:`~repro.io.planner.ReadPlan`\\ s via ``read_planned`` —
 :class:`RestoreStats` reports the per-variable :class:`~repro.io.reader.
-ReadStats` alongside the aggregate.
+ReadStats` alongside the aggregate, including which engine executed each
+variable's plans and why (``engine``/``engine_reason``; useful with
+``engine="auto"``, where the choice may differ between a merged save
+layout and a fragmented restore pattern).
 """
 
 from __future__ import annotations

@@ -7,6 +7,7 @@ Public surface:
   layouts         the seven layout strategies as pure index-space plans
   read_patterns   the six Fig.-6 read patterns + reader decompositions
   cost_model      §5.2 resource-utilization model (on-the-fly vs post-hoc)
+                  + the per-engine cost model behind engine="auto"
   reorg           reorganization planning + policy
 """
 
@@ -14,8 +15,11 @@ from .blocks import (Block, bounding_box, total_volume, blocks_disjoint,
                      uniform_grid_blocks, simulate_load_balance,
                      regular_decomposition, shard_grid_blocks)
 from .clustering import Cluster, cluster_blocks, merged_block_counts
-from .cost_model import (PAPER_TIMINGS, StagingTimings, breakeven_outputs,
-                         onthefly_utilization, posthoc_utilization, recommend)
+from .cost_model import (PAPER_TIMINGS, EngineCalibration, EngineChoice,
+                         StagingTimings, breakeven_outputs, choose_engine,
+                         load_calibration, onthefly_utilization,
+                         posthoc_utilization, predict_seconds, probe_storage,
+                         recommend, save_calibration, storage_calibration)
 from .layouts import (DEFAULT_REORG_SCHEME, STRATEGIES, ChunkPlan, LayoutPlan,
                       plan_layout)
 from .merge import (MergePlan, MergeStats, build_merge_plan,

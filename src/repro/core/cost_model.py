@@ -1,5 +1,18 @@
-"""Resource-utilization model for online vs. post-hoc layout reorganization
-(paper §5.2, Table 1/2).
+"""Cost models for layout reorganization and engine selection.
+
+Two related models live here:
+
+1. the paper's **resource-utilization model** for online vs. post-hoc
+   layout reorganization (§5.2, Table 1/2) — ``StagingTimings`` and the
+   ``*_utilization`` / ``breakeven_*`` functions below;
+2. the **per-engine cost model** behind ``engine="auto"`` (ISSUE 3):
+   an :class:`EngineCalibration` measured by a short micro-probe against
+   the actual storage target (:func:`probe_storage`), persisted as
+   ``calibration.json`` next to ``index.json``, and
+   :func:`choose_engine`, which predicts per-engine wall time from plan
+   shape (coalesced groups, contiguous runs, bytes) and picks an engine
+   plus a queue depth.  See ``docs/engine_selection.md`` for the model
+   walkthrough.
 
 Symbols (paper Table 1):
   t_c   computation time between two outputs
@@ -28,12 +41,24 @@ functions below and asserted in tests/test_cost_model.py.
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import json
 import math
+import mmap
+import os
+import random
+import time
+from concurrent.futures import ThreadPoolExecutor
 
 __all__ = ["StagingTimings", "PAPER_TIMINGS", "posthoc_utilization",
            "onthefly_utilization", "is_blocking", "breakeven_outputs",
            "tc_lower_bound_blocking", "tc_upper_bound_nonblocking",
-           "recommend"]
+           "recommend",
+           # engine selection (ISSUE 3)
+           "EngineCalibration", "EngineChoice", "CALIBRATION_NAME",
+           "CALIBRATION_TTL_S", "FALLBACK_CALIBRATION", "probe_storage",
+           "save_calibration", "load_calibration", "storage_calibration",
+           "predict_seconds", "choose_engine"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +133,368 @@ def tc_upper_bound_nonblocking(t: StagingTimings, N: int) -> float:
     num = t.n * t.t_w_sim * N + t.m * (t.t_r_stage + t.t_w_stage) * N \
         - (t.n + t.m) * pipe
     return num / (t.m * N)
+
+
+# ---------------------------------------------------------------------------
+# Per-engine cost model + storage micro-probe (ISSUE 3: engine="auto")
+# ---------------------------------------------------------------------------
+
+#: file persisted next to index.json
+CALIBRATION_NAME = "calibration.json"
+CALIBRATION_VERSION = 1
+#: persisted calibrations older than this are re-probed
+CALIBRATION_TTL_S = 7 * 24 * 3600.0
+#: probe file size — small enough that calibration costs tens of ms
+PROBE_BYTES = 4 << 20
+#: queue depths `choose_engine` evaluates for the overlapped engine
+DEPTH_CANDIDATES = (2, 4, 8, 16, 32)
+
+#: disambiguates concurrent probe scratch files within one process
+_probe_counter = itertools.count()
+
+#: per-group submission-pool handoff cost (submit + worker wakeup) charged
+#: to the overlapped engine: when the probe measures no parallel benefit
+#: and per-group latency is already tiny, this is what makes serial pread
+#: win — overlap must buy more than its bookkeeping
+DISPATCH_OVERHEAD_S = 25e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineCalibration:
+    """Measured storage behavior of one dataset directory's device.
+
+    All quantities come from :func:`probe_storage`'s micro-probe against a
+    scratch file in the dataset directory, so they reflect the *actual*
+    storage target — page-cache-hot local disk and genuinely cold network
+    storage yield very different constants, which is exactly what makes the
+    engine choice flip between regimes.
+    """
+
+    seek_latency_s: float           # one small random pread (seek + syscall)
+    preadv_group_overhead_s: float  # extra cost of a vectored group call
+    seq_read_bps: float             # sequential pread bandwidth
+    seq_write_bps: float            # sequential buffered pwrite bandwidth
+    memmap_bps: float               # bulk copy through a memory map
+    page_miss_s: float              # one page touch through a map (C speed)
+    parallel_scaling: float         # measured speedup of 4-way threaded reads
+    probe_bytes: int = PROBE_BYTES
+    created_at: float = 0.0         # wall-clock seconds (time.time())
+    version: int = CALIBRATION_VERSION
+    memmap_write_bps: float = 0.0   # store into fresh (fault-on-dirty) pages;
+    # 0.0 (a pre-field calibration.json) falls back to memmap_bps
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "EngineCalibration":
+        fields = {f.name for f in dataclasses.fields(EngineCalibration)}
+        return EngineCalibration(**{k: v for k, v in d.items()
+                                    if k in fields})
+
+    def age_s(self, now: float | None = None) -> float:
+        return (time.time() if now is None else now) - self.created_at
+
+    def is_stale(self, max_age_s: float = CALIBRATION_TTL_S,
+                 now: float | None = None) -> bool:
+        return (self.version != CALIBRATION_VERSION
+                or self.age_s(now) > max_age_s or self.age_s(now) < 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineChoice:
+    """The selection-decision record surfaced through Read/WriteStats."""
+
+    engine: str                 # engine spec, e.g. "memmap" / "overlapped:8"
+    depth: int | None           # queue depth when overlapped was picked
+    predicted_seconds: float
+    predictions: dict           # engine spec -> predicted seconds
+    reason: str                 # human-readable why
+
+
+def _timed_calls(fn, n: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def probe_storage(dirpath: str,
+                  probe_bytes: int = PROBE_BYTES) -> EngineCalibration:
+    """Micro-probe ``dirpath``'s storage: write a scratch file, measure
+    sequential read/write bandwidth, small-random-read latency, vectored
+    group-call overhead, memory-map bandwidth/page-touch cost, and the
+    achieved speedup of 4-way threaded reads.  The scratch file is removed
+    before returning.  Total cost is tens of milliseconds.
+    """
+    # unique scratch name: concurrent probes (two sessions, two processes,
+    # a shared temp dir) must never truncate each other's file mid-mmap
+    path = os.path.join(dirpath, f".calibration_probe.{os.getpid()}."
+                                 f"{next(_probe_counter)}.bin")
+    rng = random.Random(0x5EED)
+    chunk = os.urandom(1 << 20)
+    nchunks = max(1, probe_bytes // len(chunk))
+    size = nchunks * len(chunk)
+    fd = None
+    try:
+        # sequential buffered write bandwidth (engines don't fsync by
+        # default, so neither does the probe's timed section)
+        fd = os.open(path, os.O_RDWR | os.O_CREAT | os.O_TRUNC)
+        t0 = time.perf_counter()
+        for _ in range(nchunks):
+            os.write(fd, chunk)
+        seq_write_bps = size / max(time.perf_counter() - t0, 1e-9)
+
+        # sequential read bandwidth (1 MiB preads)
+        t0 = time.perf_counter()
+        off = 0
+        while off < size:
+            off += len(os.pread(fd, 1 << 20, off))
+        seq_read_bps = size / max(time.perf_counter() - t0, 1e-9)
+
+        # small-random-read latency (seek + syscall)
+        offsets = [rng.randrange(0, size - 4096) & ~4095 for _ in range(128)]
+        it = iter(offsets * 4)
+        seek_latency_s = _timed_calls(lambda: os.pread(fd, 4096, next(it)),
+                                      128)
+
+        # vectored group overhead: an 8-iovec preadv vs a single pread
+        bufs = [bytearray(4096) for _ in range(8)]
+        it2 = iter(offsets * 4)
+        if hasattr(os, "preadv"):
+            per_group = _timed_calls(
+                lambda: os.preadv(fd, bufs, next(it2)), 64)
+        else:                        # pragma: no cover - non-posix fallback
+            per_group = seek_latency_s
+        preadv_group_overhead_s = max(per_group - seek_latency_s, 0.0)
+
+        # memory-map bulk bandwidth + per-page touch cost.  Page touches are
+        # measured at C speed (one strided numpy pass over every page), not
+        # per Python call — the engines' strided scatters run inside numpy,
+        # so Python call overhead must not be attributed to the map.
+        import numpy as _np
+        mm = mmap.mmap(fd, size, prot=mmap.PROT_READ)
+        t0 = time.perf_counter()
+        bytes(mm)
+        memmap_bps = size / max(time.perf_counter() - t0, 1e-9)
+        view = _np.frombuffer(mm, dtype=_np.uint8)
+        pages = view[::4096]
+        t0 = time.perf_counter()
+        reps = 4
+        for _ in range(reps):
+            int(pages.sum())
+        page_miss_s = (time.perf_counter() - t0) / (reps * len(pages))
+        del pages, view       # release buffer exports so the map can close
+        mm.close()
+
+        # memory-map store bandwidth into fresh pages: extend the file and
+        # dirty never-touched pages through a writable map (fault + zero
+        # fill + dirty accounting — the memmap engine's write-side cost)
+        os.ftruncate(fd, 2 * size)
+        wmm = mmap.mmap(fd, 2 * size)
+        try:
+            t0 = time.perf_counter()
+            wmm[size:2 * size] = b"\0" * size
+            memmap_write_bps = size / max(time.perf_counter() - t0, 1e-9)
+        finally:
+            wmm.close()
+        os.ftruncate(fd, size)
+
+        # achieved speedup of 4 concurrent 256 KiB reads vs serial
+        read_offs = [rng.randrange(0, size - (1 << 18)) for _ in range(16)]
+        t0 = time.perf_counter()
+        for o in read_offs:
+            os.pread(fd, 1 << 18, o)
+        serial = time.perf_counter() - t0
+        with ThreadPoolExecutor(max_workers=4) as ex:
+            t0 = time.perf_counter()
+            list(ex.map(lambda o: os.pread(fd, 1 << 18, o), read_offs))
+            threaded = time.perf_counter() - t0
+        parallel_scaling = min(8.0, max(1.0, serial / max(threaded, 1e-9)))
+    finally:
+        if fd is not None:
+            os.close(fd)
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
+    return EngineCalibration(
+        seek_latency_s=seek_latency_s,
+        preadv_group_overhead_s=preadv_group_overhead_s,
+        seq_read_bps=seq_read_bps, seq_write_bps=seq_write_bps,
+        memmap_bps=memmap_bps, page_miss_s=page_miss_s,
+        parallel_scaling=parallel_scaling, probe_bytes=size,
+        created_at=time.time(), memmap_write_bps=memmap_write_bps)
+
+
+def save_calibration(cal: EngineCalibration, dirpath: str) -> None:
+    """Persist ``calibration.json`` next to ``index.json`` (atomic replace)."""
+    tmp = os.path.join(dirpath, CALIBRATION_NAME + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(cal.to_json(), f)
+    os.replace(tmp, os.path.join(dirpath, CALIBRATION_NAME))
+
+
+def load_calibration(dirpath: str,
+                     max_age_s: float = CALIBRATION_TTL_S
+                     ) -> EngineCalibration | None:
+    """Load a persisted calibration; ``None`` when missing, unparseable,
+    version-mismatched, or older than ``max_age_s`` (staleness)."""
+    path = os.path.join(dirpath, CALIBRATION_NAME)
+    try:
+        with open(path) as f:
+            cal = EngineCalibration.from_json(json.load(f))
+    except (OSError, ValueError, TypeError, KeyError):
+        return None
+    return None if cal.is_stale(max_age_s) else cal
+
+
+#: one calibration per storage device (st_dev) — datasets on the same
+#: filesystem share a probe instead of re-measuring per directory
+_device_cache: dict = {}
+
+#: last resort when nothing is probeable (read-only dataset on a read-only
+#: machine): hot-page-cache-shaped constants, which make `auto` behave like
+#: the historical memmap default — conservative, never a crash
+FALLBACK_CALIBRATION = EngineCalibration(
+    seek_latency_s=5e-6, preadv_group_overhead_s=2e-6, seq_read_bps=2e9,
+    seq_write_bps=1e9, memmap_bps=4e9, page_miss_s=2e-7,
+    parallel_scaling=2.0, probe_bytes=0, created_at=0.0)
+
+
+def storage_calibration(dirpath: str,
+                        max_age_s: float = CALIBRATION_TTL_S,
+                        probe_bytes: int = PROBE_BYTES,
+                        use_cache: bool = True) -> EngineCalibration:
+    """The calibration for ``dirpath``: persisted file if fresh, else the
+    per-device cache, else a fresh :func:`probe_storage` (persisted
+    best-effort).  Never raises for an unprobeable (e.g. read-only
+    archival) directory: it falls back to probing scratch space, then to
+    :data:`FALLBACK_CALIBRATION` — reads on read-only media must work."""
+    cal = load_calibration(dirpath, max_age_s) if use_cache else None
+    if cal is not None:
+        return cal
+    try:
+        dev = os.stat(dirpath).st_dev
+    except OSError:
+        dev = None
+    if use_cache and dev is not None:
+        cal = _device_cache.get(dev)
+        if cal is not None and not cal.is_stale(max_age_s):
+            try:                     # persist next to this dataset's index
+                save_calibration(cal, dirpath)
+            except OSError:
+                pass
+            return cal
+    try:
+        cal = probe_storage(dirpath, probe_bytes=probe_bytes)
+    except OSError:
+        # read-only dataset dir: probe scratch space instead (possibly a
+        # different device — still far better than crashing the read path)
+        import tempfile
+        try:
+            cal = probe_storage(tempfile.gettempdir(),
+                                probe_bytes=probe_bytes)
+        except OSError:
+            return FALLBACK_CALIBRATION
+        if dev is not None:          # don't re-pay the probe every session
+            _device_cache[dev] = cal
+        return cal
+    if dev is not None:
+        _device_cache[dev] = cal
+    try:
+        save_calibration(cal, dirpath)
+    except OSError:                  # read-only dataset dir: stay in-memory
+        pass
+    return cal
+
+
+def predict_seconds(cal: EngineCalibration, engine: str, *, groups: int,
+                    runs: int, bytes_moved: int, span_bytes: int,
+                    direction: str = "read") -> float:
+    """Predicted wall seconds for one plan execution under ``engine``.
+
+    The model has two terms.  A **latency** term: grouped engines pay one
+    device round trip per coalesced group (``seek + preadv overhead``),
+    which the overlapped engine divides by its queue depth; the memmap
+    engine instead pays one page-touch per contiguous run (page faults are
+    what a map pays per discontiguity — measured hot they are tens of
+    nanoseconds, on cold storage they cost a full seek).  A **streaming**
+    term: grouped reads move ``span_bytes`` through the device sequentially
+    plus one memcpy of the payload out of the staging buffer; grouped
+    writes stream their span straight from the assembled buffers; memmap
+    moves the payload once through the map (reads at ``memmap_bps``, writes
+    at ``memmap_write_bps`` — dirtying fresh pages is much slower than
+    copying out of warm ones).  The overlapped engine's streaming term is
+    divided by the *measured* 4-way ``parallel_scaling`` (clamped to its
+    depth) — overlap helps exactly as much as the device/memory system
+    actually delivered in the probe.
+    """
+    base, _, arg = engine.partition(":")
+    if base == "memmap":
+        bw = cal.memmap_bps if direction == "read" else \
+            (cal.memmap_write_bps or cal.memmap_bps)
+        return runs * cal.page_miss_s + bytes_moved / bw
+    latency = groups * (cal.seek_latency_s + cal.preadv_group_overhead_s)
+    if direction == "read":
+        stream = span_bytes / cal.seq_read_bps + bytes_moved / cal.memmap_bps
+    else:
+        stream = span_bytes / cal.seq_write_bps
+    if base == "pread":
+        return latency + stream
+    if base == "overlapped":
+        depth = int(arg) if arg else 8
+        dd = max(1, min(depth, groups))
+        par = max(1.0, min(cal.parallel_scaling, float(dd)))
+        return latency / dd + stream / par + groups * DISPATCH_OVERHEAD_S
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+def choose_engine(cal: EngineCalibration, *, groups: int, runs: int,
+                  bytes_moved: int, span_bytes: int,
+                  direction: str = "read",
+                  depths: tuple = DEPTH_CANDIDATES) -> EngineChoice:
+    """Pick the engine (and queue depth) with the lowest predicted wall time
+    for a plan of this shape.  Ties prefer the simpler engine (memmap over
+    pread over overlapped, shallower queue over deeper).
+
+    >>> cold = EngineCalibration(seek_latency_s=1e-3,
+    ...     preadv_group_overhead_s=5e-6, seq_read_bps=2e9,
+    ...     seq_write_bps=1e9, memmap_bps=8e9, page_miss_s=1e-3,
+    ...     parallel_scaling=8.0, created_at=0.0)
+    >>> choose_engine(cold, groups=44, runs=4096, bytes_moved=64 << 20,
+    ...               span_bytes=64 << 20).engine
+    'overlapped:32'
+    >>> hot = EngineCalibration(seek_latency_s=3e-6,
+    ...     preadv_group_overhead_s=2e-6, seq_read_bps=4e9,
+    ...     seq_write_bps=3e9, memmap_bps=6e9, page_miss_s=3e-7,
+    ...     parallel_scaling=2.0, created_at=0.0)
+    >>> choose_engine(hot, groups=44, runs=4096, bytes_moved=64 << 20,
+    ...               span_bytes=64 << 20).engine
+    'memmap'
+    """
+    if groups <= 0 or bytes_moved <= 0:
+        return EngineChoice(engine="memmap", depth=None,
+                            predicted_seconds=0.0, predictions={},
+                            reason="empty plan")
+    shape = dict(groups=groups, runs=runs, bytes_moved=bytes_moved,
+                 span_bytes=span_bytes, direction=direction)
+    preds = {"memmap": predict_seconds(cal, "memmap", **shape),
+             "pread": predict_seconds(cal, "pread", **shape)}
+    for d in depths:
+        preds[f"overlapped:{d}"] = predict_seconds(cal, f"overlapped:{d}",
+                                                   **shape)
+    best = min(preds, key=lambda k: preds[k])   # insertion order breaks ties
+    alts = sorted((k for k in preds if k != best), key=lambda k: preds[k])
+    runner = alts[0]
+    base, _, arg = best.partition(":")
+    reason = (f"{direction} plan: groups={groups} runs={runs} "
+              f"bytes={bytes_moved}; predicted {best}="
+              f"{preds[best] * 1e3:.3f}ms vs {runner}="
+              f"{preds[runner] * 1e3:.3f}ms")
+    return EngineChoice(engine=best, depth=int(arg) if arg else None,
+                        predicted_seconds=preds[best], predictions=preds,
+                        reason=reason)
 
 
 def recommend(t: StagingTimings, t_c: float, N: int) -> dict:

@@ -2,7 +2,9 @@
 
 A :class:`LayoutPlan` describes *what chunks exist on storage and where each
 chunk's data comes from* — pure index-space planning, no I/O.  Execution
-(assembling buffers, writing files) lives in :mod:`repro.io.writer`.
+(extent planning, buffer assembly, engine dispatch) lives in
+:mod:`repro.io.planner` / :mod:`repro.io.engine` behind the
+:class:`repro.io.reader.Dataset` session.
 
 Strategies (paper names):
   contiguous      §2.1 logically contiguous — one global row-major chunk

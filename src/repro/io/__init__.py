@@ -1,25 +1,28 @@
 """I/O substrate: log-structured container, spatial chunk index, symmetric
 read/write extent plans, pluggable execution engines, staging.
 
-Public surface (ISSUE 2): :class:`Dataset` is the session object for both
-directions (``Dataset.create`` / ``Dataset.open``, ``plan_write`` +
-``write_planned``, ``plan_read`` + ``read_planned``); plans come from
+Public surface (ISSUE 2 + ISSUE 3): :class:`Dataset` is the session object
+for both directions (``Dataset.create`` / ``Dataset.open``, ``plan_write``
++ ``write_planned``, ``plan_read`` + ``read_planned``); plans come from
 :mod:`repro.io.planner` and are executed by an :class:`IOEngine`
-(``memmap`` / ``pread`` / ``overlapped``).  ``write_variable`` and
-``rewrite_dataset`` remain as deprecated shims for one release.
+(``memmap`` / ``pread`` / ``overlapped``), or by ``engine="auto"``, which
+picks an engine and queue depth per plan from a persisted storage
+calibration (see :mod:`repro.core.cost_model` and
+``docs/engine_selection.md``).  The deprecated ``write_variable`` /
+``rewrite_dataset`` shims were removed this release — use
+``Dataset.plan_write``/``write_planned`` and :func:`reorganize`.
 """
 
 from .aggregation import gather_to_nodes
 from .engine import (ENGINES, IOEngine, MemmapEngine, OverlappedPreadEngine,
                      PreadEngine, SubfileStore, WriteStats, assemble_chunk,
-                     get_engine)
+                     get_engine, validate_engine_spec)
 from .format import ChunkRecord, DatasetIndex, GPFS_BLOCK, VarRows
 from .planner import (ReadPlan, WritePlan, build_read_plan, build_write_plan,
                       linear_candidates)
 from .reader import Dataset, ReadStats, reorganize
 from .spatial import SpatialChunkIndex
 from .staging import StageResult, StagingExecutor
-from .writer import rewrite_dataset, write_variable   # deprecated shims
 
 __all__ = [
     # container + metadata
@@ -31,9 +34,8 @@ __all__ = [
     # engines
     "ENGINES", "IOEngine", "MemmapEngine", "PreadEngine",
     "OverlappedPreadEngine", "SubfileStore", "get_engine",
+    "validate_engine_spec",
     # session + execution
     "Dataset", "ReadStats", "WriteStats", "assemble_chunk", "reorganize",
     "StageResult", "StagingExecutor", "gather_to_nodes",
-    # deprecated shims (one release)
-    "rewrite_dataset", "write_variable",
 ]

@@ -11,11 +11,21 @@ Built-in engines:
 * ``memmap``     — zero-copy strided gathers/scatters through per-subfile
   memory maps (default; hot page cache);
 * ``pread``      — explicit ``os.preadv``/``os.pwritev`` vectored syscalls,
-  one per coalesced group, issued serially in ``(subfile, offset)`` order
-  (the cold-storage motif);
+  one per coalesced group, issued serially in ``(subfile, offset)`` order in
+  *both* directions (the cold-storage motif, and the serial baseline the
+  overlapped engine is measured against);
 * ``overlapped`` — the ``pread`` mechanism with a configurable queue depth:
-  up to ``depth`` group transfers in flight at once on a thread pool, the
-  io_uring-style overlap the ROADMAP called for.
+  up to ``depth`` group transfers in flight at once on a persistent
+  submission pool, reads *and* writes — the io_uring-style overlap the
+  ROADMAP called for.  Staging writers submit ``WritePlan`` groups through
+  this engine; the index commit still happens only after every group lands
+  (crash consistency is the session's job, not the engine's).
+
+``engine="auto"`` is not an engine class: :class:`~repro.io.reader.Dataset`
+resolves it per plan via :func:`repro.core.cost_model.choose_engine` (plan
+shape × storage calibration) and then dispatches to one of the engines
+above.  :func:`validate_engine_spec` accepts it; :func:`get_engine` does
+not, by design.
 
 File handles live in a :class:`SubfileStore` (per-``Dataset`` session):
 read-mostly fd/memmap caches, growth via ``ftruncate`` with map
@@ -39,7 +49,8 @@ from .planner import ReadPlan, WritePlan
 
 __all__ = ["IOEngine", "MemmapEngine", "PreadEngine",
            "OverlappedPreadEngine", "SubfileStore", "WriteStats",
-           "ENGINES", "get_engine", "assemble_chunk"]
+           "ENGINES", "get_engine", "validate_engine_spec",
+           "assemble_chunk"]
 
 #: Linux caps one preadv/pwritev at IOV_MAX iovecs
 _IOV_MAX = 1024
@@ -58,6 +69,8 @@ class WriteStats:
     num_subfiles: int = 0
     groups: int = 0                   # coalesced vectored writes issued
     plan_seconds: float = 0.0
+    engine: str = ""                  # engine spec that executed the plan
+    engine_reason: str = ""           # why (auto decision record / "pinned")
 
     @property
     def write_gbps(self) -> float:
@@ -321,30 +334,26 @@ class PreadEngine(IOEngine):
         # holes need zero-fill beyond the plan-time ftruncate
 
     def write_plan(self, plan, buffers, store):
-        groups = range(plan.num_groups)
-        for k, size in plan.file_sizes.items():
+        for k in plan.file_sizes:
             store.fd(k, writable=True)
-        if plan.num_groups <= 1:
-            for g in groups:
-                self._write_group(plan, g, buffers, store)
-        else:
-            nthreads = min(16, plan.num_groups)
-            with ThreadPoolExecutor(max_workers=nthreads) as ex:
-                list(ex.map(lambda g: self._write_group(plan, g, buffers,
-                                                        store), groups))
+        for g in range(plan.num_groups):
+            self._write_group(plan, g, buffers, store)
         for k in plan.file_sizes:
             store.invalidate(k)
 
 
 class OverlappedPreadEngine(PreadEngine):
     """``pread`` mechanism with up to ``depth`` group transfers in flight
-    (io_uring-style queue depth on a persistent submission pool).
+    (io_uring-style queue depth on a persistent submission pool), in both
+    directions.
 
-    Each in-flight unit is one coalesced group: its ``preadv`` and its
-    strided scatter both run on the pool (syscalls and large numpy copies
-    release the GIL, so groups genuinely overlap); the pool width IS the
-    queue depth.  Distinct plan rows scatter to disjoint output slices, so
-    no synchronization is needed on ``out``.
+    Each in-flight unit is one coalesced group: on reads its ``preadv`` and
+    its strided scatter both run on the pool (syscalls and large numpy
+    copies release the GIL, so groups genuinely overlap); on writes each
+    group's ``pwritev`` is submitted the same way.  The pool width IS the
+    queue depth.  Distinct plan rows scatter to disjoint output slices and
+    distinct write groups cover disjoint extents, so no synchronization is
+    needed on the data.
     """
 
     name = "overlapped"
@@ -370,14 +379,42 @@ class OverlappedPreadEngine(PreadEngine):
                     out: np.ndarray) -> None:
         self._scatter_group(plan, g, self._fetch_group(plan, g, store), out)
 
+    @staticmethod
+    def _drain(futures) -> None:
+        """Await every in-flight group before surfacing the first failure:
+        returning with stragglers still on the pool would let a caller
+        close the SubfileStore under an active transfer."""
+        first_exc = None
+        for f in futures:
+            try:
+                f.result()
+            except BaseException as e:     # noqa: BLE001 — re-raised below
+                if first_exc is None:
+                    first_exc = e
+        if first_exc is not None:
+            raise first_exc
+
     def read_plan(self, plan, store, out):
         if plan.num_groups <= 1:
             return super().read_plan(plan, store, out)
-        futures = [self._executor().submit(self._read_group, plan, g, store,
-                                           out)
-                   for g in range(plan.num_groups)]
-        for f in futures:
-            f.result()
+        self._drain([self._executor().submit(self._read_group, plan, g,
+                                             store, out)
+                     for g in range(plan.num_groups)])
+
+    def write_plan(self, plan, buffers, store):
+        if plan.num_groups <= 1:
+            return super().write_plan(plan, buffers, store)
+        # open every target fd on the submitting thread (SubfileStore is
+        # thread-safe, but this keeps O_CREAT ordering deterministic)
+        for k in plan.file_sizes:
+            store.fd(k, writable=True)
+        try:
+            self._drain([self._executor().submit(self._write_group, plan, g,
+                                                 buffers, store)
+                         for g in range(plan.num_groups)])
+        finally:
+            for k in plan.file_sizes:
+                store.invalidate(k)
 
 
 ENGINES = {
@@ -388,6 +425,33 @@ ENGINES = {
 
 _instances: dict = {}
 _instances_lock = threading.Lock()
+
+
+def validate_engine_spec(engine) -> str:
+    """Validate an engine spec *including* ``"auto"`` and return it
+    normalized to a string.  Raises ``ValueError`` on anything unknown —
+    callers (benchmark harnesses, CLIs) use this to fail loudly instead of
+    silently falling back to a default engine.
+    """
+    if isinstance(engine, IOEngine):
+        return engine.name
+    name = str(engine)
+    base, sep, arg = name.partition(":")
+    if sep:
+        if base != "overlapped":
+            raise ValueError(f"engine {engine!r} takes no ':<depth>' "
+                             f"argument")
+        try:
+            depth = int(arg)
+        except ValueError:
+            raise ValueError(f"bad queue depth in engine spec {engine!r}")
+        if depth < 1:
+            raise ValueError(f"queue depth must be >= 1, got {depth}")
+    if base != "auto" and base not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; one of "
+                         f"{sorted(ENGINES) + ['auto']} or an IOEngine "
+                         f"instance")
+    return name
 
 
 def get_engine(engine, **kwargs) -> IOEngine:
@@ -402,6 +466,10 @@ def get_engine(engine, **kwargs) -> IOEngine:
     if isinstance(engine, IOEngine):
         return engine
     name = str(engine)
+    if name.partition(":")[0] == "auto":
+        raise ValueError("engine 'auto' is resolved per plan by Dataset "
+                         "(pass engine='auto' to Dataset.create/open or to "
+                         "read_planned/write_planned), not by get_engine")
     if ":" in name:
         name, arg = name.split(":", 1)
         if name == "overlapped":

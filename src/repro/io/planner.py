@@ -26,6 +26,13 @@ either kind against memmaps or ``preadv``/``pwritev`` batches, and
 resharding/reorg planners consume them for cost reports without touching
 data at all.  All byte-offset arithmetic of the container lives in this
 module; everything downstream executes plans verbatim.
+
+A plan's *shape* — coalesced group count, contiguous-run count, payload
+and span bytes — is also the input to engine auto-selection: under
+``engine="auto"`` the :class:`~repro.io.reader.Dataset` session feeds
+exactly these numbers, together with a measured storage calibration, to
+:func:`repro.core.cost_model.choose_engine` (see
+``docs/engine_selection.md``).
 """
 
 from __future__ import annotations

@@ -19,11 +19,18 @@ plan/engine split:
   threads and schemes.
 
 Engines (``memmap`` / ``pread`` / ``overlapped``, see
-:mod:`repro.io.engine`) are interchangeable per session or per call; stats
-expose the *structural* costs (chunks touched, contiguous byte runs ==
-seeks on cold storage, coalesced groups, bytes) alongside measured wall
-time, so layout effects are visible even when the page cache hides device
-seeks.
+:mod:`repro.io.engine`) are interchangeable per session or per call, and
+``engine="auto"`` defers the choice to plan-execution time: the session
+loads (or micro-probes and persists, as ``calibration.json``) an
+:class:`~repro.core.cost_model.EngineCalibration` for its storage target
+and asks :func:`~repro.core.cost_model.choose_engine` to pick an engine and
+queue depth from the plan's shape (groups, runs, bytes).  The decision —
+which engine ran and why — is recorded in ``ReadStats.engine`` /
+``ReadStats.engine_reason`` (and the write-side ``WriteStats`` twins).
+Stats also expose the *structural* costs (chunks touched, contiguous byte
+runs == seeks on cold storage, coalesced groups, bytes) alongside measured
+wall time, so layout effects are visible even when the page cache hides
+device seeks.
 """
 
 from __future__ import annotations
@@ -38,6 +45,8 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from ..core.blocks import Block
+from ..core.cost_model import (EngineCalibration, EngineChoice, choose_engine,
+                               storage_calibration)
 from ..core.layouts import ChunkPlan, LayoutPlan
 from ..core.read_patterns import (best_decompositions, decompose_region,
                                   pattern_region)
@@ -58,6 +67,8 @@ class ReadStats:
     groups: int = 0               # coalesced grouped reads actually issued
     probe_seconds: float = 0.0    # spatial-index lookup time
     plan_seconds: float = 0.0     # extent planning time
+    engine: str = ""              # engine spec that executed the plan
+    engine_reason: str = ""       # auto decision record, or "pinned"
 
     def merge(self, other: "ReadStats") -> None:
         self.bytes_read += other.bytes_read
@@ -66,6 +77,12 @@ class ReadStats:
         self.groups += other.groups
         self.probe_seconds += other.probe_seconds
         self.plan_seconds += other.plan_seconds
+        if not self.engine:
+            self.engine = other.engine
+            self.engine_reason = other.engine_reason
+        elif other.engine and other.engine != self.engine:
+            self.engine = "mixed"   # sub-reads resolved to different engines
+            self.engine_reason = "per-plan auto decisions diverged"
 
     @property
     def read_gbps(self) -> float:
@@ -78,14 +95,21 @@ class Dataset:
     ``Dataset(dir)`` attaches to an existing dataset (read paths work
     immediately, writes append); ``Dataset.create(dir)`` starts an empty
     one.  ``engine`` is an engine name (``"memmap"``, ``"pread"``,
-    ``"overlapped"``/``"overlapped:<depth>"``) or an
-    :class:`~repro.io.engine.IOEngine` instance.
+    ``"overlapped"``/``"overlapped:<depth>"``, or ``"auto"``) or an
+    :class:`~repro.io.engine.IOEngine` instance.  With ``"auto"`` the
+    session picks an engine *per plan* from the plan's shape and a storage
+    calibration (loaded from ``calibration.json`` next to ``index.json``,
+    micro-probed and persisted on first use; ``calibration`` injects one
+    explicitly, e.g. for tests or read-only media).
     """
 
     def __init__(self, dirpath: str, engine: str | IOEngine = "memmap", *,
-                 create: bool = False, index: DatasetIndex | None = None):
+                 create: bool = False, index: DatasetIndex | None = None,
+                 calibration: EngineCalibration | None = None):
         self.dirpath = dirpath
-        self._engine = get_engine(engine)
+        self._auto = isinstance(engine, str) and engine == "auto"
+        self._engine = None if self._auto else get_engine(engine)
+        self._calibration = calibration
         if index is not None:
             self.index = index
         elif create:
@@ -96,26 +120,56 @@ class Dataset:
             os.makedirs(dirpath, exist_ok=True)
         self._store = SubfileStore(dirpath)
         self._lock = threading.Lock()     # index mutation + append cursor
+        self._cal_lock = threading.Lock()  # one probe even with many workers
         self._cursor: dict | None = None  # subfile -> first free byte
 
     # -- session management --------------------------------------------------
     @classmethod
-    def create(cls, dirpath: str,
-               engine: str | IOEngine = "memmap") -> "Dataset":
+    def create(cls, dirpath: str, engine: str | IOEngine = "memmap",
+               calibration: EngineCalibration | None = None) -> "Dataset":
         """Start a new (empty) dataset. ``index.json`` is not written until
         the first successful :meth:`write_planned` commit."""
-        return cls(dirpath, engine, create=True)
+        return cls(dirpath, engine, create=True, calibration=calibration)
 
     @classmethod
-    def open(cls, dirpath: str,
-             engine: str | IOEngine = "memmap") -> "Dataset":
+    def open(cls, dirpath: str, engine: str | IOEngine = "memmap",
+             calibration: EngineCalibration | None = None) -> "Dataset":
         """Attach to an existing dataset directory."""
-        return cls(dirpath, engine)
+        return cls(dirpath, engine, calibration=calibration)
 
     @property
     def engine(self) -> str:
-        """Name of the session's default engine."""
-        return self._engine.name
+        """Name of the session's default engine (``"auto"`` when the choice
+        is deferred to plan-execution time)."""
+        return "auto" if self._auto else self._engine.name
+
+    def calibration(self) -> EngineCalibration:
+        """The session's storage calibration (lazy: ``calibration.json`` if
+        fresh, the per-device cache, else a micro-probe that is persisted
+        next to ``index.json``).  Thread-safe: concurrent first users (e.g.
+        staging workers) share one probe."""
+        if self._calibration is None:
+            with self._cal_lock:
+                if self._calibration is None:
+                    self._calibration = storage_calibration(self.dirpath)
+        return self._calibration
+
+    def _resolve_engine(self, override, *, groups: int, runs: int,
+                        bytes_moved: int, span_bytes: int,
+                        direction: str) -> tuple:
+        """Resolve a per-call ``engine`` override (or the session default)
+        to an engine instance; returns ``(engine, EngineChoice | None)``.
+        ``"auto"`` — per call or as the session default — consults the cost
+        model with this plan's shape."""
+        spec = override if override is not None else \
+            ("auto" if self._auto else self._engine)
+        if isinstance(spec, str) and spec == "auto":
+            choice = choose_engine(self.calibration(), groups=groups,
+                                   runs=runs, bytes_moved=bytes_moved,
+                                   span_bytes=span_bytes,
+                                   direction=direction)
+            return get_engine(choice.engine), choice
+        return get_engine(spec), None
 
     def flush(self) -> None:
         """Persist ``index.json`` (atomic replace)."""
@@ -160,9 +214,13 @@ class Dataset:
                       fsync: bool = False, flush: bool = True) -> WriteStats:
         """Execute a write plan: assemble each chunk from its source blocks,
         run the engine over the extent groups, then commit the records.
-        Returns :class:`~repro.io.engine.WriteStats`.
+        Returns :class:`~repro.io.engine.WriteStats` (including which engine
+        executed the plan and, under ``"auto"``, why).
         """
-        eng = get_engine(engine) if engine is not None else self._engine
+        eng, choice = self._resolve_engine(
+            engine, groups=plan.num_groups, runs=plan.num_chunks,
+            bytes_moved=plan.bytes_total, span_bytes=plan.span_bytes,
+            direction="write")
         t_start = time.perf_counter()
 
         t0 = time.perf_counter()
@@ -207,7 +265,10 @@ class Dataset:
                           num_extents=plan.num_chunks,
                           num_subfiles=len(plan.file_sizes),
                           groups=plan.num_groups,
-                          plan_seconds=plan.plan_seconds)
+                          plan_seconds=plan.plan_seconds,
+                          engine=choice.engine if choice else eng.name,
+                          engine_reason=choice.reason if choice
+                          else "pinned")
 
     def write(self, var: str, layout: LayoutPlan, dtype,
               data: Mapping[int, np.ndarray], *,
@@ -230,15 +291,22 @@ class Dataset:
 
     def read_planned(self, plan: ReadPlan, out: np.ndarray | None = None,
                      engine: str | IOEngine | None = None) -> tuple:
-        """Execute a read plan. Returns (array, ReadStats)."""
+        """Execute a read plan. Returns (array, ReadStats); the stats record
+        which engine ran and — under ``"auto"`` — the decision rationale."""
         if out is None:
             out = np.empty(plan.region.shape, dtype=plan.dtype)
-        eng = get_engine(engine) if engine is not None else self._engine
+        eng, choice = self._resolve_engine(
+            engine, groups=plan.num_groups, runs=plan.runs,
+            bytes_moved=plan.bytes_needed, span_bytes=plan.span_bytes,
+            direction="read")
         stats = ReadStats(chunks_touched=plan.num_chunks, runs=plan.runs,
                           groups=plan.num_groups,
                           bytes_read=plan.bytes_needed,
                           probe_seconds=plan.probe_seconds,
-                          plan_seconds=plan.plan_seconds)
+                          plan_seconds=plan.plan_seconds,
+                          engine=choice.engine if choice else eng.name,
+                          engine_reason=choice.reason if choice
+                          else "pinned")
         t0 = time.perf_counter()
         eng.read_plan(plan, self._store, out)
         stats.seconds = time.perf_counter() - t0

@@ -13,6 +13,17 @@ WritePlan` through the session's engine concurrently.  No offset arithmetic
 lives here anymore — the historical off-by-alignment drift between staging
 appends and writer appends cannot recur, since both run the same planner.
 
+Write-side overlap (ISSUE 3): the default session engine is ``"auto"``, so
+multi-group plans are executed by the overlapped engine — each coalesced
+group is submitted at the chosen queue depth through its *persistent*
+submission pool, instead of one serial ``pwritev`` after another.  The
+commit-after-data crash-consistency invariant is unchanged: ``index.json``
+records a step's chunks only after every group of that step's plan landed,
+and the index file itself is flushed on :meth:`StagingExecutor.close`.  A
+worker whose write fails records the exception in ``StageResult.error``
+(the step's extents become dead space, the index never saw them) and stays
+alive; the producer can simply re-submit the step.
+
 Measured per output:
   t_s  — transfer+assembly time (producer-side copy + worker-side layout build)
   t_w  — write time of the reorganized chunks
@@ -49,6 +60,8 @@ class StageResult:
     stall: float = 0.0          # producer-side blocking
     bytes_staged: int = 0
     num_chunks: int = 0
+    engine: str = ""            # engine that executed this step's WritePlan
+    error: str | None = None    # worker-side failure (step is retryable)
 
 
 class StagingExecutor:
@@ -57,7 +70,7 @@ class StagingExecutor:
     def __init__(self, dirpath: str, num_workers: int = 2,
                  queue_depth: int = 2, link_gbps: float | None = None,
                  align: int | None = None,
-                 engine: str | IOEngine = "pread"):
+                 engine: str | IOEngine = "auto"):
         self.dirpath = dirpath
         self.num_workers = num_workers
         self.link_gbps = link_gbps
@@ -137,7 +150,12 @@ class StagingExecutor:
                 res.t_w = ws.write_seconds
                 res.bytes_staged = ws.bytes_written
                 res.num_chunks = ws.num_extents
+                res.engine = ws.engine
+            except Exception as e:        # noqa: BLE001 — step is retryable
+                # extents may exist (dead space); the index commit never
+                # happened, so the producer can re-submit this step
+                res.error = f"{type(e).__name__}: {e}"
+            finally:
                 with self._lock:
                     self._results.append(res)
-            finally:
                 self._q.task_done()

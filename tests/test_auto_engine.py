@@ -1,0 +1,292 @@
+"""Engine auto-selection (ISSUE 3): the per-engine cost model, the storage
+micro-probe and its calibration.json persistence (round-trip + staleness),
+``engine="auto"`` through the Dataset session in both directions, and the
+selection-decision record in the stats objects."""
+
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (plan_layout, simulate_load_balance,
+                        uniform_grid_blocks)
+from repro.core.blocks import Block
+from repro.core.cost_model import (CALIBRATION_NAME, EngineCalibration,
+                                   choose_engine, load_calibration,
+                                   predict_seconds, probe_storage,
+                                   save_calibration, storage_calibration)
+from repro.io import Dataset, ENGINES, StagingExecutor, get_engine
+from repro.io.engine import validate_engine_spec
+
+GLOBAL = (32, 32, 32)
+
+
+#: deterministic fixtures for the two storage regimes
+COLD = EngineCalibration(seek_latency_s=1e-3, preadv_group_overhead_s=5e-6,
+                         seq_read_bps=2e9, seq_write_bps=1e9, memmap_bps=8e9,
+                         page_miss_s=1e-3, parallel_scaling=8.0,
+                         created_at=0.0)
+HOT = EngineCalibration(seek_latency_s=3e-6, preadv_group_overhead_s=2e-6,
+                        seq_read_bps=4e9, seq_write_bps=3e9, memmap_bps=6e9,
+                        page_miss_s=3e-7, parallel_scaling=2.0,
+                        created_at=0.0)
+
+
+@pytest.fixture()
+def world():
+    rng = np.random.default_rng(21)
+    blocks = simulate_load_balance(uniform_grid_blocks(GLOBAL, (16, 16, 16)),
+                                   num_procs=4, seed=21)
+    data = {b.block_id: rng.standard_normal(b.shape).astype(np.float32)
+            for b in blocks}
+    ref = np.zeros(GLOBAL, np.float32)
+    for b in blocks:
+        ref[b.slices()] = data[b.block_id]
+    return blocks, data, ref
+
+
+# -- cost model (pure, deterministic) ----------------------------------------
+
+def test_choose_engine_cold_picks_overlapped():
+    c = choose_engine(COLD, groups=44, runs=4096, bytes_moved=64 << 20,
+                      span_bytes=64 << 20)
+    assert c.engine.startswith("overlapped:")
+    assert c.depth is not None and c.depth > 1
+    assert c.predicted_seconds == min(c.predictions.values())
+    assert "overlapped" in c.reason and "groups=44" in c.reason
+
+
+def test_choose_engine_hot_picks_memmap():
+    c = choose_engine(HOT, groups=44, runs=4096, bytes_moved=64 << 20,
+                      span_bytes=64 << 20)
+    assert c.engine == "memmap" and c.depth is None
+
+
+def test_choose_engine_single_group_never_overlaps():
+    """With one group there is nothing to overlap: pread and overlapped
+    predict identically, so the simpler engine wins the tie."""
+    c = choose_engine(COLD, groups=1, runs=1, bytes_moved=1 << 20,
+                      span_bytes=1 << 20)
+    assert c.engine in ("memmap", "pread")
+
+
+def test_choose_engine_empty_plan():
+    c = choose_engine(COLD, groups=0, runs=0, bytes_moved=0, span_bytes=0)
+    assert c.engine == "memmap" and c.reason == "empty plan"
+
+
+def test_predict_seconds_monotonic_in_depth():
+    shape = dict(groups=64, runs=64, bytes_moved=32 << 20,
+                 span_bytes=32 << 20)
+    times = [predict_seconds(COLD, f"overlapped:{d}", **shape)
+             for d in (2, 4, 8, 16)]
+    assert times == sorted(times, reverse=True)
+    with pytest.raises(ValueError):
+        predict_seconds(COLD, "io_uring", **shape)
+
+
+# -- calibration probe + persistence -----------------------------------------
+
+def test_probe_storage_sane(tmp_path):
+    cal = probe_storage(str(tmp_path), probe_bytes=1 << 20)
+    assert cal.seq_read_bps > 0 and cal.seq_write_bps > 0
+    assert cal.memmap_bps > 0 and cal.seek_latency_s > 0
+    assert 1.0 <= cal.parallel_scaling <= 8.0
+    assert cal.preadv_group_overhead_s >= 0
+    assert not cal.is_stale()
+    # the scratch probe file is gone
+    assert os.listdir(str(tmp_path)) == []
+
+
+def test_calibration_roundtrip(tmp_path):
+    d = str(tmp_path)
+    save_calibration(HOT, d)
+    assert os.path.exists(os.path.join(d, CALIBRATION_NAME))
+    # HOT has created_at=0.0 (stale by age); load with a huge TTL
+    loaded = load_calibration(d, max_age_s=float("inf"))
+    assert loaded == HOT
+
+
+def test_calibration_staleness(tmp_path):
+    d = str(tmp_path)
+    old = EngineCalibration(**{**HOT.to_json(),
+                               "created_at": time.time() - 3600.0})
+    save_calibration(old, d)
+    assert load_calibration(d, max_age_s=7200.0) == old
+    assert load_calibration(d, max_age_s=60.0) is None          # too old
+    future = EngineCalibration(**{**HOT.to_json(),
+                                  "created_at": time.time() + 3600.0})
+    save_calibration(future, d)
+    assert load_calibration(d) is None                          # clock skew
+    bad = {**HOT.to_json(), "version": -1,
+           "created_at": time.time()}
+    with open(os.path.join(d, CALIBRATION_NAME), "w") as f:
+        json.dump(bad, f)
+    assert load_calibration(d) is None                          # version
+    with open(os.path.join(d, CALIBRATION_NAME), "w") as f:
+        f.write("{not json")
+    assert load_calibration(d) is None                          # corrupt
+
+
+def test_storage_calibration_unprobeable_dir_never_raises(tmp_path):
+    """Read-only/unwritable dataset dirs must not crash auto reads: the
+    calibration falls back to scratch space (or defaults) instead."""
+    missing = str(tmp_path / "does" / "not" / "exist")
+    cal = storage_calibration(missing, use_cache=False)
+    assert cal.seq_read_bps > 0     # probed scratch space or fallback
+
+
+def test_overlapped_write_failure_drains_stragglers(tmp_path, world):
+    """A failing group must not leave sibling groups in flight: by the time
+    write_plan raises, every submitted group has completed, so closing the
+    store immediately afterwards is safe."""
+    import threading
+    from repro.io import OverlappedPreadEngine
+
+    done = []
+
+    class _OneBadGroup(OverlappedPreadEngine):
+        name = "one-bad-group"
+
+        def _write_group(self, plan, g, buffers, store):
+            if g == 0:
+                raise OSError("bad group")
+            threading.Event().wait(0.05)     # make stragglers observable
+            super()._write_group(plan, g, buffers, store)
+            done.append(g)
+
+    blocks, data, _ = world
+    plan = plan_layout("subfiled_fpp", blocks, num_procs=4,
+                       global_shape=GLOBAL)
+    ds = Dataset.create(str(tmp_path / "drain"), engine=_OneBadGroup(depth=4))
+    wplan = ds.plan_write("B", plan, np.float32)
+    assert wplan.num_groups > 2
+    with pytest.raises(OSError, match="bad group"):
+        ds.write_planned(wplan, data)
+    # every non-failing group finished before the exception surfaced
+    assert sorted(done) == list(range(1, wplan.num_groups))
+    ds.close()
+
+
+def test_storage_calibration_persists_and_reuses(tmp_path):
+    d = str(tmp_path)
+    cal = storage_calibration(d, probe_bytes=1 << 20, use_cache=False)
+    assert os.path.exists(os.path.join(d, CALIBRATION_NAME))
+    again = storage_calibration(d)
+    assert again == cal        # served from the persisted file, not re-probed
+
+
+# -- engine spec validation ---------------------------------------------------
+
+def test_validate_engine_spec():
+    for ok in ("memmap", "pread", "overlapped", "overlapped:4", "auto"):
+        assert validate_engine_spec(ok) == ok
+    for bad in ("io_uring", "memmap:3", "overlapped:x", "overlapped:0",
+                "overlapped:", ""):
+        with pytest.raises(ValueError):
+            validate_engine_spec(bad)
+    assert validate_engine_spec(get_engine("pread")) == "pread"
+
+
+def test_get_engine_rejects_auto():
+    with pytest.raises(ValueError, match="resolved per plan"):
+        get_engine("auto")
+
+
+# -- Dataset integration ------------------------------------------------------
+
+def test_dataset_auto_roundtrip(tmp_path, world):
+    blocks, data, ref = world
+    d = str(tmp_path / "auto_ds")
+    plan = plan_layout("subfiled_fpp", blocks, num_procs=4,
+                       global_shape=GLOBAL)
+    ds = Dataset.create(d, engine="auto")
+    assert ds.engine == "auto"
+    ws = ds.write("B", plan, np.float32, data)
+    assert ws.engine and ws.engine.split(":")[0] in ENGINES
+    assert ws.engine_reason and ws.engine_reason != "pinned"
+    # calibration was persisted next to index.json
+    assert os.path.exists(os.path.join(d, CALIBRATION_NAME))
+    arr, st = ds.read("B", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+    assert st.engine.split(":")[0] in ENGINES
+    assert "predicted" in st.engine_reason
+    ds.close()
+
+
+def test_dataset_auto_per_call_override(tmp_path, world):
+    blocks, data, ref = world
+    d = str(tmp_path / "auto_call")
+    plan = plan_layout("merged_process", blocks, num_procs=4,
+                       global_shape=GLOBAL)
+    ds = Dataset.create(d, engine="pread", calibration=HOT)
+    ds.write("B", plan, np.float32, data)
+    rplan = ds.plan_read("B", Block((0, 0, 0), GLOBAL))
+    # pinned session: stats record the pin
+    arr, st = ds.read_planned(rplan)
+    assert (st.engine, st.engine_reason) == ("pread", "pinned")
+    # per-call auto override consults the injected calibration
+    arr, st = ds.read_planned(rplan, engine="auto")
+    np.testing.assert_array_equal(arr, ref)
+    assert st.engine.split(":")[0] in ENGINES
+    assert "predicted" in st.engine_reason
+    ds.close()
+
+
+def test_injected_calibration_drives_choice(tmp_path, world):
+    """A cold calibration must push a many-group plan to the overlapped
+    engine; a hot one to memmap — deterministically, no probe involved."""
+    blocks, data, _ = world
+    d = str(tmp_path / "regimes")
+    plan = plan_layout("subfiled_fpp", blocks, num_procs=4,
+                       global_shape=GLOBAL)
+    ds = Dataset.create(d, engine="pread")
+    ds.write("B", plan, np.float32, data)
+    rplan = ds.plan_read("B", Block((0, 0, 0), GLOBAL))
+    ds.close()
+    if rplan.num_groups > 1:
+        cold_ds = Dataset.open(d, engine="auto", calibration=COLD)
+        _, st = cold_ds.read_planned(rplan)
+        assert st.engine.startswith("overlapped")
+        cold_ds.close()
+    hot_ds = Dataset.open(d, engine="auto", calibration=HOT)
+    _, st = hot_ds.read_planned(rplan)
+    assert st.engine == "memmap"
+    hot_ds.close()
+
+
+def test_staging_auto_records_engine(tmp_path, world):
+    blocks, data, ref = world
+    sd = str(tmp_path / "auto_staged")
+    plan = plan_layout("reorganized", blocks, num_procs=4,
+                       global_shape=GLOBAL, reorg_scheme=(2, 2, 2),
+                       num_stagers=2)
+    ex = StagingExecutor(sd, num_workers=2, queue_depth=2)   # engine="auto"
+    for step in range(2):
+        ex.submit(step, "B", np.float32, plan, data)
+    results = ex.drain()
+    ex.close()
+    assert all(r.error is None for r in results)
+    assert all(r.engine and r.engine.split(":")[0] in ENGINES
+               for r in results)
+    ds = Dataset.open(sd)
+    for step in range(2):
+        arr, _ = ds.read(f"B@{step}", Block((0, 0, 0), GLOBAL))
+        np.testing.assert_array_equal(arr, ref)
+    ds.close()
+
+
+def test_read_stats_merge_engine_record():
+    from repro.io import ReadStats
+    a = ReadStats(engine="memmap", engine_reason="pinned")
+    b = ReadStats(engine="memmap", engine_reason="pinned")
+    a.merge(b)
+    assert a.engine == "memmap"
+    c = ReadStats(engine="overlapped:8", engine_reason="auto")
+    a.merge(c)
+    assert a.engine == "mixed"
+    fresh = ReadStats()
+    fresh.merge(ReadStats(engine="pread", engine_reason="pinned"))
+    assert fresh.engine == "pread"

@@ -1,0 +1,26 @@
+"""Tier-1 wrapper around the docs gate: README/docs relative links must
+resolve and every ``>>>`` snippet in the markdown must run (the same check
+CI's docs job performs via ``tools/check_docs.py``)."""
+
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_docs_links_and_doctests():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_docs.py")],
+        capture_output=True, text=True, env=env, cwd=ROOT)
+    assert proc.returncode == 0, \
+        f"docs check failed:\n{proc.stdout}\n{proc.stderr}"
+
+
+def test_docs_exist():
+    for f in ("docs/architecture.md", "docs/engine_selection.md",
+              "README.md"):
+        assert os.path.exists(os.path.join(ROOT, f)), f

@@ -16,10 +16,9 @@ from repro.core import (STRATEGIES, plan_layout, simulate_load_balance,
                         uniform_grid_blocks)
 from repro.core.blocks import Block
 from repro.core.read_patterns import PATTERNS, pattern_region
-from repro.io import (Dataset, ENGINES, GPFS_BLOCK, PreadEngine,
-                      StagingExecutor, assemble_chunk, build_write_plan,
-                      gather_to_nodes, reorganize, rewrite_dataset,
-                      write_variable)
+from repro.io import (Dataset, ENGINES, GPFS_BLOCK, OverlappedPreadEngine,
+                      PreadEngine, StagingExecutor, assemble_chunk,
+                      build_write_plan, gather_to_nodes, reorganize)
 from repro.io.format import (ChunkRecord, DatasetIndex, align_up,
                              subfile_name)
 
@@ -297,6 +296,47 @@ def test_partial_write_plan_leaves_index_unwritten(tmp_path, world):
         Dataset.open(d)
 
 
+class _FlakyOverlapped(OverlappedPreadEngine):
+    """Overlapped engine that kills one group submission on the first plan
+    execution (the 'kill between group submissions' crash), then heals."""
+
+    name = "flaky-overlapped"
+
+    def __init__(self, depth=4):
+        super().__init__(depth=depth)
+        self.tripped = False
+
+    def _write_group(self, plan, g, buffers, store):
+        if g == 1 and not self.tripped:
+            self.tripped = True
+            raise OSError("injected crash between group submissions")
+        super()._write_group(plan, g, buffers, store)
+
+
+def test_overlapped_write_crash_consistency_and_retry(tmp_path, world):
+    """A crash between overlapped group submissions must leave index.json
+    absent; retrying the same plan makes the dataset reopenable and
+    bit-correct (extents are idempotent: same offsets both attempts)."""
+    blocks, data, ref = world
+    d = str(tmp_path / "crash_overlap")
+    plan = plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    ds = Dataset.create(d, engine=_FlakyOverlapped())
+    wplan = ds.plan_write("B", plan, np.float32)
+    assert wplan.num_groups > 1
+    with pytest.raises(OSError, match="injected crash"):
+        ds.write_planned(wplan, data)
+    assert not os.path.exists(os.path.join(d, "index.json"))
+    assert "B" not in ds.index.variables and not ds.index.chunks
+    # retry the same (already reserved) plan: now all groups land
+    ds.write_planned(wplan, data)
+    ds.close()
+    ds2 = Dataset.open(d)
+    arr, _ = ds2.read("B", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+    ds2.close()
+
+
 # -- staging -----------------------------------------------------------------
 
 def test_staging_executor_roundtrip(tmp_path, world):
@@ -331,6 +371,33 @@ def test_staging_blocking_regime(tmp_path, world):
     ex.drain()
     ex.close()
     assert len(stalls) == 6     # completed despite backpressure
+
+
+def test_staging_worker_failure_is_retryable(tmp_path, world):
+    """A staging write that dies between overlapped group submissions is
+    reported in StageResult.error, leaves index.json uncommitted for that
+    step, and the producer can re-submit the step successfully."""
+    blocks, data, ref = world
+    sd = str(tmp_path / "staged_flaky")
+    plan = plan_layout("reorganized", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL, reorg_scheme=(2, 2, 2),
+                       num_stagers=2)
+    ex = StagingExecutor(sd, num_workers=1, queue_depth=2,
+                         engine=_FlakyOverlapped())
+    ex.submit(0, "B", np.float32, plan, data)
+    ex.submit(0, "B", np.float32, plan, data)     # the retry
+    ex.submit(1, "B", np.float32, plan, data)
+    results = ex.drain()
+    ex.close()
+    failed = [r for r in results if r.error]
+    ok = [r for r in results if not r.error]
+    assert len(failed) == 1 and "injected crash" in failed[0].error
+    assert sorted(r.step for r in ok) == [0, 1]
+    ds = Dataset.open(sd)
+    for step in (0, 1):
+        arr, _ = ds.read(f"B@{step}", Block((0, 0, 0), GLOBAL))
+        np.testing.assert_array_equal(arr, ref)
+    ds.close()
 
 
 @pytest.mark.parametrize("align", [None, GPFS_BLOCK],
@@ -401,28 +468,13 @@ def test_multiple_variables_one_dataset(tmp_path, world):
     np.testing.assert_array_equal(arr, ref)
 
 
-# -- deprecated shims (one release) ------------------------------------------
+# -- shim retirement ----------------------------------------------------------
 
-def test_deprecated_shims_still_work(tmp_path, world):
-    blocks, data, ref = world
-    d = str(tmp_path / "shim")
-    plan = plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
-                       global_shape=GLOBAL)
-    with pytest.deprecated_call():
-        idx, ws = write_variable(d, "B", np.float32, plan, data)
-    assert ws.bytes_written == ref.nbytes
-    data2 = {k: v + 1 for k, v in data.items()}
-    with pytest.deprecated_call():
-        write_variable(d, "E", np.float32, plan, data2, index=idx)
-    ds = Dataset.open(d)
-    arr, _ = ds.read("E", Block((0, 0, 0), GLOBAL))
-    np.testing.assert_array_equal(arr, ref + 1)
-    reorg = plan_layout("reorganized", blocks, num_procs=NPROCS,
-                        global_shape=GLOBAL, reorg_scheme=(2, 2, 2))
-    with pytest.deprecated_call():
-        read_s, ridx, ws = rewrite_dataset(d, str(tmp_path / "shim_dst"),
-                                           "B", reorg)
-    assert ws.num_extents == 8
-    arr, _ = Dataset.open(str(tmp_path / "shim_dst")).read(
-        "B", Block((0, 0, 0), GLOBAL))
-    np.testing.assert_array_equal(arr, ref)
+def test_deprecated_shims_removed():
+    """write_variable/rewrite_dataset were removed this release (ISSUE 3);
+    repro.io must not resurrect them."""
+    import repro.io as io_mod
+    assert not hasattr(io_mod, "write_variable")
+    assert not hasattr(io_mod, "rewrite_dataset")
+    with pytest.raises(ImportError):
+        from repro.io import write_variable   # noqa: F401

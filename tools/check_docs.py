@@ -1,0 +1,80 @@
+"""Docs gate: relative-link check + doctest over README and docs/*.md.
+
+Usage: PYTHONPATH=src python tools/check_docs.py
+
+Checks the user-facing documentation — README.md and everything under
+docs/ (repo-meta files like SNIPPETS.md/PAPERS.md hold exemplar material
+from other codebases and are exempt):
+  1. every relative markdown link ``[text](target)`` resolves to a real
+     file (anchors are stripped; http(s)/mailto links are skipped);
+  2. ``doctest`` runs over the file, so any ``>>>`` snippet in the docs is
+     executed against the real package and must produce its printed output.
+
+Exits nonzero on any broken link or failing doctest — CI runs this as the
+docs job.
+"""
+
+from __future__ import annotations
+
+import doctest
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files() -> list:
+    out = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        out += [os.path.join(docs, f) for f in sorted(os.listdir(docs))
+                if f.endswith(".md")]
+    return [p for p in out if os.path.exists(p)]
+
+
+def check_links(path: str) -> list:
+    failures = []
+    with open(path) as f:
+        text = f.read()
+    for target in LINK_RE.findall(text):
+        if target.startswith(SKIP_SCHEMES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            failures.append(f"{os.path.relpath(path, ROOT)}: broken link "
+                            f"-> {target}")
+    return failures
+
+
+def check_doctests(path: str) -> list:
+    results = doctest.testfile(path, module_relative=False,
+                               optionflags=doctest.NORMALIZE_WHITESPACE)
+    if results.failed:
+        return [f"{os.path.relpath(path, ROOT)}: {results.failed}/"
+                f"{results.attempted} doctest(s) failed"]
+    return []
+
+
+def main() -> int:
+    failures = []
+    tested = 0
+    for path in doc_files():
+        failures += check_links(path)
+        failures += check_doctests(path)
+        tested += 1
+    for f in failures:
+        print(f"FAIL: {f}", file=sys.stderr)
+    print(f"check_docs: {tested} file(s), "
+          f"{'FAILED' if failures else 'all links resolve + doctests pass'}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
