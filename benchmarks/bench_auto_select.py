@@ -26,11 +26,11 @@ from repro.core import plan_layout
 from repro.core.blocks import Block
 from repro.core.cost_model import (EngineCalibration, choose_engine,
                                    storage_calibration)
-from repro.core.read_patterns import pattern_region
 from repro.io import Dataset
 
 from .common import (GLOBAL, NPROCS, SMOKE, TmpDir, build_world,
-                     cold_write_engines, emit, timed, write_dataset)
+                     cold_write_engines, emit, resolve_pattern, timed,
+                     write_dataset)
 
 STATIC_ENGINES = ("memmap", "pread", "overlapped")
 LAYOUTS = (("subfiled_fpp", None), ("merged_process", None),
@@ -56,7 +56,7 @@ def _read_matrix(tmp: TmpDir) -> None:
         ds = Dataset.open(d, engine="auto")
         cal = ds.calibration()
         for pattern in PATTERNS:
-            region = pattern_region(pattern, GLOBAL)
+            region = resolve_pattern(GLOBAL, pattern)
             rplan = ds.plan_read("B", region)
             if rplan.num_chunks == 0:
                 continue

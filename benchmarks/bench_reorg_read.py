@@ -19,12 +19,12 @@ import time
 
 from repro.core import plan_layout
 from repro.core.blocks import Block
-from repro.core.read_patterns import PATTERNS, pattern_region
+from repro.core.read_patterns import PATTERNS
 from repro.io import (Dataset, OverlappedPreadEngine, PreadEngine,
                       build_read_plan, linear_candidates)
 
 from .common import (ENGINE, GLOBAL, NPROCS, SMOKE, TmpDir, build_world,
-                     emit, timed, write_dataset)
+                     emit, resolve_pattern, timed, write_dataset)
 
 #: emulated per-group device service latency for the cold-storage engine
 #: comparison (same motif as StagingExecutor's link_gbps throttle: real I/O
@@ -60,7 +60,7 @@ def _index_overhead(tmp: TmpDir) -> None:
     write_dataset(d, "B", plan, data)
     ds = Dataset.open(d)
     rows = ds.index.var_rows("B")
-    regions = [pattern_region(p, GLOBAL) for p in PATTERNS]
+    regions = [resolve_pattern(GLOBAL, p) for p in PATTERNS]
 
     def probe_plan_indexed():
         for r in regions:

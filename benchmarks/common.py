@@ -16,6 +16,12 @@ import numpy as np
 from repro.core import (plan_layout, simulate_load_balance,
                         uniform_grid_blocks)
 from repro.io.engine import validate_engine_spec
+# shared pattern helpers (ISSUE 4 cleanup): region resolution and mix
+# drivers live in repro.io.patterns — one implementation for the Dataset
+# session, the benchmarks, and the layout-policy tests; benchmarks import
+# them from here
+from repro.io.patterns import (drive_pattern_mix, measure_pattern_mix,  # noqa: F401
+                               normalize_mix, resolve_pattern)
 
 #: container-scale stand-in for the paper's 2048x4096x4096 variable;
 #: BENCH_SMOKE=1 shrinks everything so the whole run fits a CI smoke budget

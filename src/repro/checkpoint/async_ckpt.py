@@ -45,12 +45,17 @@ class AsyncCheckpointer:
                  num_workers: int = 2, queue_depth: int = 2,
                  n_compute: int = 256, m_staging: int = 2,
                  t_w_direct: float | None = None,
-                 align: int | None = None, engine: str = "pread"):
+                 align: int | None = None, engine: str = "pread",
+                 policy=None):
         self.root = root
-        self.scheme = tuple(reorg_scheme)
+        #: "auto" routes every variable's staged layout through the
+        #: executor's LayoutPolicy (ISSUE 4); a tuple pins the K-way scheme
+        self.scheme = reorg_scheme if reorg_scheme == "auto" \
+            else tuple(reorg_scheme)
         self.executor = StagingExecutor(root, num_workers=num_workers,
                                         queue_depth=queue_depth,
-                                        align=align, engine=engine)
+                                        align=align, engine=engine,
+                                        policy=policy)
         self.records: list = []
         self.n_compute = n_compute
         self.m_staging = m_staging
@@ -77,12 +82,17 @@ class AsyncCheckpointer:
             else:
                 blocks = [Block((0,) * arr.ndim, arr.shape, owner=0,
                                 block_id=0)]
+            data = {b.block_id: arr[b.slices()] for b in blocks}
+            if self.scheme == "auto":
+                stall_total += self.executor.submit(
+                    step, name, arr.dtype, "auto", data, blocks=blocks,
+                    global_shape=arr.shape)
+                continue
             scheme = self.scheme[:arr.ndim] + (1,) * (arr.ndim
                                                       - len(self.scheme))
             plan = plan_layout("reorganized", blocks, num_procs=0,
                                global_shape=arr.shape, reorg_scheme=scheme,
                                num_stagers=self.executor.num_workers)
-            data = {b.block_id: arr[b.slices()] for b in blocks}
             stall_total += self.executor.submit(step, name, arr.dtype, plan,
                                                 data)
         self.records.append(_StepRecord(step=step, stall=stall_total,

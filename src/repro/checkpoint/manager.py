@@ -10,7 +10,15 @@ is a policy knob:
   * ``merged_node``    — merge across a node group (pod slice);
   * ``reorganized``    — the paper's contribution 2 target layout: regular
     K-way decomposition, read-optimal for elastic restarts (written post-hoc
-    or on-the-fly via repro.checkpoint.async_ckpt).
+    or on-the-fly via repro.checkpoint.async_ckpt);
+  * ``auto``           — ISSUE 4: per-variable layouts chosen by a
+    :class:`~repro.core.policy.LayoutPolicy` from the *restore patterns this
+    manager has observed*.  Every restore appends pattern fingerprints to
+    ``access_log.json`` at the checkpoint root; the next ``save`` scores
+    candidate layouts against that history (elastic restores onto a new
+    mesh keep cubic-ish schemes, slice-inspection workloads get slab
+    schemes).  With no history yet, the dimension-aware default scheme is
+    used and the reason recorded in the manifest.
 
 Restore is resharding-aware: a different target mesh/sharding reads each new
 shard as a region query against the stored chunk index.
@@ -40,6 +48,7 @@ import numpy as np
 
 from ..core.blocks import Block
 from ..core.layouts import plan_layout
+from ..core.policy import AccessLog, AccessRecord, LayoutPolicy
 from ..io.engine import IOEngine
 from ..io.reader import Dataset, ReadStats
 from .blocks_map import blocks_from_sharding, flatten_pytree, unflatten_like
@@ -72,7 +81,8 @@ class CheckpointManager:
     def __init__(self, root: str, strategy: str = "merged_process",
                  devices_per_host: int = 4, hosts_per_node: int = 1,
                  keep: int = 3, reorg_scheme=None, align=None,
-                 engine: str | IOEngine = "memmap"):
+                 engine: str | IOEngine = "memmap",
+                 policy: LayoutPolicy | None = None):
         self.root = root
         self.strategy = strategy
         self.devices_per_host = devices_per_host
@@ -82,6 +92,19 @@ class CheckpointManager:
         self.align = align
         self.engine = engine
         os.makedirs(root, exist_ok=True)
+        #: restore-pattern history, shared across steps (checkpoint root);
+        #: appends are batched — an elastic restore logs one record per
+        #: shard and must not pay a ring rewrite each — and flushed once
+        #: at the end of every restore
+        self.access_log = AccessLog(root, flush_every=16)
+        self._policy = policy
+
+    def layout_policy(self) -> LayoutPolicy:
+        """The policy ``strategy="auto"`` consults — over this manager's
+        own restore-pattern log unless one was injected."""
+        if self._policy is None:
+            self._policy = LayoutPolicy(log=self.access_log)
+        return self._policy
 
     # -- paths ---------------------------------------------------------------
     def step_dir(self, step: int) -> str:
@@ -108,6 +131,7 @@ class CheckpointManager:
         flat_sh = flatten_pytree(shardings) if shardings is not None else {}
         ds = Dataset.create(d, engine=self.engine)
         per_var = {}
+        policy_info = {}
         total_bytes = 0
         n_chunks = 0
         n_blocks = 0
@@ -129,14 +153,22 @@ class CheckpointManager:
                                 block_id=0)]
             hosts = max(b.owner for b in blocks) + 1
             data = {b.block_id: arr[b.slices()] for b in blocks}
-            scheme = None
-            if self.reorg_scheme is not None:
-                scheme = (tuple(self.reorg_scheme[:arr.ndim])
-                          + (1,) * max(0, arr.ndim - len(self.reorg_scheme)))
-            plan = plan_layout(self.strategy, blocks, num_procs=hosts,
-                               procs_per_node=self.hosts_per_node,
-                               global_shape=arr.shape,
-                               reorg_scheme=scheme)
+            if self.strategy == "auto":
+                decision = self.layout_policy().choose_layout(
+                    name, blocks, arr.shape, num_procs=hosts,
+                    procs_per_node=self.hosts_per_node)
+                plan = decision.layout
+                policy_info[name] = decision.to_json()
+            else:
+                scheme = None
+                if self.reorg_scheme is not None:
+                    scheme = (tuple(self.reorg_scheme[:arr.ndim])
+                              + (1,) * max(0, arr.ndim
+                                           - len(self.reorg_scheme)))
+                plan = plan_layout(self.strategy, blocks, num_procs=hosts,
+                                   procs_per_node=self.hosts_per_node,
+                                   global_shape=arr.shape,
+                                   reorg_scheme=scheme)
             # index.json is re-committed per variable, so a crash mid-save
             # leaves a readable prefix of the checkpoint
             ds.write(name, plan, arr.dtype, data, align=self.align)
@@ -148,6 +180,8 @@ class CheckpointManager:
         manifest = {"step": step, "strategy": self.strategy,
                     "scalars": scalars,
                     "variables": sorted(k for k in flat if k not in scalars)}
+        if policy_info:
+            manifest["policy"] = policy_info
         with open(os.path.join(d, MANIFEST), "w") as f:
             json.dump(manifest, f)
         self._retain()
@@ -196,6 +230,7 @@ class CheckpointManager:
                 plan = ds.plan_read(name, b, candidates=cand)
                 arr, st = ds.read_planned(plan)
                 st.seconds += st.probe_seconds + st.plan_seconds
+                self._record_restore(name, b, shape, st)
                 vstats.merge(st)
                 vstats.seconds += st.seconds
                 shards[b.block_id] = arr
@@ -206,11 +241,23 @@ class CheckpointManager:
             agg.per_var[name] = vstats
         if ds is not None:
             ds.close()
+        self.access_log.flush()
         for name, rec in manifest["scalars"].items():
             flat[name] = np.asarray(rec["value"], dtype=rec["dtype"])
         if template is not None:
             return unflatten_like(template, flat), agg
         return flat, agg
+
+    def _record_restore(self, name: str, region: Block, shape,
+                        st: ReadStats) -> None:
+        """Feed one restore read back into the manager-root access log —
+        the history ``strategy="auto"`` saves consult.  Telemetry never
+        breaks a restore."""
+        try:
+            self.access_log.append(
+                AccessRecord.from_stats(name, "restore", region, shape, st))
+        except Exception:               # noqa: BLE001 — telemetry only
+            pass
 
     def restore_latest(self, template=None):
         steps = self.steps()

@@ -8,20 +8,26 @@ Public surface:
   read_patterns   the six Fig.-6 read patterns + reader decompositions
   cost_model      §5.2 resource-utilization model (on-the-fly vs post-hoc)
                   + the per-engine cost model behind engine="auto"
-  reorg           reorganization planning + policy
+                  + recalibrate-on-drift
+  policy          access-pattern telemetry (AccessLog) + LayoutPolicy
+  reorg           reorganization planning + policy (thin wrappers)
 """
 
 from .blocks import (Block, bounding_box, total_volume, blocks_disjoint,
                      uniform_grid_blocks, simulate_load_balance,
                      regular_decomposition, shard_grid_blocks)
 from .clustering import Cluster, cluster_blocks, merged_block_counts
-from .cost_model import (PAPER_TIMINGS, EngineCalibration, EngineChoice,
-                         StagingTimings, breakeven_outputs, choose_engine,
+from .cost_model import (PAPER_TIMINGS, CalibrationDrift, EngineCalibration,
+                         EngineChoice, StagingTimings, breakeven_outputs,
+                         choose_engine, invalidate_calibration,
                          load_calibration, onthefly_utilization,
-                         posthoc_utilization, predict_seconds, probe_storage,
-                         recommend, save_calibration, storage_calibration)
+                         posthoc_utilization, predict_best_seconds,
+                         predict_seconds, probe_storage, recommend,
+                         save_calibration, storage_calibration)
 from .layouts import (DEFAULT_REORG_SCHEME, STRATEGIES, ChunkPlan, LayoutPlan,
-                      plan_layout)
+                      default_reorg_scheme, plan_layout)
+from .policy import (AccessLog, AccessRecord, LayoutPolicy, PolicyDecision,
+                     candidate_schemes, classify_region, estimate_read_shape)
 from .merge import (MergePlan, MergeStats, build_merge_plan,
                     execute_merge_numpy, merge_blocks)
 from .read_patterns import (PATTERNS, best_decompositions, decompose_region,

@@ -58,7 +58,9 @@ __all__ = ["StagingTimings", "PAPER_TIMINGS", "posthoc_utilization",
            "EngineCalibration", "EngineChoice", "CALIBRATION_NAME",
            "CALIBRATION_TTL_S", "FALLBACK_CALIBRATION", "probe_storage",
            "save_calibration", "load_calibration", "storage_calibration",
-           "predict_seconds", "choose_engine"]
+           "predict_seconds", "choose_engine", "predict_best_seconds",
+           # recalibrate-on-drift (ISSUE 4)
+           "CalibrationDrift", "invalidate_calibration"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -495,6 +497,95 @@ def choose_engine(cal: EngineCalibration, *, groups: int, runs: int,
     return EngineChoice(engine=best, depth=int(arg) if arg else None,
                         predicted_seconds=preds[best], predictions=preds,
                         reason=reason)
+
+
+def predict_best_seconds(cal: EngineCalibration, *, groups: int, runs: int,
+                         bytes_moved: int, span_bytes: int,
+                         direction: str = "read") -> float:
+    """Best achievable predicted wall time over all engines for a plan of
+    this shape — the per-layout read-cost the :class:`repro.core.policy.
+    LayoutPolicy` scores candidate layouts with (each candidate is assumed
+    to run under whatever engine ``engine="auto"`` would pick for it)."""
+    if groups <= 0 or bytes_moved <= 0:
+        return 0.0
+    return choose_engine(cal, groups=groups, runs=runs,
+                         bytes_moved=bytes_moved, span_bytes=span_bytes,
+                         direction=direction).predicted_seconds
+
+
+# ---------------------------------------------------------------------------
+# Recalibrate-on-drift (ISSUE 4): invalidate a calibration the measurements
+# stopped agreeing with
+# ---------------------------------------------------------------------------
+
+#: measured/predicted (either way) beyond this ratio counts as divergent
+DRIFT_RATIO = 2.0
+#: plans where both predicted and measured are below this are noise —
+#: microsecond-scale hot reads jitter far beyond 2x without meaning the
+#: calibration is wrong
+DRIFT_MIN_SECONDS = 1e-3
+#: consecutive divergent plans before the calibration is invalidated
+DRIFT_TRIP_COUNT = 5
+#: observations ignored after a trip, so one bad probe cannot thrash
+#: probe -> trip -> probe every few plans
+DRIFT_COOLDOWN = 50
+
+
+class CalibrationDrift:
+    """Tracks predicted-vs-measured agreement of ``engine="auto"`` plans.
+
+    ``note(predicted, measured)`` returns ``True`` when ``trip_count``
+    *consecutive* plans diverged by more than ``ratio`` (in either
+    direction) above the ``min_seconds`` noise floor — the caller should
+    then :func:`invalidate_calibration` so the next auto decision re-probes
+    the storage.  A single agreeing plan resets the streak: drift must be
+    *persistent*, not sporadic.  Not thread-safe by itself; callers
+    serialize (the Dataset session notes under its own accounting).
+    """
+
+    def __init__(self, ratio: float = DRIFT_RATIO,
+                 min_seconds: float = DRIFT_MIN_SECONDS,
+                 trip_count: int = DRIFT_TRIP_COUNT,
+                 cooldown: int = DRIFT_COOLDOWN):
+        self.ratio = ratio
+        self.min_seconds = min_seconds
+        self.trip_count = trip_count
+        self.cooldown = cooldown
+        self._streak = 0
+        self._cooldown_left = 0
+        self.trips = 0
+
+    def note(self, predicted: float, measured: float) -> bool:
+        if self._cooldown_left > 0:
+            self._cooldown_left -= 1
+            return False
+        if max(predicted, measured) < self.min_seconds:
+            return False                       # noise floor: don't count
+        lo, hi = sorted((max(predicted, 1e-12), max(measured, 1e-12)))
+        if hi / lo > self.ratio:
+            self._streak += 1
+        else:
+            self._streak = 0
+        if self._streak >= self.trip_count:
+            self._streak = 0
+            self._cooldown_left = self.cooldown
+            self.trips += 1
+            return True
+        return False
+
+
+def invalidate_calibration(dirpath: str) -> None:
+    """Drop every cached copy of ``dirpath``'s calibration: the persisted
+    ``calibration.json`` and the per-device in-process cache.  The next
+    :func:`storage_calibration` call re-probes the storage."""
+    try:
+        os.unlink(os.path.join(dirpath, CALIBRATION_NAME))
+    except OSError:
+        pass
+    try:
+        _device_cache.pop(os.stat(dirpath).st_dev, None)
+    except OSError:
+        pass
 
 
 def recommend(t: StagingTimings, t_c: float, N: int) -> dict:

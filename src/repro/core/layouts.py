@@ -19,18 +19,44 @@ Strategies (paper names):
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Sequence
 
 from .blocks import Block, bounding_box, regular_decomposition
 from .clustering import cluster_blocks_many
 
 __all__ = ["STRATEGIES", "ChunkPlan", "LayoutPlan", "plan_layout",
-           "node_of", "DEFAULT_REORG_SCHEME"]
+           "node_of", "DEFAULT_REORG_SCHEME", "default_reorg_scheme"]
 
 STRATEGIES = ("contiguous", "chunked", "subfiled_fpp", "subfiled_fpn",
               "merged_process", "merged_node", "reorganized")
 
 DEFAULT_REORG_SCHEME = (4, 4, 4)  # paper §5.2: 64 chunks, 4x4x4
+
+#: chunk-count target the dimension-aware default scheme aims for
+DEFAULT_REORG_CHUNKS = 64
+
+
+def default_reorg_scheme(ndim: int, target_chunks: int = DEFAULT_REORG_CHUNKS,
+                         global_shape: Sequence[int] | None = None) -> tuple:
+    """Dimension-aware default reorganization scheme: spread ~``target_chunks``
+    over ``ndim`` axes as evenly as possible (3-D: the paper's 4x4x4; 2-D:
+    8x8; 1-D: 64; 4-D: 4x4x2x2).  With ``global_shape`` each axis split is
+    clamped to the axis extent so no zero-size chunk can arise.
+
+    The historical constant :data:`DEFAULT_REORG_SCHEME` is this function at
+    ``ndim == 3`` — callers with non-3-D variables got a silent rank mismatch
+    before this existed.
+    """
+    if ndim <= 0:
+        raise ValueError(f"ndim must be positive, got {ndim}")
+    k = max(0, int(round(math.log2(max(1, target_chunks)))))
+    base, rem = divmod(k, ndim)
+    scheme = tuple(2 ** (base + (1 if d < rem else 0)) for d in range(ndim))
+    if global_shape is not None:
+        scheme = tuple(min(int(s), max(1, int(g)))
+                       for s, g in zip(scheme, global_shape))
+    return scheme
 
 
 def node_of(rank: int, procs_per_node: int) -> int:
@@ -146,7 +172,20 @@ def plan_layout(strategy: str,
         nsub = len(by_node)
 
     elif strategy == "reorganized":
-        scheme = tuple(reorg_scheme or DEFAULT_REORG_SCHEME)
+        if reorg_scheme is None:
+            scheme = default_reorg_scheme(len(global_shape),
+                                          global_shape=global_shape)
+        else:
+            scheme = tuple(reorg_scheme)
+        if len(scheme) != len(global_shape):
+            raise ValueError(
+                f"reorg_scheme rank {len(scheme)} != variable rank "
+                f"{len(global_shape)} (scheme={scheme}, "
+                f"global_shape={global_shape}); pass a scheme per axis or "
+                f"None for the dimension-aware default")
+        # clamp: an axis can never be split finer than its extent
+        scheme = tuple(min(int(s), max(1, int(g)))
+                       for s, g in zip(scheme, global_shape))
         targets = regular_decomposition(global_shape, scheme)
         chunks = []
         for t in targets:

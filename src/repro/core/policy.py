@@ -1,0 +1,549 @@
+"""Access-pattern telemetry and the unified layout policy (ISSUE 4).
+
+The paper's headline claim — "by understanding application I/O patterns and
+carefully designing data layouts we can increase read performance by more
+than 80%" — needs a feedback loop, not a hard-coded 4x4x4 target.  This
+module closes it:
+
+* **Telemetry** — every ``Dataset.read`` / ``read_decomposed`` /
+  ``read_pattern`` and every ``CheckpointManager.restore`` appends a compact
+  :class:`AccessRecord` (region shape class, runs/groups/bytes, measured vs
+  predicted seconds, chosen engine) to an :class:`AccessLog` persisted as
+  ``access_log.json`` next to ``index.json``/``calibration.json`` — same
+  atomic-replace + version/TTL discipline, bounded ring of
+  :data:`ACCESS_LOG_CAPACITY` records.  A corrupt or absent log is simply an
+  empty history, never an error.
+
+* **Policy** — :class:`LayoutPolicy.choose_layout` scores candidate layouts
+  (``reorganized`` schemes of varying K and aspect, ``merged_node``,
+  ``chunked``) against the *observed pattern mix*: for each recorded region
+  it analytically estimates the plan shape a candidate chunking would
+  produce (chunks touched, contiguous runs via the same trailing
+  fully-covered-suffix formula the real planner uses, payload/span bytes)
+  and prices it with :func:`repro.core.cost_model.predict_best_seconds`.
+  The weighted-by-frequency winner becomes the reorganization target — a
+  dataset read mostly as z-slabs gets a slab-shaped scheme, a
+  subdomain-read dataset keeps a cubic one.
+
+``reorganize(..., layout="auto")``, ``StagingExecutor.submit(...,
+plan="auto")`` and ``CheckpointManager(strategy="auto")`` all route through
+this object; with no usable history every path degrades to the
+dimension-aware default scheme with the reason recorded
+(``PolicyDecision.reason``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import os
+import threading
+import time
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from .blocks import Block, regular_decomposition
+from .cost_model import (EngineCalibration, FALLBACK_CALIBRATION,
+                         load_calibration, predict_best_seconds)
+from .layouts import LayoutPlan, default_reorg_scheme, plan_layout
+from .read_patterns import best_decompositions
+
+__all__ = ["ACCESS_LOG_NAME", "ACCESS_LOG_CAPACITY", "ACCESS_LOG_TTL_S",
+           "AccessRecord", "AccessLog", "classify_region",
+           "estimate_read_shape", "candidate_schemes",
+           "PolicyDecision", "LayoutPolicy"]
+
+#: file persisted next to index.json / calibration.json
+ACCESS_LOG_NAME = "access_log.json"
+ACCESS_LOG_VERSION = 1
+#: bounded ring: at most this many records survive in the file
+ACCESS_LOG_CAPACITY = 256
+#: records older than this are dropped at load time (stale access history
+#: should not steer today's layout)
+ACCESS_LOG_TTL_S = 30 * 24 * 3600.0
+
+#: an axis covered at or below this fraction of its extent reads as "thin"
+THIN_FRAC = 0.25
+
+#: disambiguates concurrent atomic-replace temp files (two sessions, two
+#: processes): each writer replaces from its own temp name, so the log file
+#: itself is always one complete JSON document
+_tmp_counter = itertools.count()
+
+
+def classify_region(region: Block, global_shape: Sequence[int]) -> str:
+    """Human-readable shape class of a read region: ``whole_domain``,
+    ``sub_area``, ``slab(axis=d)`` (thin along one axis — the paper's
+    plane patterns), ``pencil(axis=d)`` (wide along one axis only), or
+    ``thin(axes=...)`` / ``point`` for the remaining corners.  Rank-generic:
+    works for 1-D..N-D variables."""
+    fracs = [(h - l) / max(1, g)
+             for l, h, g in zip(region.lo, region.hi, global_shape)]
+    nd = len(fracs)
+    thin = [d for d, f in enumerate(fracs) if f <= THIN_FRAC]
+    if not thin:
+        return "whole_domain" if min(fracs) >= 0.999 else "sub_area"
+    if len(thin) == nd:
+        return "point"
+    if len(thin) == 1:
+        return f"slab(axis={thin[0]})"
+    if len(thin) == nd - 1:
+        wide = next(d for d in range(nd) if d not in thin)
+        return f"pencil(axis={wide})"
+    return "thin(axes=" + ",".join(str(d) for d in thin) + ")"
+
+
+@dataclasses.dataclass(frozen=True)
+class AccessRecord:
+    """One observed access: the pattern fingerprint the policy learns from."""
+
+    var: str
+    kind: str                    # "read" | "restore"
+    shape_class: str             # classify_region() of the read region
+    lo: tuple                    # region bounds (exact — scoring intersects
+    hi: tuple                    # them with candidate chunk grids)
+    runs: int = 0                # contiguous byte runs of the executed plan
+    groups: int = 0              # coalesced groups actually issued
+    nbytes: int = 0              # payload bytes moved
+    seconds: float = 0.0         # measured wall seconds
+    predicted_seconds: float = 0.0   # cost-model prediction (engine="auto")
+    engine: str = ""             # engine spec that executed the plan
+    ts: float = 0.0              # wall clock (time.time()) at record time
+
+    @property
+    def ndim(self) -> int:
+        return len(self.lo)
+
+    @property
+    def region(self) -> Block:
+        return Block(tuple(self.lo), tuple(self.hi))
+
+    def to_json(self) -> dict:
+        return {"var": self.var, "kind": self.kind, "cls": self.shape_class,
+                "lo": [int(v) for v in self.lo],
+                "hi": [int(v) for v in self.hi],
+                "runs": int(self.runs), "groups": int(self.groups),
+                "bytes": int(self.nbytes), "sec": float(self.seconds),
+                "pred": float(self.predicted_seconds), "eng": self.engine,
+                "ts": float(self.ts)}
+
+    @staticmethod
+    def from_json(d: dict) -> "AccessRecord":
+        return AccessRecord(var=d["var"], kind=d["kind"],
+                            shape_class=d["cls"], lo=tuple(d["lo"]),
+                            hi=tuple(d["hi"]), runs=d.get("runs", 0),
+                            groups=d.get("groups", 0),
+                            nbytes=d.get("bytes", 0),
+                            seconds=d.get("sec", 0.0),
+                            predicted_seconds=d.get("pred", 0.0),
+                            engine=d.get("eng", ""), ts=d.get("ts", 0.0))
+
+    @classmethod
+    def from_stats(cls, var: str, kind: str, region: Block,
+                   global_shape: Sequence[int], stats) -> "AccessRecord":
+        """Fingerprint one executed read: ``stats`` is any object with the
+        ``ReadStats`` telemetry fields (runs/groups/bytes_read/seconds/
+        predicted_seconds/engine) — the one constructor both the Dataset
+        session and the checkpoint restore path record through."""
+        return cls(var=var, kind=kind,
+                   shape_class=classify_region(region, global_shape),
+                   lo=tuple(int(v) for v in region.lo),
+                   hi=tuple(int(v) for v in region.hi),
+                   runs=stats.runs, groups=stats.groups,
+                   nbytes=stats.bytes_read, seconds=stats.seconds,
+                   predicted_seconds=stats.predicted_seconds,
+                   engine=stats.engine, ts=time.time())
+
+
+class AccessLog:
+    """Bounded, persistent ring of :class:`AccessRecord` s for one dataset
+    directory (``access_log.json``).
+
+    Durability discipline matches ``calibration.json``: atomic
+    rename-replace from a writer-unique temp file, a version field, and a
+    TTL applied at load.  Each flush re-reads the file, merges, trims to
+    ``capacity`` and replaces — concurrent writers (staging workers and
+    reader threads, or two processes) can lose each other's most recent
+    in-flight records on an exact race, but the file is always one complete
+    JSON document.  ``flush_every > 1`` batches appends in memory (the
+    per-read telemetry mode: a hot read must not pay a full ring rewrite),
+    at the cost of up to ``flush_every - 1`` in-flight records on a crash;
+    :meth:`flush` drains the buffer and is called by ``Dataset.flush`` /
+    ``close``.  All I/O errors degrade to "no history": telemetry must
+    never break a read path.
+    """
+
+    def __init__(self, dirpath: str, capacity: int = ACCESS_LOG_CAPACITY,
+                 max_age_s: float = ACCESS_LOG_TTL_S,
+                 flush_every: int = 1):
+        self.dirpath = dirpath
+        self.capacity = capacity
+        self.max_age_s = max_age_s
+        self.flush_every = max(1, flush_every)
+        self._pending: list = []
+        self._lock = threading.Lock()
+
+    @property
+    def path(self) -> str:
+        return os.path.join(self.dirpath, ACCESS_LOG_NAME)
+
+    def load(self) -> list:
+        """Records currently on disk (oldest first).  Corrupt, absent,
+        version-mismatched files and stale records all degrade to []."""
+        try:
+            with open(self.path) as f:
+                payload = json.load(f)
+            if payload.get("version") != ACCESS_LOG_VERSION:
+                return []
+            recs = [AccessRecord.from_json(r) for r in payload["records"]]
+        except (OSError, ValueError, TypeError, KeyError):
+            return []
+        now = time.time()
+        return [r for r in recs if 0 <= now - r.ts <= self.max_age_s]
+
+    def _save(self, recs: list) -> None:
+        payload = {"version": ACCESS_LOG_VERSION,
+                   "records": [r.to_json() for r in recs]}
+        tmp = os.path.join(
+            self.dirpath,
+            f"{ACCESS_LOG_NAME}.tmp.{os.getpid()}.{next(_tmp_counter)}")
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, self.path)
+
+    def append(self, rec: AccessRecord) -> None:
+        self.extend([rec])
+
+    def extend(self, recs: Iterable[AccessRecord]) -> None:
+        recs = list(recs)
+        if not recs:
+            return
+        with self._lock:
+            self._pending.extend(recs)
+            if len(self._pending) >= self.flush_every:
+                self._flush_locked()
+
+    def flush(self) -> None:
+        """Persist any buffered records (no-op when the buffer is empty)."""
+        with self._lock:
+            self._flush_locked()
+
+    def _flush_locked(self) -> None:
+        if not self._pending:
+            return
+        try:
+            merged = (self.load() + self._pending)[-self.capacity:]
+            self._save(merged)
+            self._pending.clear()
+        except OSError:
+            # read-only media: telemetry is optional; cap the dead buffer
+            del self._pending[:-self.capacity]
+
+    def records(self, var: str | None = None) -> list:
+        with self._lock:
+            recs = (self.load() + self._pending)[-self.capacity:]
+        if var is not None:
+            recs = [r for r in recs if r.var == var]
+        return recs
+
+    def clear(self) -> None:
+        with self._lock:
+            self._pending.clear()
+            try:
+                os.unlink(self.path)
+            except OSError:
+                pass
+
+
+# ---------------------------------------------------------------------------
+# Plan-shape estimation for a hypothetical chunking (no I/O, no index)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlanShapeEstimate:
+    """What a read plan against a candidate chunk set would look like."""
+
+    groups: int          # chunks touched (>= coalesced groups a plan issues)
+    runs: int            # contiguous byte runs (cold-storage seeks)
+    bytes_needed: int    # payload bytes
+    span_bytes: int      # bytes spanned inside the touched chunks
+
+
+def estimate_read_shape(chunk_los: np.ndarray, chunk_his: np.ndarray,
+                        region: Block, itemsize: int) -> PlanShapeEstimate:
+    """Analytic plan shape of reading ``region`` from chunks stored
+    row-major — the same trailing fully-covered-suffix run formula
+    :func:`repro.io.planner.build_read_plan` evaluates on real plans, but
+    against a *hypothetical* chunking, so candidate layouts can be priced
+    without writing a byte."""
+    lo = np.asarray(region.lo, dtype=np.int64)
+    hi = np.asarray(region.hi, dtype=np.int64)
+    ilo = np.maximum(chunk_los, lo)
+    ihi = np.minimum(chunk_his, hi)
+    hit = (ilo < ihi).all(axis=1)
+    m = int(hit.sum())
+    if m == 0:
+        return PlanShapeEstimate(0, 0, 0, 0)
+    ilo, ihi = ilo[hit], ihi[hit]
+    clos, chis = chunk_los[hit], chunk_his[hit]
+    s = ihi - ilo                        # (m, d) intersection shape
+    cshape = chis - clos                 # (m, d) chunk shape
+    nd = s.shape[1]
+
+    # trailing fully-covered suffix length per chunk: a run extends over the
+    # covered suffix axes plus one partially-covered axis above them
+    covered = s == cshape
+    suffix = np.zeros(m, dtype=np.int64)
+    still = np.ones(m, dtype=bool)
+    for d in range(nd - 1, -1, -1):
+        still = still & covered[:, d]
+        suffix += still
+    first_covered = nd - suffix          # j: first axis of the suffix
+    runs_per = np.ones(m, dtype=np.int64)
+    for d in range(nd):
+        runs_per = np.where(d < first_covered - 1, runs_per * s[:, d],
+                            runs_per)
+
+    # byte span between the first and last touched element of each chunk
+    strides = np.ones((m, nd), dtype=np.int64)
+    for d in range(nd - 2, -1, -1):
+        strides[:, d] = strides[:, d + 1] * cshape[:, d + 1]
+    first = ((ilo - clos) * strides).sum(axis=1)
+    last = ((ihi - 1 - clos) * strides).sum(axis=1)
+
+    return PlanShapeEstimate(
+        groups=m, runs=int(runs_per.sum()),
+        bytes_needed=int(s.prod(axis=1).sum() * itemsize),
+        span_bytes=int((last - first + 1).sum() * itemsize))
+
+
+def candidate_schemes(ndim: int, global_shape: Sequence[int],
+                      target_chunks: int = 64) -> list:
+    """Candidate regular decompositions: the dimension-aware default first
+    (ties fall back to it), then every factorization of ``target_chunks``
+    over ``ndim`` axes (all aspect ratios, slab- through pencil-shaped),
+    plus the maximally-fine single-axis slab split per axis.  Axis splits
+    are clamped to the axis extents; duplicates are removed."""
+    def clamp(s):
+        return tuple(min(int(f), max(1, int(g)))
+                     for f, g in zip(s, global_shape))
+
+    default = default_reorg_scheme(ndim, target_chunks, global_shape)
+    seen = {default}
+    out = [default]
+    pool = [clamp(s) for s in best_decompositions(target_chunks, ndim=ndim)]
+    for d in range(ndim):
+        slab = [1] * ndim
+        slab[d] = target_chunks
+        pool.append(clamp(tuple(slab)))
+    for s in sorted(pool):
+        if s not in seen:
+            seen.add(s)
+            out.append(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The policy object
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PolicyDecision:
+    """One layout choice and everything needed to audit it."""
+
+    strategy: str                # "reorganized" | "merged_node" | "chunked"
+    scheme: tuple | None         # K-way scheme when strategy == "reorganized"
+    layout: LayoutPlan
+    reason: str                  # human-readable: mix -> scores -> choice
+    scores: dict                 # candidate name -> predicted mix seconds
+    num_records: int             # access records the decision is based on
+    mix: dict                    # shape-class -> weight fraction
+
+    def to_json(self) -> dict:
+        return {"strategy": self.strategy,
+                "scheme": list(self.scheme) if self.scheme else None,
+                "reason": self.reason, "num_records": self.num_records,
+                "mix": {k: round(v, 4) for k, v in self.mix.items()},
+                "scores": {k: float(v) for k, v in self.scores.items()}}
+
+
+class LayoutPolicy:
+    """Unified layout decision-maker, fed by an :class:`AccessLog`.
+
+    ``choose_layout(var, blocks, global_shape)`` returns a
+    :class:`PolicyDecision` whose ``layout`` is ready for ``plan_write`` /
+    staging / post-hoc reorganization.  With no usable access history the
+    decision degrades to the dimension-aware default ``reorganized`` scheme
+    and says so in ``reason`` — the pre-policy behavior, now recorded.
+
+    ``records`` injects history directly (tests, docs); ``calibration``
+    pins the storage constants the scoring predicts with (default: the
+    dataset's persisted ``calibration.json`` when the policy was built via
+    :meth:`for_dataset`, else :data:`~repro.core.cost_model.
+    FALLBACK_CALIBRATION`).
+    """
+
+    def __init__(self, log: AccessLog | None = None,
+                 records: Sequence[AccessRecord] | None = None,
+                 calibration: EngineCalibration | None = None,
+                 target_chunks: int = 64):
+        self.log = log
+        self._records = list(records) if records is not None else None
+        self.calibration = calibration or FALLBACK_CALIBRATION
+        self.target_chunks = target_chunks
+
+    @classmethod
+    def for_dataset(cls, dirpath: str,
+                    calibration: EngineCalibration | None = None,
+                    target_chunks: int = 64) -> "LayoutPolicy":
+        """Policy over ``dirpath``'s own access log, predicting with its
+        persisted calibration when one is fresh (no probe is triggered —
+        policy evaluation stays I/O-free)."""
+        return cls(log=AccessLog(dirpath),
+                   calibration=calibration or load_calibration(dirpath),
+                   target_chunks=target_chunks)
+
+    # -- history -------------------------------------------------------------
+    def records(self) -> list:
+        if self._records is not None:
+            return list(self._records)
+        return self.log.records() if self.log is not None else []
+
+    def records_for(self, var: str, ndim: int,
+                    global_shape: Sequence[int] | None = None) -> list:
+        """This variable's records; when it has none, records of same-rank
+        variables whose regions *fit inside this variable's shape* (a fresh
+        variable inherits the dataset's overall read behavior — but a
+        region recorded against a larger variable's coordinates is
+        geometrically meaningless here and is excluded rather than scored
+        against empty intersections)."""
+        recs = [r for r in self.records() if r.ndim == ndim]
+        own = [r for r in recs if r.var == var]
+        if own:
+            return own
+        if global_shape is None:
+            return recs
+        return [r for r in recs
+                if all(h <= g for h, g in zip(r.hi, global_shape))]
+
+    def pattern_mix(self, records: Sequence[AccessRecord]) -> list:
+        """Aggregate records into a weighted region mix:
+        ``[(weight, Block, shape_class)]`` with weights summing to 1."""
+        groups: dict = {}
+        for r in records:
+            key = (tuple(r.lo), tuple(r.hi))
+            if key in groups:
+                groups[key][0] += 1
+            else:
+                groups[key] = [1, r.region, r.shape_class]
+        total = max(1, sum(g[0] for g in groups.values()))
+        return [(count / total, region, cls)
+                for count, region, cls in groups.values()]
+
+    @staticmethod
+    def _estimate_itemsize(records: Sequence[AccessRecord]) -> int:
+        sizes = []
+        for r in records:
+            vol = r.region.volume
+            if vol > 0 and r.nbytes > 0:
+                sizes.append(max(1, min(16, round(r.nbytes / vol))))
+        if not sizes:
+            return 4
+        sizes.sort()
+        return sizes[len(sizes) // 2]
+
+    # -- the decision --------------------------------------------------------
+    def choose_layout(self, var: str, blocks: Sequence[Block],
+                      global_shape: Sequence[int], *,
+                      num_stagers: int = 1, num_procs: int | None = None,
+                      procs_per_node: int = 1) -> PolicyDecision:
+        blocks = list(blocks)
+        global_shape = tuple(int(g) for g in global_shape)
+        ndim = len(global_shape)
+        if num_procs is None:
+            num_procs = max([b.owner for b in blocks] + [0]) + 1
+        cal = self.calibration
+
+        def reorg_plan(scheme):
+            return plan_layout("reorganized", blocks, num_procs,
+                               procs_per_node=procs_per_node,
+                               global_shape=global_shape,
+                               reorg_scheme=scheme, num_stagers=num_stagers)
+
+        default = default_reorg_scheme(ndim, self.target_chunks, global_shape)
+
+        def default_decision(why: str) -> PolicyDecision:
+            return PolicyDecision(
+                strategy="reorganized", scheme=default,
+                layout=reorg_plan(default),
+                reason=(f"{why} for {var!r}: "
+                        f"default {'x'.join(map(str, default))} scheme"),
+                scores={}, num_records=0, mix={})
+
+        recs = self.records_for(var, ndim, global_shape)
+        if not recs:
+            return default_decision("no usable access history")
+
+        mix = self.pattern_mix(recs)
+        itemsize = self._estimate_itemsize(recs)
+
+        # candidates: (name, strategy, scheme, chunk_los, chunk_his, layout)
+        candidates = []
+        for scheme in candidate_schemes(ndim, global_shape,
+                                        self.target_chunks):
+            targets = regular_decomposition(global_shape, scheme)
+            los = np.asarray([t.lo for t in targets], dtype=np.int64)
+            his = np.asarray([t.hi for t in targets], dtype=np.int64)
+            name = "reorganized" + "x".join(map(str, scheme))
+            candidates.append((name, "reorganized", scheme, los, his, None))
+        for strat in ("merged_node", "chunked"):
+            try:
+                lay = plan_layout(strat, blocks, num_procs,
+                                  procs_per_node=procs_per_node,
+                                  global_shape=global_shape)
+            except (ValueError, IndexError):
+                continue
+            los = np.asarray([c.chunk.lo for c in lay.chunks],
+                             dtype=np.int64)
+            his = np.asarray([c.chunk.hi for c in lay.chunks],
+                             dtype=np.int64)
+            candidates.append((strat, strat, None, los, his, lay))
+
+        scores: dict = {}
+        for name, _, _, los, his, _ in candidates:
+            t = 0.0
+            for weight, region, _cls in mix:
+                est = estimate_read_shape(los, his, region, itemsize)
+                t += weight * predict_best_seconds(
+                    cal, groups=est.groups, runs=est.runs,
+                    bytes_moved=est.bytes_needed, span_bytes=est.span_bytes)
+            scores[name] = t
+
+        if max(scores.values()) <= 0.0:
+            # every recorded region misses this variable entirely — a
+            # zero-cost "win" would be the insertion-order accident, not a
+            # data-driven choice
+            return default_decision("access history does not intersect")
+        # insertion order breaks ties: the default scheme is first
+        best_name = min(scores, key=lambda k: scores[k])
+        best = next(c for c in candidates if c[0] == best_name)
+        _, strategy, scheme, _, _, layout = best
+        if layout is None:
+            layout = reorg_plan(scheme)
+
+        mix_summary: dict = {}
+        for weight, _region, cls in mix:
+            mix_summary[cls] = mix_summary.get(cls, 0.0) + weight
+        default_name = "reorganized" + "x".join(map(str, default))
+        top = ", ".join(f"{cls} {w:.0%}" for cls, w in
+                        sorted(mix_summary.items(), key=lambda kv: -kv[1]))
+        reason = (f"{len(recs)} access records ({top}): chose {best_name} "
+                  f"predicted {scores[best_name] * 1e3:.3f}ms"
+                  + (f" vs default {default_name} "
+                     f"{scores[default_name] * 1e3:.3f}ms"
+                     if best_name != default_name else " (= default)"))
+        return PolicyDecision(strategy=strategy, scheme=scheme, layout=layout,
+                              reason=reason, scores=scores,
+                              num_records=len(recs), mix=mix_summary)

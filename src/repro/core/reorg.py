@@ -1,15 +1,19 @@
-"""Online data-layout reorganization policy (paper §5).
+"""Online data-layout reorganization policy (paper §5) — thin wrappers.
 
-Planning + policy only (pure index-space / cost-model math).  Execution:
+The decision logic itself lives in :mod:`repro.core.policy`
+(:class:`~repro.core.policy.LayoutPolicy` chooses *what layout* from the
+observed access mix) and :mod:`repro.core.cost_model`
+(:func:`~repro.core.cost_model.recommend` chooses *when to reorganize* —
+on-the-fly vs post-hoc).  The wrappers here keep the historical call sites
+working:
+
   * on-the-fly: :class:`repro.io.staging.StagingExecutor` consumes the plans
     produced here while the producer keeps computing;
   * post-hoc: :func:`repro.io.reorganize` reads a written dataset
     back and re-writes it with the reorganized plan.
 
-The policy layer is what :mod:`repro.checkpoint.async_ckpt` calls to decide,
-per run, whether checkpoints should be reorganized online (staged) or post-hoc
-— the ML translation of the paper's "should I spend 1% extra nodes on staging"
-question.
+:mod:`repro.checkpoint.async_ckpt` calls :func:`decide` to answer, per run,
+the paper's "should I spend 1% extra nodes on staging" question.
 """
 
 from __future__ import annotations
@@ -19,7 +23,7 @@ from typing import Sequence
 
 from . import cost_model
 from .blocks import Block
-from .layouts import DEFAULT_REORG_SCHEME, LayoutPlan, plan_layout
+from .layouts import LayoutPlan, plan_layout
 
 __all__ = ["ReorgDecision", "plan_reorganization", "decide"]
 
@@ -36,10 +40,18 @@ class ReorgDecision:
 
 def plan_reorganization(blocks: Sequence[Block],
                         global_shape: Sequence[int],
-                        scheme: Sequence[int] = DEFAULT_REORG_SCHEME,
+                        scheme: Sequence[int] | None = None,
                         num_stagers: int = 1) -> LayoutPlan:
     """Target layout for reorganization: regular ``scheme`` decomposition
-    (paper §5.2 uses 4x4x4 = 64 chunks for a 2048x4096x4096 variable)."""
+    (paper §5.2 uses 4x4x4 = 64 chunks for a 2048x4096x4096 variable).
+
+    ``scheme=None`` picks the dimension-aware default
+    (:func:`~repro.core.layouts.default_reorg_scheme`) — 4x4x4 for 3-D
+    variables, rank-matched factorizations otherwise; the historical fixed
+    ``(4, 4, 4)`` silently mismatched 2-D/4-D variables.  For a scheme
+    derived from *observed* access patterns, use
+    :meth:`repro.core.policy.LayoutPolicy.choose_layout`.
+    """
     return plan_layout("reorganized", blocks, num_procs=0,
                        global_shape=global_shape, reorg_scheme=scheme,
                        num_stagers=num_stagers)

@@ -18,6 +18,8 @@ from .engine import (ENGINES, IOEngine, MemmapEngine, OverlappedPreadEngine,
                      PreadEngine, SubfileStore, WriteStats, assemble_chunk,
                      get_engine, validate_engine_spec)
 from .format import ChunkRecord, DatasetIndex, GPFS_BLOCK, VarRows
+from .patterns import (drive_pattern_mix, measure_pattern_mix, normalize_mix,
+                       resolve_pattern)
 from .planner import (ReadPlan, WritePlan, build_read_plan, build_write_plan,
                       linear_candidates)
 from .reader import Dataset, ReadStats, reorganize
@@ -38,4 +40,7 @@ __all__ = [
     # session + execution
     "Dataset", "ReadStats", "WriteStats", "assemble_chunk", "reorganize",
     "StageResult", "StagingExecutor", "gather_to_nodes",
+    # shared pattern helpers
+    "resolve_pattern", "normalize_mix", "drive_pattern_mix",
+    "measure_pattern_mix",
 ]

@@ -71,6 +71,7 @@ class WriteStats:
     plan_seconds: float = 0.0
     engine: str = ""                  # engine spec that executed the plan
     engine_reason: str = ""           # why (auto decision record / "pinned")
+    predicted_seconds: float = 0.0    # cost-model prediction (engine="auto")
 
     @property
     def write_gbps(self) -> float:

@@ -31,6 +31,19 @@ Stats also expose the *structural* costs (chunks touched, contiguous byte
 runs == seeks on cold storage, coalesced groups, bytes) alongside measured
 wall time, so layout effects are visible even when the page cache hides
 device seeks.
+
+Two feedback loops close over those stats (ISSUE 4):
+
+* **Access telemetry** — ``read`` / ``read_decomposed`` / ``read_pattern``
+  append a compact pattern fingerprint to ``access_log.json`` next to
+  ``index.json`` (see :mod:`repro.core.policy`); ``reorganize(...,
+  layout="auto")`` asks the :class:`~repro.core.policy.LayoutPolicy` built
+  from that log which target layout the *observed* pattern mix favors.
+* **Recalibrate-on-drift** — each ``engine="auto"`` plan's predicted
+  seconds are compared with the measured seconds; after
+  :data:`~repro.core.cost_model.DRIFT_TRIP_COUNT` consecutive plans off by
+  more than 2x, ``calibration.json`` is invalidated and the next auto call
+  re-probes the storage.
 """
 
 from __future__ import annotations
@@ -45,14 +58,16 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from ..core.blocks import Block
-from ..core.cost_model import (EngineCalibration, EngineChoice, choose_engine,
-                               storage_calibration)
+from ..core.cost_model import (CalibrationDrift, EngineCalibration,
+                               EngineChoice, choose_engine,
+                               invalidate_calibration, storage_calibration)
 from ..core.layouts import ChunkPlan, LayoutPlan
-from ..core.read_patterns import (best_decompositions, decompose_region,
-                                  pattern_region)
+from ..core.policy import AccessLog, AccessRecord, LayoutPolicy
+from ..core.read_patterns import best_decompositions, decompose_region
 from .engine import (IOEngine, SubfileStore, WriteStats, assemble_chunk,
                      get_engine)
 from .format import ChunkRecord, DatasetIndex
+from .patterns import resolve_pattern
 from .planner import ReadPlan, WritePlan, build_read_plan, build_write_plan
 
 __all__ = ["ReadStats", "Dataset", "reorganize"]
@@ -69,6 +84,7 @@ class ReadStats:
     plan_seconds: float = 0.0     # extent planning time
     engine: str = ""              # engine spec that executed the plan
     engine_reason: str = ""       # auto decision record, or "pinned"
+    predicted_seconds: float = 0.0  # cost-model prediction (engine="auto")
 
     def merge(self, other: "ReadStats") -> None:
         self.bytes_read += other.bytes_read
@@ -77,6 +93,7 @@ class ReadStats:
         self.groups += other.groups
         self.probe_seconds += other.probe_seconds
         self.plan_seconds += other.plan_seconds
+        self.predicted_seconds += other.predicted_seconds
         if not self.engine:
             self.engine = other.engine
             self.engine_reason = other.engine_reason
@@ -105,11 +122,19 @@ class Dataset:
 
     def __init__(self, dirpath: str, engine: str | IOEngine = "memmap", *,
                  create: bool = False, index: DatasetIndex | None = None,
-                 calibration: EngineCalibration | None = None):
+                 calibration: EngineCalibration | None = None,
+                 telemetry: bool = True):
         self.dirpath = dirpath
         self._auto = isinstance(engine, str) and engine == "auto"
         self._engine = None if self._auto else get_engine(engine)
         self._calibration = calibration
+        # drift tracking only applies to calibrations this session loaded or
+        # probed itself — an explicitly injected calibration is pinned
+        self._drift_enabled = calibration is None
+        self._drift = CalibrationDrift()
+        self._drift_lock = threading.Lock()
+        self._telemetry = telemetry
+        self._access_log: AccessLog | None = None
         if index is not None:
             self.index = index
         elif create:
@@ -126,16 +151,23 @@ class Dataset:
     # -- session management --------------------------------------------------
     @classmethod
     def create(cls, dirpath: str, engine: str | IOEngine = "memmap",
-               calibration: EngineCalibration | None = None) -> "Dataset":
+               calibration: EngineCalibration | None = None,
+               telemetry: bool = True) -> "Dataset":
         """Start a new (empty) dataset. ``index.json`` is not written until
         the first successful :meth:`write_planned` commit."""
-        return cls(dirpath, engine, create=True, calibration=calibration)
+        return cls(dirpath, engine, create=True, calibration=calibration,
+                   telemetry=telemetry)
 
     @classmethod
     def open(cls, dirpath: str, engine: str | IOEngine = "memmap",
-             calibration: EngineCalibration | None = None) -> "Dataset":
-        """Attach to an existing dataset directory."""
-        return cls(dirpath, engine, calibration=calibration)
+             calibration: EngineCalibration | None = None,
+             telemetry: bool = True) -> "Dataset":
+        """Attach to an existing dataset directory.  ``telemetry=False``
+        turns off access-log appends (mechanical bulk reads — e.g. the
+        source side of :func:`reorganize` — must not pollute the pattern
+        history the layout policy learns from)."""
+        return cls(dirpath, engine, calibration=calibration,
+                   telemetry=telemetry)
 
     @property
     def engine(self) -> str:
@@ -153,6 +185,42 @@ class Dataset:
                 if self._calibration is None:
                     self._calibration = storage_calibration(self.dirpath)
         return self._calibration
+
+    @property
+    def access_log(self) -> AccessLog:
+        """The dataset's persistent access log (``access_log.json``) — the
+        pattern history :class:`~repro.core.policy.LayoutPolicy` scores
+        candidate layouts against.  Appends are batched (a hot read must
+        not pay a full ring rewrite); :meth:`flush` / :meth:`close` drain
+        the buffer."""
+        if self._access_log is None:
+            self._access_log = AccessLog(self.dirpath, flush_every=8)
+        return self._access_log
+
+    def _record_access(self, var: str, region: Block, stats: "ReadStats",
+                       kind: str = "read") -> None:
+        """Append one pattern fingerprint; telemetry never breaks a read."""
+        if not self._telemetry:
+            return
+        try:
+            self.access_log.append(AccessRecord.from_stats(
+                var, kind, region, self.index.var_shape(var), stats))
+        except Exception:               # noqa: BLE001 — telemetry only
+            pass
+
+    def _note_drift(self, choice: EngineChoice | None,
+                    measured_seconds: float) -> None:
+        """Recalibrate-on-drift: after persistently divergent auto plans,
+        drop the calibration so the next auto decision re-probes."""
+        if choice is None or not self._drift_enabled:
+            return
+        with self._drift_lock:
+            tripped = self._drift.note(choice.predicted_seconds,
+                                       measured_seconds)
+        if tripped:
+            invalidate_calibration(self.dirpath)
+            with self._cal_lock:
+                self._calibration = None
 
     def _resolve_engine(self, override, *, groups: int, runs: int,
                         bytes_moved: int, span_bytes: int,
@@ -172,10 +240,15 @@ class Dataset:
         return get_engine(spec), None
 
     def flush(self) -> None:
-        """Persist ``index.json`` (atomic replace)."""
+        """Persist ``index.json`` (atomic replace) and any buffered
+        access-log records."""
         self.index.save(self.dirpath)
+        if self._access_log is not None:
+            self._access_log.flush()
 
     def close(self) -> None:
+        if self._access_log is not None:
+            self._access_log.flush()
         self._store.close()
 
     # -- write path ----------------------------------------------------------
@@ -258,6 +331,7 @@ class Dataset:
             if flush:
                 self.flush()
 
+        self._note_drift(choice, write_seconds)
         return WriteStats(assemble_seconds=assemble_seconds,
                           write_seconds=write_seconds,
                           total_seconds=time.perf_counter() - t_start,
@@ -268,7 +342,9 @@ class Dataset:
                           plan_seconds=plan.plan_seconds,
                           engine=choice.engine if choice else eng.name,
                           engine_reason=choice.reason if choice
-                          else "pinned")
+                          else "pinned",
+                          predicted_seconds=choice.predicted_seconds
+                          if choice else 0.0)
 
     def write(self, var: str, layout: LayoutPlan, dtype,
               data: Mapping[int, np.ndarray], *,
@@ -290,9 +366,15 @@ class Dataset:
                                coalesce_gap=coalesce_gap)
 
     def read_planned(self, plan: ReadPlan, out: np.ndarray | None = None,
-                     engine: str | IOEngine | None = None) -> tuple:
+                     engine: str | IOEngine | None = None,
+                     note_drift: bool = True) -> tuple:
         """Execute a read plan. Returns (array, ReadStats); the stats record
-        which engine ran and — under ``"auto"`` — the decision rationale."""
+        which engine ran and — under ``"auto"`` — the decision rationale.
+
+        ``note_drift=False`` excludes this plan from recalibrate-on-drift
+        accounting — concurrent sub-plans (decomposed reads) measure
+        bandwidth-contended times that would falsely indict a healthy
+        calibration."""
         if out is None:
             out = np.empty(plan.region.shape, dtype=plan.dtype)
         eng, choice = self._resolve_engine(
@@ -306,10 +388,14 @@ class Dataset:
                           plan_seconds=plan.plan_seconds,
                           engine=choice.engine if choice else eng.name,
                           engine_reason=choice.reason if choice
-                          else "pinned")
+                          else "pinned",
+                          predicted_seconds=choice.predicted_seconds
+                          if choice else 0.0)
         t0 = time.perf_counter()
         eng.read_plan(plan, self._store, out)
         stats.seconds = time.perf_counter() - t0
+        if note_drift:
+            self._note_drift(choice, stats.seconds)
         return out, stats
 
     def read(self, var: str, region: Block,
@@ -319,19 +405,23 @@ class Dataset:
         plan = self.plan_read(var, region, candidates=candidates)
         arr, stats = self.read_planned(plan, engine=engine)
         stats.seconds += plan.probe_seconds + plan.plan_seconds
+        self._record_access(var, region, stats)
         return arr, stats
 
     def read_decomposed(self, var: str, region: Block,
                         scheme: Sequence[int],
                         materialize: bool = True,
                         candidates: np.ndarray | None = None,
-                        engine: str | IOEngine | None = None) -> ReadStats:
+                        engine: str | IOEngine | None = None,
+                        log_access: bool = True) -> ReadStats:
         """Concurrent read of ``region`` split over ``prod(scheme)`` readers
         (threads). Returns aggregated stats; ``seconds`` is wall time.
 
         The spatial index is probed once for the whole region; per-reader
         sub-plans narrow that candidate set vectorized instead of re-scanning
-        per thread.
+        per thread.  ``log_access=False`` suppresses the telemetry record —
+        used by :meth:`read_pattern`, whose best-of-schemes sweep is one
+        logical access, not ``len(schemes)`` of them.
         """
         parts = decompose_region(region, scheme)
         agg = ReadStats()
@@ -345,11 +435,14 @@ class Dataset:
         plans = [build_read_plan(self.index, var, p, candidates=candidates)
                  for p in parts]
 
+        concurrent = len(plans) > 1
+
         def one(plan: ReadPlan):
-            _, st = self.read_planned(plan, engine=engine)
+            _, st = self.read_planned(plan, engine=engine,
+                                      note_drift=not concurrent)
             return st
 
-        if len(plans) == 1:
+        if not concurrent:
             results = [one(plans[0])]
         else:
             with ThreadPoolExecutor(max_workers=min(32, len(plans))) as ex:
@@ -357,6 +450,8 @@ class Dataset:
         agg.seconds = time.perf_counter() - t0
         for st in results:
             agg.merge(st)
+        if log_access:
+            self._record_access(var, region, agg)
         return agg
 
     def read_pattern(self, var: str, pattern: str,
@@ -371,35 +466,64 @@ class Dataset:
         shares the region's candidate set.
         """
         shape = self.index.var_shape(var)
-        kwargs = {}
-        if slab_thickness is not None:
-            kwargs["slab_thickness"] = slab_thickness
-        region = pattern_region(pattern, shape, **kwargs)
+        region = resolve_pattern(shape, pattern, slab_thickness)
         tp = time.perf_counter()
         candidates = self.index.spatial_index(var).query(region.lo, region.hi)
         probe_seconds = time.perf_counter() - tp
         best = None
         for scheme in best_decompositions(num_readers, ndim=len(shape)):
             st = self.read_decomposed(var, region, scheme,
-                                      candidates=candidates, engine=engine)
+                                      candidates=candidates, engine=engine,
+                                      log_access=False)
             if best is None or st.seconds < best[1].seconds:
                 best = (scheme, st)
-        # the one shared index probe is attributed to the reported best
+        # the one shared index probe is attributed to the reported best;
+        # the whole best-of-schemes sweep is ONE logical access pattern
         best[1].probe_seconds += probe_seconds
+        self._record_access(var, region, best[1])
         return best
 
 
-def reorganize(src_dir: str, dst_dir: str, var: str, layout: LayoutPlan, *,
+def reorganize(src_dir: str, dst_dir: str, var: str,
+               layout: LayoutPlan | str = "auto", *,
                engine: str | IOEngine = "memmap",
-               align: int | None = None) -> tuple:
+               align: int | None = None,
+               policy: LayoutPolicy | None = None) -> tuple:
     """Post-hoc reorganization (paper §5.1): pull each chunk region of the
     new ``layout`` from ``src_dir`` through the read planner and write the
     reorganized dataset to ``dst_dir`` through the write planner.
 
+    ``layout="auto"`` (the default) asks the source dataset's
+    :class:`~repro.core.policy.LayoutPolicy` — built from its
+    ``access_log.json`` pattern history and persisted calibration — which
+    target layout the observed read mix favors; with no usable history the
+    policy degrades to the dimension-aware default scheme.  Either way the
+    decision (scheme, scores, ``reason``) is persisted in the destination's
+    ``index.json`` under ``attrs["policy"][var]``.  ``policy`` injects a
+    prepared policy instead (tests, cross-dataset history).
+
     Returns ``(read_seconds, Dataset, WriteStats)`` — the returned session
     is open on the destination.
     """
-    src = Dataset.open(src_dir, engine=engine)
+    if isinstance(layout, str) and layout != "auto":
+        raise ValueError(f"layout must be a LayoutPlan or 'auto', "
+                         f"got {layout!r}")
+    # the source session's bulk chunk reads are mechanical, not an
+    # application access pattern: keep them out of the telemetry
+    src = Dataset.open(src_dir, engine=engine, telemetry=False)
+    decision = None
+    if isinstance(layout, str):
+        pol = policy if policy is not None else \
+            LayoutPolicy.for_dataset(src_dir)
+        rows = src.index.var_rows(var)
+        blocks = [Block(tuple(int(v) for v in rows.los[i]),
+                        tuple(int(v) for v in rows.his[i]),
+                        owner=int(rows.subfiles[i]), block_id=i)
+                  for i in range(rows.n)]
+        decision = pol.choose_layout(var, blocks, src.index.var_shape(var),
+                                     num_stagers=max(
+                                         1, src.index.num_subfiles))
+        layout = decision.layout
     t0 = time.perf_counter()
     data = {}
     synth = []
@@ -423,4 +547,7 @@ def reorganize(src_dir: str, dst_dir: str, var: str, layout: LayoutPlan, *,
     dst = Dataset.create(dst_dir, engine=engine)
     wstats = dst.write(var, ident, src.index.var_dtype(var), data,
                        align=align)
+    if decision is not None:
+        dst.index.attrs.setdefault("policy", {})[var] = decision.to_json()
+        dst.flush()
     return read_seconds, dst, wstats

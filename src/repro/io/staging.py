@@ -40,11 +40,13 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Mapping
+from typing import Mapping, Sequence
 
 import numpy as np
 
+from ..core.blocks import Block, bounding_box
 from ..core.layouts import LayoutPlan
+from ..core.policy import LayoutPolicy
 from .engine import IOEngine
 from .format import DatasetIndex
 from .reader import Dataset
@@ -70,11 +72,18 @@ class StagingExecutor:
     def __init__(self, dirpath: str, num_workers: int = 2,
                  queue_depth: int = 2, link_gbps: float | None = None,
                  align: int | None = None,
-                 engine: str | IOEngine = "auto"):
+                 engine: str | IOEngine = "auto",
+                 policy: LayoutPolicy | None = None):
         self.dirpath = dirpath
         self.num_workers = num_workers
         self.link_gbps = link_gbps
         self.align = align
+        #: layout decision-maker behind ``submit(..., plan="auto")``; by
+        #: default a history-less policy (dimension-aware default scheme) —
+        #: inject e.g. ``LayoutPolicy.for_dataset(prev_run_dir)`` to stage
+        #: into the layout a previous run's read mix favored
+        self.policy = policy if policy is not None else LayoutPolicy()
+        self._decisions: dict = {}    # (var, global_shape) -> PolicyDecision
         self._ds = Dataset.create(dirpath, engine=engine)
         self._q: queue.Queue = queue.Queue(maxsize=queue_depth)
         self._results: list = []
@@ -86,11 +95,41 @@ class StagingExecutor:
             w.start()
 
     # -- producer side -------------------------------------------------------
+    def layout_for(self, var: str, blocks: Sequence[Block],
+                   global_shape: Sequence[int] | None = None) -> LayoutPlan:
+        """The policy-chosen staging layout for ``var`` (cached per
+        ``(var, global_shape)`` so repeated steps score the candidates
+        once)."""
+        blocks = list(blocks)
+        if global_shape is None:
+            global_shape = bounding_box(blocks).hi
+        key = (var, tuple(global_shape))
+        if key not in self._decisions:
+            self._decisions[key] = self.policy.choose_layout(
+                var, blocks, global_shape, num_stagers=self.num_workers)
+        return self._decisions[key].layout
+
     def submit(self, step: int, var: str, dtype,
-               plan: LayoutPlan, data: Mapping[int, np.ndarray]) -> float:
+               plan: LayoutPlan | str, data: Mapping[int, np.ndarray],
+               blocks: Sequence[Block] | None = None,
+               global_shape: Sequence[int] | None = None) -> float:
         """Hand one output to staging. Copies the producer's block data (the
         device->staging transfer) and enqueues; returns seconds the producer
-        was blocked (queue full => blocking regime)."""
+        was blocked (queue full => blocking regime).
+
+        ``plan="auto"`` routes the layout choice through the executor's
+        :class:`~repro.core.policy.LayoutPolicy` — ``blocks`` (the
+        producer's decomposition) is required then, ``global_shape``
+        defaults to the blocks' bounding box.
+        """
+        if isinstance(plan, str):
+            if plan != "auto":
+                raise ValueError(f"plan must be a LayoutPlan or 'auto', "
+                                 f"got {plan!r}")
+            if blocks is None:
+                raise ValueError("plan='auto' needs blocks= (the producer's "
+                                 "block decomposition)")
+            plan = self.layout_for(var, blocks, global_shape)
         t0 = time.perf_counter()
         staged = {k: np.copy(v) for k, v in data.items()}   # the transfer
         if self.link_gbps:

@@ -1,0 +1,524 @@
+"""ISSUE 4: access-pattern telemetry (AccessLog), the unified LayoutPolicy,
+pattern-aware ``layout="auto"`` routing (reorganize / staging / checkpoint),
+dimension-aware default schemes, and recalibrate-on-drift."""
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (plan_layout, simulate_load_balance,
+                        uniform_grid_blocks)
+from repro.core.blocks import Block
+from repro.core.cost_model import (CALIBRATION_NAME, CalibrationDrift,
+                                   EngineCalibration, load_calibration,
+                                   save_calibration)
+from repro.core.layouts import default_reorg_scheme
+from repro.core.policy import (ACCESS_LOG_NAME, AccessLog, AccessRecord,
+                               LayoutPolicy, classify_region,
+                               estimate_read_shape)
+from repro.core.read_patterns import pattern_region
+from repro.core.reorg import plan_reorganization
+from repro.io import Dataset, StagingExecutor, drive_pattern_mix, reorganize
+
+GLOBAL = (32, 32, 32)
+
+
+def _world(seed=3, nprocs=4):
+    blocks = simulate_load_balance(uniform_grid_blocks(GLOBAL, (8, 8, 8)),
+                                   num_procs=nprocs, seed=seed)
+    rng = np.random.default_rng(seed)
+    data = {b.block_id: rng.standard_normal(b.shape).astype(np.float32)
+            for b in blocks}
+    ref = np.zeros(GLOBAL, np.float32)
+    for b in blocks:
+        ref[b.slices()] = data[b.block_id]
+    return blocks, data, ref
+
+
+def _slab_records(n_slab=8, n_sub=2, var="B", shape=GLOBAL):
+    slab = pattern_region("plane_xy", shape, slab_thickness=4)
+    sub = pattern_region("sub_area", shape)
+    now = time.time()
+    recs = []
+    for region, count in ((slab, n_slab), (sub, n_sub)):
+        for _ in range(count):
+            recs.append(AccessRecord(
+                var=var, kind="read",
+                shape_class=classify_region(region, shape),
+                lo=region.lo, hi=region.hi, runs=64, groups=8,
+                nbytes=region.volume * 4, seconds=1e-3, ts=now))
+    return recs
+
+
+# -- fingerprints ------------------------------------------------------------
+
+def test_classify_region():
+    g = (64, 64, 64)
+    assert classify_region(Block((0, 0, 0), g), g) == "whole_domain"
+    assert classify_region(Block((16, 16, 16), (48, 48, 48)),
+                           g) == "sub_area"
+    assert classify_region(Block((0, 0, 32), (64, 64, 36)),
+                           g) == "slab(axis=2)"
+    assert classify_region(Block((32, 0, 0), (33, 64, 64)),
+                           g) == "slab(axis=0)"
+    assert classify_region(Block((32, 32, 0), (33, 33, 64)),
+                           g) == "pencil(axis=2)"
+    assert classify_region(Block((0, 0), (4, 64)), (64, 64)) \
+        == "slab(axis=0)"
+    assert classify_region(Block((1, 1, 1), (2, 2, 2)), g) == "point"
+
+
+def test_estimate_read_shape_matches_planner_intuition():
+    """Slab-aligned chunking collapses a z-slab read to a handful of runs;
+    cubic chunking pays one run per (x, y) column."""
+    from repro.core.blocks import regular_decomposition
+    g = (64, 64, 64)
+    region = Block((0, 0, 32), (64, 64, 36))
+
+    def est(scheme):
+        t = regular_decomposition(g, scheme)
+        los = np.asarray([b.lo for b in t])
+        his = np.asarray([b.hi for b in t])
+        return estimate_read_shape(los, his, region, 4)
+
+    cubic = est((4, 4, 4))
+    slab = est((2, 2, 16))
+    assert cubic.bytes_needed == slab.bytes_needed == region.volume * 4
+    assert cubic.runs == 64 * 64          # one run per column
+    assert slab.runs == 4                 # four fully-covered chunks
+    assert slab.span_bytes == slab.bytes_needed
+
+
+# -- access log --------------------------------------------------------------
+
+def test_access_log_roundtrip_and_bound(tmp_path):
+    d = str(tmp_path)
+    log = AccessLog(d, capacity=16)
+    recs = _slab_records(n_slab=40, n_sub=10)
+    for r in recs:
+        log.append(r)
+    assert os.path.exists(log.path)
+    # reopen (a different instance == different process) — same tail
+    log2 = AccessLog(d, capacity=16)
+    got = log2.records()
+    assert len(got) == 16
+    assert [r.to_json() for r in got] == [r.to_json() for r in recs[-16:]]
+    # the policy sees the same pattern mix either way
+    mix1 = LayoutPolicy(log=log).pattern_mix(log.records())
+    mix2 = LayoutPolicy(log=log2).pattern_mix(got)
+    assert sorted((round(w, 6), cls) for w, _r, cls in mix1) \
+        == sorted((round(w, 6), cls) for w, _r, cls in mix2)
+
+
+def test_access_log_corrupt_and_absent_degrade(tmp_path):
+    d = str(tmp_path)
+    log = AccessLog(d)
+    assert log.records() == []            # absent
+    with open(log.path, "w") as f:
+        f.write("{not json")
+    assert log.records() == []            # corrupt
+    with open(log.path, "w") as f:
+        json.dump({"version": 999, "records": []}, f)
+    assert log.records() == []            # future version
+    # stale records are dropped at load
+    log.clear()
+    old = _slab_records(n_slab=1, n_sub=0)[0]
+    log.append(AccessRecord(**{**old.__dict__, "ts": time.time() - 1e9}))
+    assert log.records() == []
+
+
+def test_access_log_concurrent_appends_never_corrupt(tmp_path):
+    """Staging workers + reader threads appending through independent
+    AccessLog instances: the file must always parse as one complete JSON
+    document; at most in-flight records are lost, none are mangled."""
+    d = str(tmp_path)
+    logs = [AccessLog(d) for _ in range(3)]
+    rec = _slab_records(n_slab=1, n_sub=0)[0]
+    errors = []
+    stop = threading.Event()
+
+    def writer(log, tid):
+        try:
+            for i in range(30):
+                log.append(AccessRecord(**{**rec.__dict__,
+                                           "var": f"v{tid}_{i}"}))
+        except Exception as e:            # noqa: BLE001
+            errors.append(e)
+
+    def validator():
+        while not stop.is_set():
+            try:
+                with open(os.path.join(d, ACCESS_LOG_NAME)) as f:
+                    json.load(f)          # must never be half-written
+            except FileNotFoundError:
+                pass
+            except Exception as e:        # noqa: BLE001
+                errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(log, i))
+               for i, log in enumerate(logs)]
+    v = threading.Thread(target=validator)
+    v.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    v.join()
+    assert not errors
+    got = AccessLog(d).records()
+    assert 1 <= len(got) <= 90
+    for r in got:                         # every surviving record is intact
+        assert r.var.startswith("v") and r.ndim == 3 and r.kind == "read"
+
+
+# -- dimension-aware default scheme (bugfix satellite) -----------------------
+
+def test_default_reorg_scheme_dimension_aware():
+    assert default_reorg_scheme(3) == (4, 4, 4)
+    assert default_reorg_scheme(2) == (8, 8)
+    assert default_reorg_scheme(1) == (64,)
+    assert default_reorg_scheme(4) == (4, 4, 2, 2)
+    # clamped to tiny extents — no zero-size chunks possible
+    assert default_reorg_scheme(3, global_shape=(2, 64, 64)) == (2, 4, 4)
+
+
+@pytest.mark.parametrize("shape,block", [((64, 64), (16, 16)),
+                                         ((8, 8, 8, 8), (4, 4, 4, 4)),
+                                         ((128,), (16,))])
+def test_plan_reorganization_matches_rank(shape, block):
+    blocks = uniform_grid_blocks(shape, block)
+    plan = plan_reorganization(blocks, shape)      # scheme=None: rank-aware
+    assert plan.num_chunks > 0
+    assert all(len(c.chunk.lo) == len(shape) for c in plan.chunks)
+    assert sum(c.chunk.volume for c in plan.chunks) == int(np.prod(shape))
+
+
+def test_plan_layout_rejects_rank_mismatched_scheme():
+    blocks = uniform_grid_blocks((64, 64), (16, 16))
+    with pytest.raises(ValueError, match="rank"):
+        plan_layout("reorganized", blocks, num_procs=0,
+                    global_shape=(64, 64), reorg_scheme=(4, 4, 4))
+
+
+# -- the policy decision -----------------------------------------------------
+
+def test_policy_empty_history_defaults_with_reason():
+    blocks, _, _ = _world()
+    d = LayoutPolicy(records=[]).choose_layout("B", blocks, GLOBAL)
+    assert d.strategy == "reorganized"
+    assert d.scheme == (4, 4, 4)
+    assert "no usable access history" in d.reason
+    assert d.num_records == 0
+
+
+def test_policy_skewed_mix_picks_slab_scheme():
+    blocks, _, _ = _world()
+    pol = LayoutPolicy(records=_slab_records())
+    d = pol.choose_layout("B", blocks, GLOBAL, num_stagers=2)
+    assert d.strategy == "reorganized"
+    assert d.scheme != (4, 4, 4)
+    # thin-z reads: the winning scheme splits z at least as finely as x/y
+    assert d.scheme[2] == max(d.scheme)
+    cubic = d.scores["reorganized4x4x4"]
+    chosen = d.scores["reorganized" + "x".join(map(str, d.scheme))]
+    assert chosen < cubic
+    assert "slab(axis=2)" in d.reason
+    assert d.mix["slab(axis=2)"] == pytest.approx(0.8)
+
+
+def test_policy_other_variable_history_is_inherited():
+    blocks, _, _ = _world()
+    pol = LayoutPolicy(records=_slab_records(var="other"))
+    d = pol.choose_layout("B", blocks, GLOBAL)
+    assert d.num_records > 0 and d.scheme != (4, 4, 4)
+
+
+def test_policy_foreign_history_outside_shape_is_not_inherited():
+    """Records of a larger same-rank variable whose regions don't fit this
+    variable's shape are geometrically meaningless — the decision must be
+    the honest default, not a zero-score insertion-order accident."""
+    big = (256, 256, 256)
+    blocks, _, _ = _world()
+    pol = LayoutPolicy(records=_slab_records(var="huge", shape=big))
+    d = pol.choose_layout("B", blocks, GLOBAL)   # GLOBAL = 32^3
+    assert d.scheme == (4, 4, 4)
+    assert "default" in d.reason and d.num_records == 0
+
+
+# -- telemetry + reorganize(layout="auto") end to end ------------------------
+
+def test_reorganize_auto_end_to_end(tmp_path):
+    blocks, data, ref = _world()
+    src = str(tmp_path / "src")
+    ds = Dataset.create(src)
+    ds.write("B", plan_layout("subfiled_fpp", blocks, num_procs=4,
+                              global_shape=GLOBAL), np.float32, data)
+    # skewed read mix: >=80% z-slab reads, observed through the real API
+    drive_pattern_mix(ds, "B", [("plane_xy", 8), ("sub_area", 2)],
+                      slab_thickness=4)
+    ds.close()
+    assert os.path.exists(os.path.join(src, ACCESS_LOG_NAME))
+
+    _, dst, _ = reorganize(src, str(tmp_path / "dst"), "B", "auto")
+    info = dst.index.attrs["policy"]["B"]
+    assert info["strategy"] == "reorganized"
+    assert tuple(info["scheme"]) != (4, 4, 4)       # non-cubic for slab mix
+    assert info["num_records"] == 10
+    assert "slab(axis=2)" in info["reason"]
+    arr, _ = dst.read("B", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+    # the decision is persisted: reopening the destination sees it
+    dst.close()
+    again = Dataset.open(str(tmp_path / "dst"))
+    assert again.index.attrs["policy"]["B"]["reason"] == info["reason"]
+    again.close()
+
+
+def test_reorganize_auto_corrupt_log_degrades_to_default(tmp_path):
+    blocks, data, ref = _world()
+    src = str(tmp_path / "src")
+    ds = Dataset.create(src)
+    ds.write("B", plan_layout("subfiled_fpp", blocks, num_procs=4,
+                              global_shape=GLOBAL), np.float32, data)
+    ds.close()
+    with open(os.path.join(src, ACCESS_LOG_NAME), "w") as f:
+        f.write("]]] definitely not json")
+    _, dst, _ = reorganize(src, str(tmp_path / "dst"), "B", "auto")
+    info = dst.index.attrs["policy"]["B"]
+    assert tuple(info["scheme"]) == (4, 4, 4)       # today's default
+    assert "no usable access history" in info["reason"]
+    arr, _ = dst.read("B", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+    dst.close()
+
+
+def test_reorganize_rejects_unknown_layout_string(tmp_path):
+    with pytest.raises(ValueError, match="auto"):
+        reorganize(str(tmp_path), str(tmp_path / "x"), "B", "fastest")
+
+
+def test_mix_counts_preserves_fractional_proportions():
+    from repro.io.patterns import mix_counts
+    assert mix_counts([("a", 8), ("b", 2)]) == [("a", 8), ("b", 2)]
+    assert mix_counts([("a", 0.8), ("b", 0.2)]) == [("a", 4), ("b", 1)]
+    with pytest.raises(ValueError, match="positive"):
+        mix_counts([("a", 0.0)])
+
+
+def test_read_pattern_logs_one_record_per_logical_access(tmp_path):
+    """The best-of-schemes sweep inside read_pattern is ONE application
+    access — it must not over-weight the mix by len(schemes) records."""
+    blocks, data, _ = _world()
+    d = str(tmp_path / "rp")
+    ds = Dataset.create(d)
+    ds.write("B", plan_layout("chunked", blocks, num_procs=4,
+                              global_shape=GLOBAL), np.float32, data)
+    ds.read_pattern("B", "plane_xy", num_readers=4)   # 6 factorizations
+    ds.close()
+    recs = ds.access_log.records()
+    assert len(recs) == 1 and recs[0].shape_class == "slab(axis=2)"
+
+
+def test_access_log_batched_appends_flush_on_close(tmp_path):
+    """Dataset telemetry batches appends; flush()/close() drain them."""
+    blocks, data, _ = _world()
+    d = str(tmp_path / "batched")
+    ds = Dataset.create(d)
+    ds.write("B", plan_layout("chunked", blocks, num_procs=4,
+                              global_shape=GLOBAL), np.float32, data)
+    region = Block((0, 0, 0), GLOBAL)
+    for _ in range(3):                    # fewer than the flush batch
+        ds.read("B", region)
+    # a fresh instance (another process) may not see unflushed records,
+    # but the owning session always does
+    assert len(ds.access_log.records()) == 3
+    ds.close()
+    assert len(AccessLog(d).records()) == 3
+
+
+def test_telemetry_can_be_disabled(tmp_path):
+    blocks, data, _ = _world()
+    d = str(tmp_path / "quiet")
+    ds = Dataset.create(d, telemetry=False)
+    ds.write("B", plan_layout("chunked", blocks, num_procs=4,
+                              global_shape=GLOBAL), np.float32, data)
+    ds.read("B", Block((0, 0, 0), GLOBAL))
+    ds.close()
+    assert not os.path.exists(os.path.join(d, ACCESS_LOG_NAME))
+
+
+# -- staging + checkpoint routing --------------------------------------------
+
+def test_staging_auto_layout(tmp_path):
+    blocks, data, ref = _world()
+    sd = str(tmp_path / "staged")
+    pol = LayoutPolicy(records=_slab_records())
+    ex = StagingExecutor(sd, num_workers=2, queue_depth=2, policy=pol)
+    for step in range(2):
+        ex.submit(step, "B", np.float32, "auto", data, blocks=blocks,
+                  global_shape=GLOBAL)
+    results = ex.drain()
+    ex.close()
+    assert all(r.error is None for r in results)
+    decision = ex._decisions[("B", GLOBAL)]
+    assert decision.scheme != (4, 4, 4)
+    ds = Dataset.open(sd)
+    for step in range(2):
+        arr, _ = ds.read(f"B@{step}", Block((0, 0, 0), GLOBAL))
+        np.testing.assert_array_equal(arr, ref)
+    ds.close()
+
+
+def test_staging_auto_requires_blocks(tmp_path):
+    ex = StagingExecutor(str(tmp_path / "s2"), num_workers=1)
+    with pytest.raises(ValueError, match="blocks"):
+        ex.submit(0, "B", np.float32, "auto", {})
+    ex.close()
+
+
+def test_checkpoint_auto_strategy_restore_feedback(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    root = str(tmp_path / "ckpt")
+    tree = {"w": np.arange(16 ** 3, dtype=np.float32).reshape(16, 16, 16),
+            "step_scalar": np.float32(7.0)}
+    mgr = CheckpointManager(root, strategy="auto")
+    st = mgr.save(1, tree)
+    assert st.num_chunks > 0
+    man1 = json.load(open(os.path.join(mgr.step_dir(1), "manifest.json")))
+    assert "no usable access history" in man1["policy"]["w"]["reason"]
+
+    got, rstats = mgr.restore(1)
+    np.testing.assert_array_equal(got["w"], tree["w"])
+    # restore fed the manager-root access log ...
+    assert os.path.exists(os.path.join(root, ACCESS_LOG_NAME))
+    recs = mgr.access_log.records()
+    assert recs and all(r.kind == "restore" for r in recs)
+    # ... and the next save's policy decision is based on it
+    mgr.save(2, tree)
+    man2 = json.load(open(os.path.join(mgr.step_dir(2), "manifest.json")))
+    assert man2["policy"]["w"]["num_records"] >= 1
+    assert "no usable access history" not in man2["policy"]["w"]["reason"]
+    got2, _ = mgr.restore(2)
+    np.testing.assert_array_equal(got2["w"], tree["w"])
+
+
+def test_async_checkpointer_auto_scheme(tmp_path):
+    from repro.checkpoint.async_ckpt import AsyncCheckpointer
+    blocks, data, ref = _world()
+    tree = {"B": ref}
+    ck = AsyncCheckpointer(str(tmp_path / "ac"), reorg_scheme="auto",
+                           num_workers=2,
+                           policy=LayoutPolicy(records=_slab_records()))
+    ck.save(0, tree, block_map={"B": blocks})
+    results = ck.finish()
+    assert results and all(r.error is None for r in results)
+    ds = Dataset.open(str(tmp_path / "ac"))
+    arr, _ = ds.read("B@0", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+    ds.close()
+
+
+# -- recalibrate-on-drift ----------------------------------------------------
+
+def test_calibration_drift_tracker():
+    dr = CalibrationDrift(ratio=2.0, min_seconds=1e-3, trip_count=3,
+                          cooldown=5)
+    # below the noise floor: never counts
+    for _ in range(10):
+        assert not dr.note(1e-5, 1e-4)
+    # divergence must be consecutive — an agreeing plan resets the streak
+    assert not dr.note(1.0, 0.1)
+    assert not dr.note(1.0, 0.1)
+    assert not dr.note(1.0, 1.1)
+    assert not dr.note(1.0, 0.1)
+    assert not dr.note(1.0, 0.1)
+    assert dr.note(1.0, 0.1)              # third consecutive: trip
+    assert dr.trips == 1
+    # cooldown: the next 5 observations are ignored
+    for _ in range(5):
+        assert not dr.note(1.0, 0.1)
+
+
+def test_drift_invalidates_stale_calibration(tmp_path):
+    """An injected stale calibration.json (absurd constants) is invalidated
+    after K persistently >2x-divergent auto plans, and the next auto call
+    re-probes the storage."""
+    blocks, data, ref = _world()
+    d = str(tmp_path / "driftds")
+    ds0 = Dataset.create(d)
+    ds0.write("B", plan_layout("subfiled_fpp", blocks, num_procs=4,
+                               global_shape=GLOBAL), np.float32, data)
+    ds0.close()
+    bogus = EngineCalibration(
+        seek_latency_s=0.05, preadv_group_overhead_s=0.0,
+        seq_read_bps=1e12, seq_write_bps=1e12, memmap_bps=1e12,
+        page_miss_s=0.05, parallel_scaling=1.0, created_at=time.time())
+    save_calibration(bogus, d)
+
+    ds = Dataset.open(d, engine="auto")
+    region = Block((0, 0, 0), GLOBAL)
+    arr, st = ds.read_planned(ds.plan_read("B", region))
+    assert st.predicted_seconds >= 1e-3       # bogus cal predicts huge
+    for _ in range(4):                    # reach DRIFT_TRIP_COUNT auto plans
+        arr, st = ds.read_planned(ds.plan_read("B", region))
+    # tripped: the stale file is gone (or already replaced by a re-probe)
+    cal = load_calibration(d)
+    assert cal is None or cal.seek_latency_s != bogus.seek_latency_s
+    # the next auto call re-probes and persists honest constants
+    arr, st = ds.read_planned(ds.plan_read("B", region))
+    np.testing.assert_array_equal(arr, ref)
+    fresh = load_calibration(d)
+    assert fresh is not None
+    assert fresh.seek_latency_s < bogus.seek_latency_s
+    assert fresh.created_at >= bogus.created_at
+    ds.close()
+
+
+def test_concurrent_subplans_do_not_trip_drift(tmp_path):
+    """Decomposed reads measure bandwidth-contended sub-plan times; they
+    must not count toward recalibrate-on-drift (a healthy calibration would
+    be serially indicted by every concurrent read)."""
+    blocks, data, _ = _world()
+    d = str(tmp_path / "drift_dec")
+    ds0 = Dataset.create(d)
+    ds0.write("B", plan_layout("subfiled_fpp", blocks, num_procs=4,
+                               global_shape=GLOBAL), np.float32, data)
+    ds0.close()
+    bogus = EngineCalibration(
+        seek_latency_s=0.05, preadv_group_overhead_s=0.0,
+        seq_read_bps=1e12, seq_write_bps=1e12, memmap_bps=1e12,
+        page_miss_s=0.05, parallel_scaling=1.0, created_at=time.time())
+    save_calibration(bogus, d)
+    ds = Dataset.open(d, engine="auto")
+    region = Block((0, 0, 0), GLOBAL)
+    for _ in range(3):                    # 3 x 8 divergent sub-plans
+        ds.read_decomposed("B", region, (2, 2, 2))
+    # concurrent sub-plans were excluded from drift accounting: the (still
+    # loaded, still divergent) calibration file was never invalidated
+    cal = load_calibration(d)
+    assert cal is not None and cal.seek_latency_s == bogus.seek_latency_s
+    ds.close()
+
+
+def test_injected_calibration_is_never_drift_invalidated(tmp_path):
+    """calibration= pins the model: drift tracking must not second-guess an
+    explicitly injected calibration."""
+    blocks, data, _ = _world()
+    d = str(tmp_path / "pinned")
+    cold = EngineCalibration(
+        seek_latency_s=1e-3, preadv_group_overhead_s=5e-6, seq_read_bps=2e9,
+        seq_write_bps=1e9, memmap_bps=8e9, page_miss_s=1e-3,
+        parallel_scaling=8.0, created_at=0.0)
+    ds = Dataset.create(d, engine="auto", calibration=cold)
+    ds.write("B", plan_layout("subfiled_fpp", blocks, num_procs=4,
+                              global_shape=GLOBAL), np.float32, data)
+    region = Block((0, 0, 0), GLOBAL)
+    for _ in range(10):
+        ds.read_planned(ds.plan_read("B", region))
+    assert ds._calibration is cold        # still the injected one
+    ds.close()
