@@ -1,5 +1,5 @@
-"""Layout policy (ISSUE 4) — measured validation of pattern-aware
-reorganization.
+"""Layout policy (ISSUE 4, lifecycle-aware v2 in ISSUE 5) — measured
+validation of pattern-aware reorganization.
 
 The benchmark writes the benchmark world with the seed (``subfiled_fpp``)
 layout, drives a *skewed* read mix (>=80% thin z-slab reads, the rest
@@ -15,6 +15,18 @@ sub-domain reads) through the real ``Dataset.read`` telemetry path, then:
    than the fixed 4x4x4 scheme the code shipped with before the policy
    existed.
 
+Two lifecycle cells (ISSUE 5) extend the matrix:
+
+* **write-heavy mix** — with only two observed slab reads to amortize
+  over, read-only v1 scoring still picks the maximally fine slab split
+  (it wins the read matrix), while lifecycle v2 charges the gather +
+  write + per-chunk build cost and picks a coarser layout.  Both choices
+  are then *measured end to end* (reorganize + the expected replayed
+  reads): the v2 choice must come in at least 10% faster.
+* **cross-run prior** — a warm dataset's exported history seeds a cold
+  dataset with zero telemetry of its own; the seeded decision must match
+  the warm one (the no-prior control degrades to the default scheme).
+
 A final deterministic section replays the pure decision on synthetic
 records (no I/O), so regime behavior is asserted even on machines whose
 page cache flattens the measured differences.
@@ -22,10 +34,14 @@ page cache flattens the measured differences.
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from repro.core import plan_layout
-from repro.core.policy import LayoutPolicy
+from repro.core.blocks import Block
+from repro.core.cost_model import FALLBACK_CALIBRATION
+from repro.core.policy import AccessLog, LayoutPolicy
 from repro.io import Dataset, reorganize
 
 from .common import (ENGINE, GLOBAL, NPROCS, SMOKE, TmpDir, build_world,
@@ -50,9 +66,12 @@ def _matrix(tmp: TmpDir) -> None:
                        global_shape=GLOBAL)
     write_dataset(src, "B", plan, data)
 
-    # observe the skewed mix through the real telemetry path
+    # observe the skewed mix through the real telemetry path; several
+    # rounds, so the lifecycle horizon (E[reads] ~= records observed) is
+    # read-dominated — this cell grades the read-side promise, the
+    # write-heavy cell below grades the build-side one
     ds = Dataset.open(src, engine=ENGINE)
-    drive_pattern_mix(ds, "B", MIX, slab_thickness=SLAB)
+    drive_pattern_mix(ds, "B", MIX, rounds=3, slab_thickness=SLAB)
     ds.close()
 
     # 1. the policy decision (recorded in the destination index)
@@ -110,6 +129,135 @@ def _matrix(tmp: TmpDir) -> None:
         "policy choice not faster than the fixed 4x4x4 on the skewed mix"
 
 
+def _source_rows_blocks(src: str):
+    """The source dataset's stored extents, as the policy consumes them."""
+    ds = Dataset.open(src, telemetry=False)
+    rows = ds.index.var_rows("B")
+    blocks = [Block(tuple(int(v) for v in rows.los[i]),
+                    tuple(int(v) for v in rows.his[i]),
+                    owner=int(rows.subfiles[i]), block_id=i)
+              for i in range(rows.n)]
+    nsub = max(1, ds.index.num_subfiles)
+    ds.close()
+    return rows, blocks, nsub
+
+
+#: the write-heavy cell's observed history: two slab reads, nothing more —
+#: the build cost amortizes over E[reads] ~= 2
+WRITE_HEAVY_MIX = (("plane_xy", 2),)
+WRITE_HEAVY_REPLAYS = 2
+
+
+def _write_heavy_cell(tmp: TmpDir) -> None:
+    """Read-only v1 vs lifecycle v2 on a write-heavy mix, measured end to
+    end: reorganization (build) plus the expected replayed reads."""
+    blocks, data = build_world(seed=31)
+    src = tmp.sub("lp_wh_src")
+    plan = plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    write_dataset(src, "B", plan, data)
+    ds = Dataset.open(src, engine=ENGINE)
+    drive_pattern_mix(ds, "B", WRITE_HEAVY_MIX, slab_thickness=SLAB)
+    ds.close()
+
+    # decisions: pinned calibration so the *choice* is deterministic across
+    # machines; the measurement below is real
+    rows, pol_blocks, nsub = _source_rows_blocks(src)
+    v1 = LayoutPolicy.for_dataset(
+        src, calibration=FALLBACK_CALIBRATION,
+        include_write_cost=False).choose_layout(
+        "B", pol_blocks, GLOBAL, num_stagers=nsub, current_extents=rows)
+    v2 = LayoutPolicy.for_dataset(
+        src, calibration=FALLBACK_CALIBRATION).choose_layout(
+        "B", pol_blocks, GLOBAL, num_stagers=nsub, current_extents=rows)
+    emit("layout_policy/write_heavy/decisions", 0.0,
+         f"v1={v1.strategy}:{v1.scheme};v2={v2.strategy}:{v2.scheme};"
+         f"E={v2.expected_reads:.1f}")
+    assert (v1.strategy, v1.scheme) != (v2.strategy, v2.scheme), \
+        f"lifecycle scoring did not change the write-heavy choice: {v1}"
+    assert v2.layout.num_chunks < v1.layout.num_chunks, \
+        "v2 should trade read fineness for a cheaper build"
+
+    # end to end, best of a few repetitions per leg: build the chosen
+    # layout (reorganize) + the expected number of replayed mix reads
+    totals = {}
+    for name, dec in (("v1_read_only", v1), ("v2_lifecycle", v2)):
+        best = None
+        for rep in range(3):
+            dst = tmp.sub(f"lp_wh_{name}_{rep}")
+            t0 = time.perf_counter()
+            _, sess, _ = reorganize(src, dst, "B", dec.layout,
+                                    engine=ENGINE)
+            build_s = time.perf_counter() - t0
+            mix_s, _ = measure_pattern_mix(sess, "B", WRITE_HEAVY_MIX,
+                                           repeats=3, slab_thickness=SLAB)
+            sess.close()
+            total = build_s + WRITE_HEAVY_REPLAYS * mix_s
+            best = total if best is None else min(best, total)
+        totals[name] = best
+        emit(f"layout_policy/write_heavy/{name}", best * 1e6,
+             f"chunks={dec.layout.num_chunks}")
+    ratio = totals["v2_lifecycle"] / max(totals["v1_read_only"], 1e-12)
+    emit("layout_policy/write_heavy/summary", totals["v2_lifecycle"] * 1e6,
+         f"ratio_v2_over_v1={ratio:.3f}")
+    assert totals["v2_lifecycle"] <= 0.90 * totals["v1_read_only"], \
+        f"lifecycle choice not >=10% faster end-to-end: {totals}"
+
+
+def _prior_cell(tmp: TmpDir) -> None:
+    """A cold dataset seeded with a warm run's exported prior must make
+    the warm-telemetry decision; the no-prior control degrades to the
+    default scheme."""
+    blocks, data = build_world(seed=37)
+
+    def fresh(name):
+        d = tmp.sub(name)
+        plan = plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
+                          global_shape=GLOBAL)
+        write_dataset(d, "B", plan, data)
+        return d
+
+    warm = fresh("lp_prior_warm")
+    ds = Dataset.open(warm, engine=ENGINE)
+    drive_pattern_mix(ds, "B", MIX, slab_thickness=SLAB)
+    ds.close()
+    _, warm_ds, _ = reorganize(
+        warm, tmp.sub("lp_prior_warm_dst"), "B", "auto", engine=ENGINE,
+        policy=LayoutPolicy.for_dataset(warm,
+                                        calibration=FALLBACK_CALIBRATION))
+    warm_info = warm_ds.index.attrs["policy"]["B"]
+    warm_ds.close()
+    assert warm_info["num_records"] > 0
+    prior_path = AccessLog(warm).export_prior()
+
+    cold = fresh("lp_prior_cold")          # same world, zero telemetry
+    _, c0, _ = reorganize(
+        cold, tmp.sub("lp_prior_cold_ctl"), "B", "auto", engine=ENGINE,
+        policy=LayoutPolicy.for_dataset(cold,
+                                        calibration=FALLBACK_CALIBRATION))
+    ctl_info = c0.index.attrs["policy"]["B"]
+    c0.close()
+    assert "no usable access history" in ctl_info["reason"]
+
+    _, c1, _ = reorganize(
+        cold, tmp.sub("lp_prior_cold_seeded"), "B", "auto", engine=ENGINE,
+        policy=LayoutPolicy.for_dataset(cold,
+                                        calibration=FALLBACK_CALIBRATION),
+        prior=prior_path)
+    seeded_info = c1.index.attrs["policy"]["B"]
+    c1.close()
+    emit("layout_policy/prior/decisions", 0.0,
+         f"warm={warm_info['scheme']};control={ctl_info['scheme']};"
+         f"seeded={seeded_info['scheme']};"
+         f"prior_records={seeded_info['num_prior_records']}")
+    assert seeded_info["num_prior_records"] > 0
+    assert seeded_info["scheme"] == warm_info["scheme"], \
+        f"prior-seeded cold decision {seeded_info['scheme']} != warm " \
+        f"decision {warm_info['scheme']}"
+    assert "no usable access history" not in seeded_info["reason"], \
+        "the prior did not reach the cold decision"
+
+
 def _deterministic_decision() -> None:
     """Pure-model regime check (no I/O): a slab-skewed record history must
     flip the scheme away from cubic; an empty history must not."""
@@ -136,4 +284,6 @@ def _deterministic_decision() -> None:
 
 def run(tmp: TmpDir) -> None:
     _matrix(tmp)
+    _write_heavy_cell(tmp)
+    _prior_cell(tmp)
     _deterministic_decision()

@@ -35,25 +35,42 @@ SECTIONS = [
 ]
 
 
-def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+def main(argv: list | None = None) -> int:
+    """Run the selected benchmark sections; the exit code is the contract
+    the CI bench-smoke matrix relies on:
+
+    * ``0``  — every selected leg ran to completion;
+    * ``1``  — at least one leg raised (*any* ``BaseException`` except
+      ``KeyboardInterrupt`` — a leg calling ``sys.exit(0)`` mid-crash must
+      not fake success);
+    * ``2``  — the section filter matched nothing (a typo'd CI matrix cell
+      would otherwise "pass" by running zero legs).
+    """
+    args = sys.argv[1:] if argv is None else argv
+    only = args[0] if args else None
+    selected = [(name, fn) for name, fn in SECTIONS
+                if not only or only in name]
+    if not selected:
+        known = ", ".join(name for name, _ in SECTIONS)
+        print(f"benchmarks.run: filter {only!r} matched no section "
+              f"(known: {known})", file=sys.stderr)
+        return 2
     print("name,us_per_call,derived")
     failures = []
-    for name, fn in SECTIONS:
-        if only and only not in name:
-            continue
+    for name, fn in selected:
         tmp = TmpDir(prefix=f"repro_{name}_")
         try:
             fn(tmp)
-        except Exception as e:        # noqa: BLE001 — report, keep going
+        except KeyboardInterrupt:
+            raise
+        except BaseException as e:    # noqa: BLE001 — report, keep going
             failures.append((name, e))
             print(f"{name}/FAILED,0,{type(e).__name__}", flush=True)
             traceback.print_exc(file=sys.stderr)
         finally:
             tmp.cleanup()
-    if failures:
-        raise SystemExit(1)
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -46,16 +46,18 @@ class AsyncCheckpointer:
                  n_compute: int = 256, m_staging: int = 2,
                  t_w_direct: float | None = None,
                  align: int | None = None, engine: str = "pread",
-                 policy=None):
+                 policy=None, prior: str | None = None):
         self.root = root
         #: "auto" routes every variable's staged layout through the
-        #: executor's LayoutPolicy (ISSUE 4); a tuple pins the K-way scheme
+        #: executor's LayoutPolicy (ISSUE 4); a tuple pins the K-way scheme.
+        #: ``prior`` seeds the auto decisions from a previous run's access
+        #: history (path to its access_log.json / exported prior / dir)
         self.scheme = reorg_scheme if reorg_scheme == "auto" \
             else tuple(reorg_scheme)
         self.executor = StagingExecutor(root, num_workers=num_workers,
                                         queue_depth=queue_depth,
                                         align=align, engine=engine,
-                                        policy=policy)
+                                        policy=policy, prior=prior)
         self.records: list = []
         self.n_compute = n_compute
         self.m_staging = m_staging

@@ -82,7 +82,8 @@ class CheckpointManager:
                  devices_per_host: int = 4, hosts_per_node: int = 1,
                  keep: int = 3, reorg_scheme=None, align=None,
                  engine: str | IOEngine = "memmap",
-                 policy: LayoutPolicy | None = None):
+                 policy: LayoutPolicy | None = None,
+                 prior: str | None = None):
         self.root = root
         self.strategy = strategy
         self.devices_per_host = devices_per_host
@@ -95,16 +96,34 @@ class CheckpointManager:
         #: restore-pattern history, shared across steps (checkpoint root);
         #: appends are batched — an elastic restore logs one record per
         #: shard and must not pay a ring rewrite each — and flushed once
-        #: at the end of every restore
+        #: at the end of every restore.  Every record carries the restore's
+        #: engine decision and measured seconds (``RestoreStats`` feed), so
+        #: ``strategy="auto"`` weighs expensive restore patterns harder.
         self.access_log = AccessLog(root, flush_every=16)
+        #: cross-run prior: a previous run's checkpoint root (or exported
+        #: prior file) whose restore history seeds ``strategy="auto"``
+        #: saves until this root has restore telemetry of its own
+        self.prior = prior
         self._policy = policy
 
-    def layout_policy(self) -> LayoutPolicy:
+    def layout_policy(self, prior: str | None = None) -> LayoutPolicy:
         """The policy ``strategy="auto"`` consults — over this manager's
-        own restore-pattern log unless one was injected."""
+        own restore-pattern log unless one was injected, seeded with
+        ``prior`` (or the manager-level one) when given."""
         if self._policy is None:
             self._policy = LayoutPolicy(log=self.access_log)
-        return self._policy
+            if self.prior is not None:
+                self._policy = self._policy.with_prior(self.prior)
+        pol = self._policy
+        if prior is not None:
+            pol = pol.with_prior(prior)
+        return pol
+
+    def export_prior(self, path: str | None = None) -> str:
+        """Snapshot this root's restore-pattern history as a cross-run
+        prior a future run can pass as ``prior=`` (see
+        :meth:`~repro.core.policy.AccessLog.export_prior`)."""
+        return self.access_log.export_prior(path)
 
     # -- paths ---------------------------------------------------------------
     def step_dir(self, step: int) -> str:
@@ -119,12 +138,14 @@ class CheckpointManager:
 
     # -- save ------------------------------------------------------------------
     def save(self, step: int, tree, shardings=None,
-             block_map: Mapping[str, Sequence[Block]] | None = None
-             ) -> SaveStats:
+             block_map: Mapping[str, Sequence[Block]] | None = None,
+             prior: str | None = None) -> SaveStats:
         """``tree``: pytree of arrays (params / opt state / KV caches).
         ``shardings``: matching pytree of shardings (or None: single block).
         ``block_map``: explicit name->blocks override (tests / simulated
-        hosts)."""
+        hosts).  ``prior``: seed this save's ``strategy="auto"`` decisions
+        from a previous run's restore history (per-call override of the
+        manager-level ``prior=``)."""
         t0 = time.perf_counter()
         d = self.step_dir(step)
         flat = flatten_pytree(tree)
@@ -154,9 +175,11 @@ class CheckpointManager:
             hosts = max(b.owner for b in blocks) + 1
             data = {b.block_id: arr[b.slices()] for b in blocks}
             if self.strategy == "auto":
-                decision = self.layout_policy().choose_layout(
+                # a save stages from memory: no gather term, only the
+                # write-side build cost vs the expected restore mix
+                decision = self.layout_policy(prior).choose_layout(
                     name, blocks, arr.shape, num_procs=hosts,
-                    procs_per_node=self.hosts_per_node)
+                    procs_per_node=self.hosts_per_node, align=self.align)
                 plan = decision.layout
                 policy_info[name] = decision.to_json()
             else:

@@ -27,7 +27,8 @@ from .cost_model import (PAPER_TIMINGS, CalibrationDrift, EngineCalibration,
 from .layouts import (DEFAULT_REORG_SCHEME, STRATEGIES, ChunkPlan, LayoutPlan,
                       default_reorg_scheme, plan_layout)
 from .policy import (AccessLog, AccessRecord, LayoutPolicy, PolicyDecision,
-                     candidate_schemes, classify_region, estimate_read_shape)
+                     candidate_schemes, classify_region, estimate_read_shape,
+                     estimate_write_shape, load_prior_records)
 from .merge import (MergePlan, MergeStats, build_merge_plan,
                     execute_merge_numpy, merge_blocks)
 from .read_patterns import (PATTERNS, best_decompositions, decompose_region,

@@ -59,6 +59,9 @@ __all__ = ["StagingTimings", "PAPER_TIMINGS", "posthoc_utilization",
            "CALIBRATION_TTL_S", "FALLBACK_CALIBRATION", "probe_storage",
            "save_calibration", "load_calibration", "storage_calibration",
            "predict_seconds", "choose_engine", "predict_best_seconds",
+           # lifecycle scoring (ISSUE 5)
+           "REORG_CHUNK_OVERHEAD_S", "predict_lifecycle_seconds",
+           "predict_best_seconds_batch",
            # recalibrate-on-drift (ISSUE 4)
            "CalibrationDrift", "invalidate_calibration"]
 
@@ -511,6 +514,75 @@ def predict_best_seconds(cal: EngineCalibration, *, groups: int, runs: int,
     return choose_engine(cal, groups=groups, runs=runs,
                          bytes_moved=bytes_moved, span_bytes=span_bytes,
                          direction=direction).predicted_seconds
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle scoring (ISSUE 5): one number for "build this layout, then read
+# it back ``expected_reads`` times"
+# ---------------------------------------------------------------------------
+
+#: per-target-chunk overhead of materializing a layout through
+#: ``reorganize`` / staging: one planned region read (probe + plan + Python
+#: dispatch) and one buffer assembly per chunk.  This is what makes a
+#: 256-chunk candidate honestly more expensive to *build* than an 8-chunk
+#: one even when both move the same bytes — the paper's write-side cost
+#: that read-only scoring ignored.  The bytes- and seek-dependent parts of
+#: a chunk's build are priced by the gather/write estimates; this covers
+#: only the fixed per-call dispatch.
+REORG_CHUNK_OVERHEAD_S = 5e-5
+
+
+def predict_best_seconds_batch(cal: EngineCalibration, *,
+                               groups, runs, bytes_moved, span_bytes,
+                               direction: str = "read"):
+    """Vectorized :func:`predict_best_seconds`: element-wise best-engine
+    predicted wall time over arrays of plan shapes (one entry per plan).
+    Exactly the scalar model's arithmetic, evaluated with numpy — the
+    layout policy prices hundreds of hypothetical gather plans per
+    candidate with this."""
+    import numpy as np
+    g = np.asarray(groups, dtype=np.float64)
+    r = np.asarray(runs, dtype=np.float64)
+    b = np.asarray(bytes_moved, dtype=np.float64)
+    sp = np.asarray(span_bytes, dtype=np.float64)
+    if direction == "read":
+        mm = r * cal.page_miss_s + b / cal.memmap_bps
+        stream = sp / cal.seq_read_bps + b / cal.memmap_bps
+    else:
+        mm = r * cal.page_miss_s + b / (cal.memmap_write_bps
+                                        or cal.memmap_bps)
+        stream = sp / cal.seq_write_bps
+    latency = g * (cal.seek_latency_s + cal.preadv_group_overhead_s)
+    best = np.minimum(mm, latency + stream)
+    for depth in DEPTH_CANDIDATES:
+        dd = np.maximum(1.0, np.minimum(float(depth), g))
+        par = np.maximum(1.0, np.minimum(cal.parallel_scaling, dd))
+        best = np.minimum(best, latency / dd + stream / par
+                          + g * DISPATCH_OVERHEAD_S)
+    return np.where((g <= 0) | (b <= 0), 0.0, best)
+
+
+def predict_lifecycle_seconds(cal: EngineCalibration, *,
+                              write: dict, reads: float,
+                              expected_reads: float = 1.0,
+                              num_chunks: int = 0,
+                              gather: float = 0.0) -> float:
+    """Predicted wall seconds of a candidate layout's whole I/O lifecycle:
+
+    ``gather + write_cost + num_chunks * REORG_CHUNK_OVERHEAD_S
+    + expected_reads * reads``
+
+    ``write`` is a plan-shape dict (``groups``/``runs``/``bytes_moved``/
+    ``span_bytes``) priced as a write under the best engine; ``reads`` is
+    the already-priced per-replay cost of the observed read mix against the
+    candidate; ``gather`` is the priced cost of pulling the candidate's
+    chunk regions out of the *current* layout (zero for staged writes,
+    where the data arrives in memory).  ``expected_reads`` is how many
+    future mix replays the one-time build cost amortizes over.
+    """
+    w = predict_best_seconds(cal, direction="write", **write)
+    return (gather + w + max(0, num_chunks) * REORG_CHUNK_OVERHEAD_S
+            + max(0.0, expected_reads) * reads)
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,5 @@
-"""Access-pattern telemetry and the unified layout policy (ISSUE 4).
+"""Access-pattern telemetry and the lifecycle-aware layout policy
+(ISSUE 4 telemetry loop, upgraded to lifecycle scoring by ISSUE 5).
 
 The paper's headline claim — "by understanding application I/O patterns and
 carefully designing data layouts we can increase read performance by more
@@ -14,18 +15,38 @@ module closes it:
   :data:`ACCESS_LOG_CAPACITY` records.  A corrupt or absent log is simply an
   empty history, never an error.
 
-* **Policy** — :class:`LayoutPolicy.choose_layout` scores candidate layouts
-  (``reorganized`` schemes of varying K and aspect, ``merged_node``,
-  ``chunked``) against the *observed pattern mix*: for each recorded region
-  it analytically estimates the plan shape a candidate chunking would
-  produce (chunks touched, contiguous runs via the same trailing
-  fully-covered-suffix formula the real planner uses, payload/span bytes)
-  and prices it with :func:`repro.core.cost_model.predict_best_seconds`.
-  The weighted-by-frequency winner becomes the reorganization target — a
-  dataset read mostly as z-slabs gets a slab-shaped scheme, a
-  subdomain-read dataset keeps a cubic one.
+* **Policy** — :class:`LayoutPolicy.choose_layout` scores every candidate
+  layout (``reorganized`` schemes of several chunk-count levels and
+  aspects, ``merged_node``, ``chunked``) on its *whole I/O lifecycle*::
 
-``reorganize(..., layout="auto")``, ``StagingExecutor.submit(...,
+      gather + write + num_chunks * overhead + expected_reads * read_mix
+
+  The read term prices the observed pattern mix against the candidate via
+  :func:`estimate_read_shape` (the planner's exact run/group/coalescing
+  formulas, evaluated against a hypothetical chunking) and
+  :func:`repro.core.cost_model.predict_best_seconds`; the build terms come
+  from :func:`estimate_write_shape` (the ``WritePlan``-shape analog) priced
+  as a write, plus — when the current stored extents are known, i.e. for
+  post-hoc ``reorganize`` — the cost of gathering each candidate chunk out
+  of the *current* layout.  A layout that wins the read matrix can still
+  lose end-to-end once its build cost is charged; that is the paper's
+  central write-vs-read tradeoff, now inside the decision.
+
+* **Weighting** — records are weighted by recency (exponential decay,
+  half-life :data:`ACCESS_RECENCY_HALF_LIFE_S`) and by *measured cost*
+  (an access that took 50 ms steers harder than one that took 50 µs)
+  instead of pure frequency; ``expected_reads`` — how many future mix
+  replays amortize the one-time build — defaults to the decayed record
+  mass of the history.
+
+* **Cross-run priors** — :meth:`AccessLog.export_prior` snapshots a run's
+  history; :meth:`LayoutPolicy.with_prior` seeds a *fresh* dataset's (or a
+  new checkpoint root's) decision from it.  Prior records carry
+  :data:`PRIOR_MASS` total weight that decays as live telemetry
+  accumulates, so yesterday's pattern steers the cold start and today's
+  measurements take over.
+
+``reorganize(..., layout="auto", prior=...)``, ``StagingExecutor.submit(...,
 plan="auto")`` and ``CheckpointManager(strategy="auto")`` all route through
 this object; with no usable history every path degrades to the
 dimension-aware default scheme with the reason recorded
@@ -46,23 +67,40 @@ import numpy as np
 
 from .blocks import Block, regular_decomposition
 from .cost_model import (EngineCalibration, FALLBACK_CALIBRATION,
-                         load_calibration, predict_best_seconds)
+                         load_calibration, predict_best_seconds,
+                         predict_best_seconds_batch,
+                         predict_lifecycle_seconds)
 from .layouts import LayoutPlan, default_reorg_scheme, plan_layout
 from .read_patterns import best_decompositions
 
 __all__ = ["ACCESS_LOG_NAME", "ACCESS_LOG_CAPACITY", "ACCESS_LOG_TTL_S",
-           "AccessRecord", "AccessLog", "classify_region",
-           "estimate_read_shape", "candidate_schemes",
-           "PolicyDecision", "LayoutPolicy"]
+           "ACCESS_PRIOR_NAME", "ACCESS_RECENCY_HALF_LIFE_S", "PRIOR_MASS",
+           "AccessRecord", "AccessLog", "load_prior_records",
+           "classify_region", "estimate_read_shape", "estimate_write_shape",
+           "estimate_gather_shapes", "append_extent_offsets",
+           "candidate_schemes", "PolicyDecision", "LayoutPolicy"]
 
 #: file persisted next to index.json / calibration.json
 ACCESS_LOG_NAME = "access_log.json"
 ACCESS_LOG_VERSION = 1
+#: default filename of an exported cross-run prior snapshot
+ACCESS_PRIOR_NAME = "access_prior.json"
 #: bounded ring: at most this many records survive in the file
 ACCESS_LOG_CAPACITY = 256
 #: records older than this are dropped at load time (stale access history
 #: should not steer today's layout)
 ACCESS_LOG_TTL_S = 30 * 24 * 3600.0
+
+#: recency weighting: a record this old counts half as much as a fresh one
+ACCESS_RECENCY_HALF_LIFE_S = 7 * 24 * 3600.0
+#: cost-weighting floor: untimed records (and sub-10µs page-cache blips)
+#: all weigh this much, so a history without measurements degrades to the
+#: pure-frequency behavior
+MIN_RECORD_COST_S = 1e-5
+#: total live-record-equivalents a cross-run prior starts with; its share
+#: is PRIOR_MASS / (PRIOR_MASS + n_live), so live telemetry takes over as
+#: it accumulates
+PRIOR_MASS = 8.0
 
 #: an axis covered at or below this fraction of its extent reads as "thin"
 THIN_FRAC = 0.25
@@ -111,6 +149,7 @@ class AccessRecord:
     predicted_seconds: float = 0.0   # cost-model prediction (engine="auto")
     engine: str = ""             # engine spec that executed the plan
     ts: float = 0.0              # wall clock (time.time()) at record time
+    source: str = "live"         # "live" | "prior" (loaded cross-run)
 
     @property
     def ndim(self) -> int:
@@ -121,13 +160,16 @@ class AccessRecord:
         return Block(tuple(self.lo), tuple(self.hi))
 
     def to_json(self) -> dict:
-        return {"var": self.var, "kind": self.kind, "cls": self.shape_class,
-                "lo": [int(v) for v in self.lo],
-                "hi": [int(v) for v in self.hi],
-                "runs": int(self.runs), "groups": int(self.groups),
-                "bytes": int(self.nbytes), "sec": float(self.seconds),
-                "pred": float(self.predicted_seconds), "eng": self.engine,
-                "ts": float(self.ts)}
+        d = {"var": self.var, "kind": self.kind, "cls": self.shape_class,
+             "lo": [int(v) for v in self.lo],
+             "hi": [int(v) for v in self.hi],
+             "runs": int(self.runs), "groups": int(self.groups),
+             "bytes": int(self.nbytes), "sec": float(self.seconds),
+             "pred": float(self.predicted_seconds), "eng": self.engine,
+             "ts": float(self.ts)}
+        if self.source != "live":      # pre-prior files stay byte-compatible
+            d["src"] = self.source
+        return d
 
     @staticmethod
     def from_json(d: dict) -> "AccessRecord":
@@ -138,7 +180,8 @@ class AccessRecord:
                             nbytes=d.get("bytes", 0),
                             seconds=d.get("sec", 0.0),
                             predicted_seconds=d.get("pred", 0.0),
-                            engine=d.get("eng", ""), ts=d.get("ts", 0.0))
+                            engine=d.get("eng", ""), ts=d.get("ts", 0.0),
+                            source=d.get("src", "live"))
 
     @classmethod
     def from_stats(cls, var: str, kind: str, region: Block,
@@ -256,6 +299,49 @@ class AccessLog:
             except OSError:
                 pass
 
+    def export_prior(self, path: str | None = None) -> str:
+        """Snapshot the current history (disk + pending) as a *cross-run
+        prior*: a plain JSON file a future run's
+        :meth:`LayoutPolicy.with_prior` can seed its decisions from.
+        Returns the path written (default ``access_prior.json`` in the log's
+        directory).  Unlike the live ring, a prior is a one-shot artifact —
+        TTL does not apply to it at load time; its influence decays against
+        live telemetry instead (:data:`PRIOR_MASS`)."""
+        recs = self.records()
+        if path is None:
+            path = os.path.join(self.dirpath, ACCESS_PRIOR_NAME)
+        payload = {"version": ACCESS_LOG_VERSION, "prior": True,
+                   "records": [r.to_json() for r in recs]}
+        tmp = f"{path}.tmp.{os.getpid()}.{next(_tmp_counter)}"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, path)
+        return path
+
+
+def load_prior_records(path: str, now: float | None = None) -> list:
+    """Load a cross-run prior: ``path`` is an :meth:`AccessLog.export_prior`
+    snapshot, a raw ``access_log.json``, or a dataset/checkpoint directory
+    containing one.  Records come back marked ``source="prior"`` and
+    re-stamped to ``now`` — a prior's age is *not* the individual records'
+    wall-clock age (that would TTL-kill any prior older than a month);
+    decay against live telemetry is the policy's job.  Corrupt, absent or
+    version-mismatched files degrade to ``[]``, never an error."""
+    if os.path.isdir(path):
+        prior = os.path.join(path, ACCESS_PRIOR_NAME)
+        path = prior if os.path.exists(prior) \
+            else os.path.join(path, ACCESS_LOG_NAME)
+    ts = time.time() if now is None else now
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("version") != ACCESS_LOG_VERSION:
+            return []
+        recs = [AccessRecord.from_json(r) for r in payload["records"]]
+    except (OSError, ValueError, TypeError, KeyError):
+        return []
+    return [dataclasses.replace(r, ts=ts, source="prior") for r in recs]
+
 
 # ---------------------------------------------------------------------------
 # Plan-shape estimation for a hypothetical chunking (no I/O, no index)
@@ -263,21 +349,91 @@ class AccessLog:
 
 @dataclasses.dataclass(frozen=True)
 class PlanShapeEstimate:
-    """What a read plan against a candidate chunk set would look like."""
+    """What a plan against a candidate chunk set would look like."""
 
-    groups: int          # chunks touched (>= coalesced groups a plan issues)
+    groups: int          # coalesced groups the plan would issue (without
+    #                      extent offsets: chunks touched, an upper bound)
     runs: int            # contiguous byte runs (cold-storage seeks)
     bytes_needed: int    # payload bytes
-    span_bytes: int      # bytes spanned inside the touched chunks
+    span_bytes: int      # bytes spanned inside the touched groups
+
+    def shape_kwargs(self) -> dict:
+        """The :func:`repro.core.cost_model.predict_seconds` plan-shape
+        keywords for this estimate."""
+        return dict(groups=self.groups, runs=self.runs,
+                    bytes_moved=self.bytes_needed,
+                    span_bytes=self.span_bytes)
+
+
+def append_extent_offsets(nbytes: np.ndarray, subfiles: np.ndarray,
+                          align: int | None = None,
+                          base_offsets: dict | None = None) -> np.ndarray:
+    """Byte offset each extent would get from a log-structured append —
+    the exact assignment :func:`repro.io.planner.build_write_plan` makes:
+    per subfile, in input order, each start aligned up to ``align`` on top
+    of the (aligned-up) base offset."""
+    m = len(nbytes)
+    a = int(align) if align else 1
+    aligned_nb = -(-np.asarray(nbytes, dtype=np.int64) // a) * a
+    subfiles = np.asarray(subfiles, dtype=np.int64)
+    stable = np.argsort(subfiles, kind="stable")
+    s_sorted = subfiles[stable]
+    new_seg = np.concatenate(([True], s_sorted[1:] != s_sorted[:-1])) \
+        if m else np.empty(0, dtype=bool)
+    seg_first = np.flatnonzero(new_seg)
+    cs = np.cumsum(aligned_nb[stable]) - aligned_nb[stable]
+    seg_id = np.cumsum(new_seg.astype(np.int64)) - 1 if m \
+        else np.empty(0, dtype=np.int64)
+    base = np.zeros(len(seg_first), dtype=np.int64)
+    if base_offsets:
+        for i, f in enumerate(seg_first):
+            b = int(base_offsets.get(int(s_sorted[f]), 0))
+            base[i] = -(-b // a) * a
+    starts_sorted = base[seg_id] + (cs - cs[seg_first][seg_id])
+    file_lo = np.empty(m, dtype=np.int64)
+    file_lo[stable] = starts_sorted
+    return file_lo
+
+
+def _coalesce(subf: np.ndarray, file_lo: np.ndarray, file_hi: np.ndarray):
+    """Sort extents by ``(subfile, offset)`` and coalesce byte-adjacent
+    ones, exactly like both planners.  Returns ``(order, group_count,
+    span_bytes, adjacent_mask)`` — ``adjacent_mask[i]`` marks sorted row
+    ``i+1`` starting exactly at sorted row ``i``'s end within one group."""
+    m = len(subf)
+    order = np.lexsort((file_lo, subf))
+    s_o, lo_o, hi_o = subf[order], file_lo[order], file_hi[order]
+    new_group = np.empty(m, dtype=bool)
+    new_group[0] = True
+    if m > 1:
+        new_group[1:] = (s_o[1:] != s_o[:-1]) | (lo_o[1:] > hi_o[:-1])
+    bounds = np.concatenate((np.flatnonzero(new_group), [m]))
+    span = int((hi_o[bounds[1:] - 1] - lo_o[bounds[:-1]]).sum())
+    adjacent = (~new_group[1:]) & (lo_o[1:] == hi_o[:-1]) if m > 1 \
+        else np.empty(0, dtype=bool)
+    return order, len(bounds) - 1, span, adjacent
 
 
 def estimate_read_shape(chunk_los: np.ndarray, chunk_his: np.ndarray,
-                        region: Block, itemsize: int) -> PlanShapeEstimate:
+                        region: Block, itemsize: int,
+                        subfiles: np.ndarray | None = None,
+                        offsets: np.ndarray | None = None
+                        ) -> PlanShapeEstimate:
     """Analytic plan shape of reading ``region`` from chunks stored
     row-major — the same trailing fully-covered-suffix run formula
     :func:`repro.io.planner.build_read_plan` evaluates on real plans, but
     against a *hypothetical* chunking, so candidate layouts can be priced
-    without writing a byte."""
+    without writing a byte.
+
+    With ``subfiles``/``offsets`` (per-chunk extent placement — real
+    ``VarRows`` columns, or :func:`append_extent_offsets` for a chunking
+    that does not exist yet) the estimate additionally reproduces the
+    planner's cross-chunk behavior bit-for-bit: extents sorted by
+    ``(subfile, offset)``, byte-adjacent extents coalesced into groups,
+    adjacent chunks' boundary runs merged, span measured per group.
+    Without them, each touched chunk counts as its own group and runs
+    never merge across chunks (an upper bound, exact for isolated chunks).
+    """
     lo = np.asarray(region.lo, dtype=np.int64)
     hi = np.asarray(region.hi, dtype=np.int64)
     ilo = np.maximum(chunk_los, lo)
@@ -312,11 +468,121 @@ def estimate_read_shape(chunk_los: np.ndarray, chunk_his: np.ndarray,
         strides[:, d] = strides[:, d + 1] * cshape[:, d + 1]
     first = ((ilo - clos) * strides).sum(axis=1)
     last = ((ihi - 1 - clos) * strides).sum(axis=1)
+    bytes_needed = int(s.prod(axis=1).sum() * itemsize)
 
-    return PlanShapeEstimate(
-        groups=m, runs=int(runs_per.sum()),
-        bytes_needed=int(s.prod(axis=1).sum() * itemsize),
-        span_bytes=int((last - first + 1).sum() * itemsize))
+    if offsets is None:
+        return PlanShapeEstimate(
+            groups=m, runs=int(runs_per.sum()), bytes_needed=bytes_needed,
+            span_bytes=int((last - first + 1).sum() * itemsize))
+
+    off = np.asarray(offsets, dtype=np.int64)[hit]
+    subf = (np.zeros(m, dtype=np.int64) if subfiles is None
+            else np.asarray(subfiles, dtype=np.int64)[hit])
+    file_lo = off + first * itemsize
+    file_hi = off + (last + 1) * itemsize
+    order, groups, span, adjacent = _coalesce(subf, file_lo, file_hi)
+    # a chunk's LAST run ends at its file_hi and the next chunk's FIRST run
+    # starts at its file_lo: byte-adjacent extents merge one run
+    runs = int(runs_per[order].sum() - adjacent.sum())
+    return PlanShapeEstimate(groups=groups, runs=runs,
+                             bytes_needed=bytes_needed, span_bytes=span)
+
+
+def estimate_gather_shapes(src_los: np.ndarray, src_his: np.ndarray,
+                           tgt_los: np.ndarray, tgt_his: np.ndarray,
+                           itemsize: int) -> tuple:
+    """Batched placement-free read estimates: for every target region
+    (candidate chunk) at once, the plan shape of gathering it out of the
+    ``src`` extents.  Returns ``(groups, runs, bytes_needed, span_bytes)``
+    arrays, one entry per target — the per-chunk gather cost ``reorganize``
+    pays to build a candidate, priced in one numpy pass instead of one
+    :func:`estimate_read_shape` call per chunk.  Like the offset-free
+    scalar estimate, cross-extent coalescing is not modeled (an upper
+    bound on groups/runs; payload bytes are exact).  Work proceeds in
+    bounded target batches, so a fine source decomposition times a large
+    candidate pool cannot balloon the ``(m, n, d)`` intermediates."""
+    src_los = np.asarray(src_los, dtype=np.int64)     # (n, d)
+    src_his = np.asarray(src_his, dtype=np.int64)
+    tgt_los = np.asarray(tgt_los, dtype=np.int64)     # (m, d)
+    tgt_his = np.asarray(tgt_his, dtype=np.int64)
+    m, d = tgt_los.shape
+    n = len(src_los)
+    # cap each batch's (batch, n, d) intermediates at ~2M elements
+    batch = max(1, (2 << 20) // max(1, n * d))
+    if m > batch:
+        parts = [estimate_gather_shapes(src_los, src_his,
+                                        tgt_los[i:i + batch],
+                                        tgt_his[i:i + batch], itemsize)
+                 for i in range(0, m, batch)]
+        return tuple(np.concatenate([p[k] for p in parts])
+                     for k in range(4))
+    ilo = np.maximum(src_los[None, :, :], tgt_los[:, None, :])   # (m, n, d)
+    ihi = np.minimum(src_his[None, :, :], tgt_his[:, None, :])
+    s = ihi - ilo
+    hit = (s > 0).all(axis=2)                                    # (m, n)
+    s = np.where(hit[:, :, None], s, 0)
+    cshape = np.broadcast_to(src_his - src_los, s.shape)
+
+    covered = s == cshape
+    suffix = np.zeros(hit.shape, dtype=np.int64)
+    still = np.ones(hit.shape, dtype=bool)
+    for dd in range(d - 1, -1, -1):
+        still = still & covered[:, :, dd]
+        suffix += still
+    first_covered = d - suffix
+    runs_pair = np.ones(hit.shape, dtype=np.int64)
+    for dd in range(d):
+        runs_pair = np.where(dd < first_covered - 1,
+                             runs_pair * s[:, :, dd], runs_pair)
+
+    strides = np.ones(s.shape, dtype=np.int64)
+    for dd in range(d - 2, -1, -1):
+        strides[:, :, dd] = strides[:, :, dd + 1] * cshape[:, :, dd + 1]
+    first = ((ilo - src_los[None]) * strides).sum(axis=2)
+    last = ((ihi - 1 - src_los[None]) * strides).sum(axis=2)
+    span_pair = np.where(hit, last - first + 1, 0)
+
+    groups = hit.sum(axis=1).astype(np.int64)
+    runs = np.where(hit, runs_pair, 0).sum(axis=1)
+    bytes_needed = s.prod(axis=2).sum(axis=1) * itemsize
+    span_bytes = span_pair.sum(axis=1) * itemsize
+    return groups, runs, bytes_needed, span_bytes
+
+
+def estimate_write_shape(chunk_los: np.ndarray, chunk_his: np.ndarray,
+                         itemsize: int, *,
+                         subfiles: np.ndarray | None = None,
+                         num_subfiles: int = 1,
+                         align: int | None = None,
+                         base_offsets: dict | None = None
+                         ) -> PlanShapeEstimate:
+    """Analytic :class:`~repro.io.planner.WritePlan` shape of materializing
+    a chunking — the write-side mirror of :func:`estimate_read_shape`, so
+    candidate layouts can be priced as *writes* without planning one.
+
+    Reproduces :func:`repro.io.planner.build_write_plan` exactly for the
+    same inputs: append offsets per subfile (alignment folded in), extents
+    sorted by ``(subfile, offset)`` and byte-adjacent ones coalesced.
+    ``subfiles`` defaults to the round-robin assignment ``plan_layout``
+    gives ``reorganized`` layouts (``chunk_id % num_subfiles``).  In the
+    estimate, ``groups`` is the plan's coalesced group count, ``runs`` its
+    extent count (every extent is one contiguous write), ``bytes_needed``
+    its payload and ``span_bytes`` its group span.
+    """
+    chunk_los = np.asarray(chunk_los, dtype=np.int64)
+    chunk_his = np.asarray(chunk_his, dtype=np.int64)
+    m = len(chunk_los)
+    if m == 0:
+        return PlanShapeEstimate(0, 0, 0, 0)
+    nbytes = (chunk_his - chunk_los).prod(axis=1) * itemsize
+    subf = (np.arange(m, dtype=np.int64) % max(1, int(num_subfiles))
+            if subfiles is None else np.asarray(subfiles, dtype=np.int64))
+    file_lo = append_extent_offsets(nbytes, subf, align=align,
+                                    base_offsets=base_offsets)
+    _, groups, span, _ = _coalesce(subf, file_lo, file_lo + nbytes)
+    return PlanShapeEstimate(groups=groups, runs=m,
+                             bytes_needed=int(nbytes.sum()),
+                             span_bytes=span)
 
 
 def candidate_schemes(ndim: int, global_shape: Sequence[int],
@@ -324,8 +590,14 @@ def candidate_schemes(ndim: int, global_shape: Sequence[int],
     """Candidate regular decompositions: the dimension-aware default first
     (ties fall back to it), then every factorization of ``target_chunks``
     over ``ndim`` axes (all aspect ratios, slab- through pencil-shaped),
-    plus the maximally-fine single-axis slab split per axis.  Axis splits
-    are clamped to the axis extents; duplicates are removed."""
+    the maximally-fine single-axis slab split per axis, and — because
+    lifecycle scoring can prefer *cheaper to build* over *fastest to read*
+    — the same factorization sweep at coarser chunk-count levels
+    (``target_chunks/8``, ``/64``, ... while at least two chunks remain;
+    for the default target of 64 that adds the 8-chunk sweep).  Coarser
+    still is covered by the ``merged_node``/``chunked`` candidates the
+    policy also scores.  Axis splits are clamped to the axis extents;
+    duplicates are removed."""
     def clamp(s):
         return tuple(min(int(f), max(1, int(g)))
                      for f, g in zip(s, global_shape))
@@ -333,7 +605,11 @@ def candidate_schemes(ndim: int, global_shape: Sequence[int],
     default = default_reorg_scheme(ndim, target_chunks, global_shape)
     seen = {default}
     out = [default]
-    pool = [clamp(s) for s in best_decompositions(target_chunks, ndim=ndim)]
+    pool = []
+    level = target_chunks
+    while level >= 2:
+        pool += [clamp(s) for s in best_decompositions(level, ndim=ndim)]
+        level //= 8
     for d in range(ndim):
         slab = [1] * ndim
         slab[d] = target_chunks
@@ -357,24 +633,40 @@ class PolicyDecision:
     scheme: tuple | None         # K-way scheme when strategy == "reorganized"
     layout: LayoutPlan
     reason: str                  # human-readable: mix -> scores -> choice
-    scores: dict                 # candidate name -> predicted mix seconds
+    scores: dict                 # candidate name -> predicted lifecycle s
     num_records: int             # access records the decision is based on
     mix: dict                    # shape-class -> weight fraction
+    read_scores: dict = dataclasses.field(default_factory=dict)
+    #: candidate -> one-time build cost (gather + write + per-chunk
+    #: overhead); empty when write cost was not charged
+    write_scores: dict = dataclasses.field(default_factory=dict)
+    expected_reads: float = 0.0  # mix replays the build cost amortized over
+    num_prior_records: int = 0   # how many of num_records came from a prior
 
     def to_json(self) -> dict:
         return {"strategy": self.strategy,
                 "scheme": list(self.scheme) if self.scheme else None,
                 "reason": self.reason, "num_records": self.num_records,
+                "num_prior_records": self.num_prior_records,
+                "expected_reads": round(float(self.expected_reads), 3),
                 "mix": {k: round(v, 4) for k, v in self.mix.items()},
-                "scores": {k: float(v) for k, v in self.scores.items()}}
+                "scores": {k: float(v) for k, v in self.scores.items()},
+                "read_scores": {k: float(v)
+                                for k, v in self.read_scores.items()},
+                "write_scores": {k: float(v)
+                                 for k, v in self.write_scores.items()}}
 
 
 class LayoutPolicy:
-    """Unified layout decision-maker, fed by an :class:`AccessLog`.
+    """Lifecycle-aware layout decision-maker, fed by an :class:`AccessLog`.
 
     ``choose_layout(var, blocks, global_shape)`` returns a
     :class:`PolicyDecision` whose ``layout`` is ready for ``plan_write`` /
-    staging / post-hoc reorganization.  With no usable access history the
+    staging / post-hoc reorganization.  Candidates are scored on the whole
+    lifecycle — one-time build cost (gather from the current layout when
+    its extents are known, write, per-chunk overhead) plus
+    ``expected_reads`` replays of the observed mix — with records weighted
+    by recency and measured cost.  With no usable access history the
     decision degrades to the dimension-aware default ``reorganized`` scheme
     and says so in ``reason`` — the pre-policy behavior, now recorded.
 
@@ -382,34 +674,66 @@ class LayoutPolicy:
     pins the storage constants the scoring predicts with (default: the
     dataset's persisted ``calibration.json`` when the policy was built via
     :meth:`for_dataset`, else :data:`~repro.core.cost_model.
-    FALLBACK_CALIBRATION`).
+    FALLBACK_CALIBRATION`).  ``include_write_cost=False`` restores the
+    read-only v1 scoring (used as the comparison baseline in benchmarks);
+    ``expected_reads`` pins the amortization horizon instead of deriving
+    it from the history's decayed record mass.  :meth:`with_prior` attaches
+    a previous run's history whose weight decays as live telemetry
+    accumulates.
     """
 
     def __init__(self, log: AccessLog | None = None,
                  records: Sequence[AccessRecord] | None = None,
                  calibration: EngineCalibration | None = None,
-                 target_chunks: int = 64):
+                 target_chunks: int = 64,
+                 prior_records: Sequence[AccessRecord] | None = None,
+                 include_write_cost: bool = True,
+                 expected_reads: float | None = None,
+                 half_life_s: float = ACCESS_RECENCY_HALF_LIFE_S):
         self.log = log
         self._records = list(records) if records is not None else None
         self.calibration = calibration or FALLBACK_CALIBRATION
         self.target_chunks = target_chunks
+        self.prior_records = list(prior_records) if prior_records else []
+        self.include_write_cost = include_write_cost
+        self.expected_reads = expected_reads
+        self.half_life_s = half_life_s
 
     @classmethod
     def for_dataset(cls, dirpath: str,
                     calibration: EngineCalibration | None = None,
-                    target_chunks: int = 64) -> "LayoutPolicy":
+                    target_chunks: int = 64, **kwargs) -> "LayoutPolicy":
         """Policy over ``dirpath``'s own access log, predicting with its
         persisted calibration when one is fresh (no probe is triggered —
         policy evaluation stays I/O-free)."""
         return cls(log=AccessLog(dirpath),
                    calibration=calibration or load_calibration(dirpath),
-                   target_chunks=target_chunks)
+                   target_chunks=target_chunks, **kwargs)
+
+    def with_prior(self, path: str | None) -> "LayoutPolicy":
+        """A copy of this policy seeded with a cross-run prior: ``path`` is
+        an :meth:`AccessLog.export_prior` snapshot, a raw
+        ``access_log.json``, or a directory holding either (a previous
+        run's dataset or checkpoint root).  ``None`` or an unreadable file
+        degrade to no prior.  Prior records carry :data:`PRIOR_MASS` total
+        weight split among them, shrinking as live records accumulate."""
+        prior = load_prior_records(path) if path is not None else []
+        return LayoutPolicy(log=self.log, records=self._records,
+                            calibration=self.calibration,
+                            target_chunks=self.target_chunks,
+                            prior_records=prior,
+                            include_write_cost=self.include_write_cost,
+                            expected_reads=self.expected_reads,
+                            half_life_s=self.half_life_s)
 
     # -- history -------------------------------------------------------------
     def records(self) -> list:
+        """Live records followed by any attached cross-run prior records."""
         if self._records is not None:
-            return list(self._records)
-        return self.log.records() if self.log is not None else []
+            live = list(self._records)
+        else:
+            live = self.log.records() if self.log is not None else []
+        return live + self.prior_records
 
     def records_for(self, var: str, ndim: int,
                     global_shape: Sequence[int] | None = None) -> list:
@@ -428,19 +752,75 @@ class LayoutPolicy:
         return [r for r in recs
                 if all(h <= g for h, g in zip(r.hi, global_shape))]
 
-    def pattern_mix(self, records: Sequence[AccessRecord]) -> list:
+    # -- weighting -----------------------------------------------------------
+    def record_weights(self, records: Sequence[AccessRecord],
+                       now: float | None = None,
+                       with_cost: bool = True) -> np.ndarray:
+        """Per-record weights: exponential recency decay (half-life
+        ``half_life_s``) × measured cost (floored at
+        :data:`MIN_RECORD_COST_S`, so untimed histories degrade to pure
+        frequency) × the prior mass share for ``source == "prior"``
+        records.  ``with_cost=False`` drops the cost factor (used when
+        estimating *how many* future reads to expect — an expensive read is
+        not more reads)."""
+        if not records:
+            return np.empty(0)
+        now = time.time() if now is None else now
+        ts = np.asarray([r.ts for r in records], dtype=np.float64)
+        w = 0.5 ** (np.clip(now - ts, 0.0, None) / max(self.half_life_s,
+                                                       1e-9))
+        if with_cost:
+            secs = np.asarray([r.seconds for r in records], dtype=np.float64)
+            # square-root damping: an access 100x more expensive steers 10x
+            # harder, not 100x — the candidate pricing already charges each
+            # region's cost, so the record weight is an importance prior,
+            # not a second cost term
+            w = w * np.sqrt(np.maximum(secs, MIN_RECORD_COST_S)
+                            / MIN_RECORD_COST_S)
+        prior = np.asarray([r.source == "prior" for r in records])
+        n_prior = int(prior.sum())
+        if n_prior:
+            n_live = len(records) - n_prior
+            # the whole prior carries PRIOR_MASS live-record-equivalents,
+            # melting away as live telemetry accumulates
+            share = PRIOR_MASS / (PRIOR_MASS + n_live)
+            live_mass = max(float(w[~prior].sum()), 1.0) if n_live else 1.0
+            prior_mass = float(w[prior].sum())
+            if prior_mass > 0:
+                scale = share * live_mass / ((1.0 - share) * prior_mass) \
+                    if n_live else 1.0
+                w = np.where(prior, w * scale, w)
+        return w
+
+    def effective_reads(self, records: Sequence[AccessRecord],
+                        now: float | None = None) -> float:
+        """Decayed record mass of the history — the default
+        ``expected_reads`` horizon: how many mix replays the one-time build
+        cost should amortize over, estimated as "about as many as were
+        recently observed"."""
+        w = self.record_weights(records, now=now, with_cost=False)
+        return max(1.0, float(w.sum()))
+
+    def pattern_mix(self, records: Sequence[AccessRecord],
+                    now: float | None = None) -> list:
         """Aggregate records into a weighted region mix:
-        ``[(weight, Block, shape_class)]`` with weights summing to 1."""
+        ``[(weight, Block, shape_class)]`` with weights summing to 1,
+        recency/cost/prior-weighted via :meth:`record_weights`.  Groups are
+        keyed and ordered by region bounds, so the mix — and every score
+        summed over it — is invariant under record permutation."""
+        weights = self.record_weights(records, now=now)
         groups: dict = {}
-        for r in records:
+        for r, w in zip(records, weights):
             key = (tuple(r.lo), tuple(r.hi))
             if key in groups:
-                groups[key][0] += 1
+                groups[key][0] += float(w)
             else:
-                groups[key] = [1, r.region, r.shape_class]
-        total = max(1, sum(g[0] for g in groups.values()))
-        return [(count / total, region, cls)
-                for count, region, cls in groups.values()]
+                groups[key] = [float(w), r.region, r.shape_class]
+        total = sum(g[0] for g in groups.values())
+        if total <= 0:
+            total = 1.0
+        return [(groups[k][0] / total, groups[k][1], groups[k][2])
+                for k in sorted(groups)]
 
     @staticmethod
     def _estimate_itemsize(records: Sequence[AccessRecord]) -> int:
@@ -458,13 +838,34 @@ class LayoutPolicy:
     def choose_layout(self, var: str, blocks: Sequence[Block],
                       global_shape: Sequence[int], *,
                       num_stagers: int = 1, num_procs: int | None = None,
-                      procs_per_node: int = 1) -> PolicyDecision:
+                      procs_per_node: int = 1,
+                      expected_reads: float | None = None,
+                      include_write_cost: bool | None = None,
+                      align: int | None = None,
+                      current_extents=None,
+                      now: float | None = None) -> PolicyDecision:
+        """Score every candidate layout on its lifecycle and return the
+        winner.
+
+        ``expected_reads`` pins the amortization horizon (default: derived
+        from the history via :meth:`effective_reads`);
+        ``include_write_cost=False`` scores reads only (the v1 behavior);
+        ``align`` is the write alignment the build would use;
+        ``current_extents`` — a :class:`~repro.io.format.VarRows` (or any
+        object with ``los``/``his``/``subfiles``/``offsets`` arrays) naming
+        where the variable's chunks live *now* — additionally charges each
+        candidate the cost of gathering its chunk regions out of the
+        current layout, which is what post-hoc ``reorganize`` actually
+        pays per target chunk; ``now`` pins the recency-decay reference
+        time (tests, reproducible decisions)."""
         blocks = list(blocks)
         global_shape = tuple(int(g) for g in global_shape)
         ndim = len(global_shape)
         if num_procs is None:
             num_procs = max([b.owner for b in blocks] + [0]) + 1
         cal = self.calibration
+        if include_write_cost is None:
+            include_write_cost = self.include_write_cost
 
         def reorg_plan(scheme):
             return plan_layout("reorganized", blocks, num_procs,
@@ -486,18 +887,28 @@ class LayoutPolicy:
         if not recs:
             return default_decision("no usable access history")
 
-        mix = self.pattern_mix(recs)
+        if now is None:
+            now = time.time()
+        mix = self.pattern_mix(recs, now=now)
         itemsize = self._estimate_itemsize(recs)
+        if expected_reads is None:
+            expected_reads = self.expected_reads
+        if expected_reads is None:
+            expected_reads = self.effective_reads(recs, now=now)
 
-        # candidates: (name, strategy, scheme, chunk_los, chunk_his, layout)
+        # candidates: (name, strategy, scheme, los, his, subfiles, layout)
+        nsub = max(1, num_stagers)
         candidates = []
         for scheme in candidate_schemes(ndim, global_shape,
                                         self.target_chunks):
             targets = regular_decomposition(global_shape, scheme)
             los = np.asarray([t.lo for t in targets], dtype=np.int64)
             his = np.asarray([t.hi for t in targets], dtype=np.int64)
+            # same round-robin subfile assignment plan_layout makes
+            subf = np.arange(len(targets), dtype=np.int64) % nsub
             name = "reorganized" + "x".join(map(str, scheme))
-            candidates.append((name, "reorganized", scheme, los, his, None))
+            candidates.append((name, "reorganized", scheme, los, his, subf,
+                               None))
         for strat in ("merged_node", "chunked"):
             try:
                 lay = plan_layout(strat, blocks, num_procs,
@@ -509,41 +920,88 @@ class LayoutPolicy:
                              dtype=np.int64)
             his = np.asarray([c.chunk.hi for c in lay.chunks],
                              dtype=np.int64)
-            candidates.append((strat, strat, None, los, his, lay))
+            subf = np.asarray([c.subfile for c in lay.chunks],
+                              dtype=np.int64)
+            candidates.append((strat, strat, None, los, his, subf, lay))
+
+        # gather term: one concatenated vectorized pass prices every
+        # per-chunk gather read every candidate's build would issue
+        gather_for: dict = {}
+        if include_write_cost and current_extents is not None:
+            cur_los = np.asarray(current_extents.los, dtype=np.int64)
+            cur_his = np.asarray(current_extents.his, dtype=np.int64)
+            all_los = np.concatenate([c[3] for c in candidates])
+            all_his = np.concatenate([c[4] for c in candidates])
+            gg, gr, gb, gs = estimate_gather_shapes(cur_los, cur_his,
+                                                    all_los, all_his,
+                                                    itemsize)
+            per_chunk = predict_best_seconds_batch(
+                cal, groups=gg, runs=gr, bytes_moved=gb, span_bytes=gs)
+            bounds = np.cumsum([0] + [len(c[3]) for c in candidates])
+            sums = np.add.reduceat(per_chunk, bounds[:-1])
+            gather_for = {c[0]: float(s) for c, s in zip(candidates, sums)}
 
         scores: dict = {}
-        for name, _, _, los, his, _ in candidates:
-            t = 0.0
+        read_scores: dict = {}
+        write_scores: dict = {}
+        for name, _, _, los, his, subf, _ in candidates:
+            nbytes = (his - los).prod(axis=1) * itemsize
+            # hypothetical fresh-append placement of this candidate: the
+            # read estimates coalesce exactly like the planner would on the
+            # materialized dataset
+            offs = append_extent_offsets(nbytes, subf, align=align)
+            t_read = 0.0
             for weight, region, _cls in mix:
-                est = estimate_read_shape(los, his, region, itemsize)
-                t += weight * predict_best_seconds(
-                    cal, groups=est.groups, runs=est.runs,
-                    bytes_moved=est.bytes_needed, span_bytes=est.span_bytes)
-            scores[name] = t
+                est = estimate_read_shape(los, his, region, itemsize,
+                                          subfiles=subf, offsets=offs)
+                t_read += weight * predict_best_seconds(
+                    cal, **est.shape_kwargs())
+            read_scores[name] = t_read
+            if include_write_cost:
+                west = estimate_write_shape(los, his, itemsize,
+                                            subfiles=subf, align=align)
+                total = predict_lifecycle_seconds(
+                    cal, write=west.shape_kwargs(), reads=t_read,
+                    expected_reads=expected_reads, num_chunks=len(los),
+                    gather=gather_for.get(name, 0.0))
+                write_scores[name] = total - expected_reads * t_read
+                scores[name] = total
+            else:
+                scores[name] = t_read
 
-        if max(scores.values()) <= 0.0:
+        if max(read_scores.values()) <= 0.0:
             # every recorded region misses this variable entirely — a
-            # zero-cost "win" would be the insertion-order accident, not a
-            # data-driven choice
+            # zero-read-cost "win" would be the insertion-order accident,
+            # not a data-driven choice
             return default_decision("access history does not intersect")
         # insertion order breaks ties: the default scheme is first
         best_name = min(scores, key=lambda k: scores[k])
         best = next(c for c in candidates if c[0] == best_name)
-        _, strategy, scheme, _, _, layout = best
+        _, strategy, scheme, _, _, _, layout = best
         if layout is None:
             layout = reorg_plan(scheme)
 
         mix_summary: dict = {}
         for weight, _region, cls in mix:
             mix_summary[cls] = mix_summary.get(cls, 0.0) + weight
+        n_prior = sum(1 for r in recs if r.source == "prior")
         default_name = "reorganized" + "x".join(map(str, default))
         top = ", ".join(f"{cls} {w:.0%}" for cls, w in
                         sorted(mix_summary.items(), key=lambda kv: -kv[1]))
-        reason = (f"{len(recs)} access records ({top}): chose {best_name} "
+        basis = f"{len(recs)} access records"
+        if n_prior:
+            basis += f" ({n_prior} prior)"
+        horizon = (f" over E[reads]={expected_reads:.1f}"
+                   if include_write_cost else " (read-only scoring)")
+        reason = (f"{basis} ({top}){horizon}: chose {best_name} "
                   f"predicted {scores[best_name] * 1e3:.3f}ms"
                   + (f" vs default {default_name} "
                      f"{scores[default_name] * 1e3:.3f}ms"
                      if best_name != default_name else " (= default)"))
         return PolicyDecision(strategy=strategy, scheme=scheme, layout=layout,
                               reason=reason, scores=scores,
-                              num_records=len(recs), mix=mix_summary)
+                              num_records=len(recs), mix=mix_summary,
+                              read_scores=read_scores,
+                              write_scores=write_scores,
+                              expected_reads=float(expected_reads),
+                              num_prior_records=n_prior)

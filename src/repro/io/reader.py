@@ -488,7 +488,9 @@ def reorganize(src_dir: str, dst_dir: str, var: str,
                layout: LayoutPlan | str = "auto", *,
                engine: str | IOEngine = "memmap",
                align: int | None = None,
-               policy: LayoutPolicy | None = None) -> tuple:
+               policy: LayoutPolicy | None = None,
+               prior: str | None = None,
+               expected_reads: float | None = None) -> tuple:
     """Post-hoc reorganization (paper §5.1): pull each chunk region of the
     new ``layout`` from ``src_dir`` through the read planner and write the
     reorganized dataset to ``dst_dir`` through the write planner.
@@ -496,11 +498,18 @@ def reorganize(src_dir: str, dst_dir: str, var: str,
     ``layout="auto"`` (the default) asks the source dataset's
     :class:`~repro.core.policy.LayoutPolicy` — built from its
     ``access_log.json`` pattern history and persisted calibration — which
-    target layout the observed read mix favors; with no usable history the
-    policy degrades to the dimension-aware default scheme.  Either way the
+    target layout the observed read mix favors.  The decision is
+    *lifecycle-aware*: each candidate is charged the cost of gathering its
+    chunks out of the source's current extents and writing them, plus
+    ``expected_reads`` replays of the observed mix (default: derived from
+    the history's decayed record mass).  With no usable history the policy
+    degrades to the dimension-aware default scheme.  Either way the
     decision (scheme, scores, ``reason``) is persisted in the destination's
     ``index.json`` under ``attrs["policy"][var]``.  ``policy`` injects a
-    prepared policy instead (tests, cross-dataset history).
+    prepared policy instead (tests, cross-dataset history); ``prior``
+    points at a previous run's ``access_log.json`` / exported prior /
+    directory, seeding the decision when this dataset's own telemetry is
+    thin (see :meth:`~repro.core.policy.LayoutPolicy.with_prior`).
 
     Returns ``(read_seconds, Dataset, WriteStats)`` — the returned session
     is open on the destination.
@@ -515,6 +524,8 @@ def reorganize(src_dir: str, dst_dir: str, var: str,
     if isinstance(layout, str):
         pol = policy if policy is not None else \
             LayoutPolicy.for_dataset(src_dir)
+        if prior is not None:
+            pol = pol.with_prior(prior)
         rows = src.index.var_rows(var)
         blocks = [Block(tuple(int(v) for v in rows.los[i]),
                         tuple(int(v) for v in rows.his[i]),
@@ -522,7 +533,9 @@ def reorganize(src_dir: str, dst_dir: str, var: str,
                   for i in range(rows.n)]
         decision = pol.choose_layout(var, blocks, src.index.var_shape(var),
                                      num_stagers=max(
-                                         1, src.index.num_subfiles))
+                                         1, src.index.num_subfiles),
+                                     align=align, current_extents=rows,
+                                     expected_reads=expected_reads)
         layout = decision.layout
     t0 = time.perf_counter()
     data = {}

@@ -73,7 +73,8 @@ class StagingExecutor:
                  queue_depth: int = 2, link_gbps: float | None = None,
                  align: int | None = None,
                  engine: str | IOEngine = "auto",
-                 policy: LayoutPolicy | None = None):
+                 policy: LayoutPolicy | None = None,
+                 prior: str | None = None):
         self.dirpath = dirpath
         self.num_workers = num_workers
         self.link_gbps = link_gbps
@@ -81,9 +82,13 @@ class StagingExecutor:
         #: layout decision-maker behind ``submit(..., plan="auto")``; by
         #: default a history-less policy (dimension-aware default scheme) —
         #: inject e.g. ``LayoutPolicy.for_dataset(prev_run_dir)`` to stage
-        #: into the layout a previous run's read mix favored
+        #: into the layout a previous run's read mix favored, or pass
+        #: ``prior=`` (a previous run's ``access_log.json`` / exported
+        #: prior / directory) to seed the default policy's decisions
         self.policy = policy if policy is not None else LayoutPolicy()
-        self._decisions: dict = {}    # (var, global_shape) -> PolicyDecision
+        if prior is not None:
+            self.policy = self.policy.with_prior(prior)
+        self._decisions: dict = {}    # cache key -> PolicyDecision
         self._ds = Dataset.create(dirpath, engine=engine)
         self._q: queue.Queue = queue.Queue(maxsize=queue_depth)
         self._results: list = []
@@ -96,23 +101,31 @@ class StagingExecutor:
 
     # -- producer side -------------------------------------------------------
     def layout_for(self, var: str, blocks: Sequence[Block],
-                   global_shape: Sequence[int] | None = None) -> LayoutPlan:
+                   global_shape: Sequence[int] | None = None,
+                   prior: str | None = None) -> LayoutPlan:
         """The policy-chosen staging layout for ``var`` (cached per
-        ``(var, global_shape)`` so repeated steps score the candidates
-        once)."""
+        ``(var, global_shape, prior)`` so repeated steps score the
+        candidates once).  A staged write gathers nothing from storage, so
+        only the write-side build cost and the expected read mix are
+        charged.  ``prior`` seeds this one decision from a previous run's
+        history (per-call override of the executor-level prior)."""
         blocks = list(blocks)
         if global_shape is None:
             global_shape = bounding_box(blocks).hi
-        key = (var, tuple(global_shape))
+        key = (var, tuple(global_shape), prior)
         if key not in self._decisions:
-            self._decisions[key] = self.policy.choose_layout(
-                var, blocks, global_shape, num_stagers=self.num_workers)
+            pol = self.policy if prior is None \
+                else self.policy.with_prior(prior)
+            self._decisions[key] = pol.choose_layout(
+                var, blocks, global_shape, num_stagers=self.num_workers,
+                align=self.align)
         return self._decisions[key].layout
 
     def submit(self, step: int, var: str, dtype,
                plan: LayoutPlan | str, data: Mapping[int, np.ndarray],
                blocks: Sequence[Block] | None = None,
-               global_shape: Sequence[int] | None = None) -> float:
+               global_shape: Sequence[int] | None = None,
+               prior: str | None = None) -> float:
         """Hand one output to staging. Copies the producer's block data (the
         device->staging transfer) and enqueues; returns seconds the producer
         was blocked (queue full => blocking regime).
@@ -120,7 +133,9 @@ class StagingExecutor:
         ``plan="auto"`` routes the layout choice through the executor's
         :class:`~repro.core.policy.LayoutPolicy` — ``blocks`` (the
         producer's decomposition) is required then, ``global_shape``
-        defaults to the blocks' bounding box.
+        defaults to the blocks' bounding box, and ``prior`` (a previous
+        run's ``access_log.json`` / exported prior / directory) seeds the
+        decision when this run has no telemetry yet.
         """
         if isinstance(plan, str):
             if plan != "auto":
@@ -129,7 +144,7 @@ class StagingExecutor:
             if blocks is None:
                 raise ValueError("plan='auto' needs blocks= (the producer's "
                                  "block decomposition)")
-            plan = self.layout_for(var, blocks, global_shape)
+            plan = self.layout_for(var, blocks, global_shape, prior=prior)
         t0 = time.perf_counter()
         staged = {k: np.copy(v) for k, v in data.items()}   # the transfer
         if self.link_gbps:

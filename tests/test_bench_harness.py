@@ -1,0 +1,70 @@
+"""Exit-code contract of the benchmark harness (ISSUE 5 satellite).
+
+The CI bench-smoke matrix runs ``python -m benchmarks.run <section>`` and
+trusts the exit code.  That trust has two historical holes: a leg raising
+``SystemExit(0)`` mid-crash would fake success, and a typo'd section
+filter would "pass" by running zero legs.  These tests pin the contract.
+"""
+
+import pytest
+
+from benchmarks import run as bench_run
+
+
+def _with_sections(monkeypatch, sections):
+    monkeypatch.setattr(bench_run, "SECTIONS", sections)
+
+
+def test_all_legs_pass_exits_zero(monkeypatch, capsys):
+    _with_sections(monkeypatch, [("ok_a", lambda tmp: None),
+                                 ("ok_b", lambda tmp: None)])
+    assert bench_run.main([]) == 0
+    out = capsys.readouterr().out
+    assert "FAILED" not in out
+
+
+def test_raising_leg_exits_nonzero_but_runs_the_rest(monkeypatch, capsys):
+    ran = []
+
+    def boom(tmp):
+        raise ValueError("leg crashed")
+
+    _with_sections(monkeypatch, [("boom", boom),
+                                 ("after", lambda tmp: ran.append(1))])
+    assert bench_run.main([]) == 1
+    assert ran == [1]                      # the crash did not stop the run
+    assert "boom/FAILED,0,ValueError" in capsys.readouterr().out
+
+
+def test_leg_calling_sys_exit_zero_still_fails(monkeypatch, capsys):
+    """A benchmark that dies via sys.exit(0) is a crashed leg, not a pass."""
+    def sneaky(tmp):
+        raise SystemExit(0)
+
+    _with_sections(monkeypatch, [("sneaky", sneaky)])
+    assert bench_run.main([]) == 1
+    assert "sneaky/FAILED,0,SystemExit" in capsys.readouterr().out
+
+
+def test_unmatched_filter_exits_nonzero(monkeypatch, capsys):
+    _with_sections(monkeypatch, [("layout_policy", lambda tmp: None)])
+    assert bench_run.main(["layout_polcy"]) == 2      # typo'd CI cell
+    err = capsys.readouterr().err
+    assert "matched no section" in err and "layout_policy" in err
+
+
+def test_filter_substring_selects(monkeypatch):
+    ran = []
+    _with_sections(monkeypatch, [("fig4_write", lambda tmp: ran.append("w")),
+                                 ("fig5_read", lambda tmp: ran.append("r"))])
+    assert bench_run.main(["fig5"]) == 0
+    assert ran == ["r"]
+
+
+def test_keyboard_interrupt_propagates(monkeypatch):
+    def interrupted(tmp):
+        raise KeyboardInterrupt
+
+    _with_sections(monkeypatch, [("slow", interrupted)])
+    with pytest.raises(KeyboardInterrupt):
+        bench_run.main([])

@@ -1,0 +1,273 @@
+"""Fault-injection matrix and concurrency stress (ISSUE 5 satellites).
+
+``reorganize`` promises commit-after-data crash consistency: the
+destination's ``index.json`` is written only after every ``WritePlan``
+group landed, so a crash at *any* point leaves the destination either
+absent (no index — dead bytes at worst) or fully consistent, and never
+touches the source.  The matrix here kills the write before each coalesced
+group in turn, and once after all data but before the index commit, then
+asserts the invariant and that a retry over the dead space succeeds.
+
+The concurrency section races appender threads against a live
+``LayoutPolicy`` reader over one ``access_log.json``, asserting the file
+is never observed as corrupt JSON and the 256-record ring bound holds at
+every observation.
+"""
+
+import hashlib
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (plan_layout, simulate_load_balance,
+                        uniform_grid_blocks)
+from repro.core.blocks import Block
+from repro.core.policy import (ACCESS_LOG_CAPACITY, ACCESS_LOG_NAME,
+                               AccessLog, AccessRecord, LayoutPolicy,
+                               classify_region)
+from repro.io import Dataset, PreadEngine, reorganize
+from repro.io.format import DatasetIndex
+
+GLOBAL = (32, 32, 32)
+
+
+class InjectedCrash(RuntimeError):
+    """The simulated kill — distinguishable from any real failure."""
+
+
+class KillAfterGroups(PreadEngine):
+    """Writes normally until ``groups_before_crash`` groups landed, then
+    dies — the "process killed between two pwritev batches" motif."""
+
+    name = "kill-after-groups"
+
+    def __init__(self, groups_before_crash: int):
+        self.remaining = groups_before_crash
+
+    def _write_group(self, plan, g, buffers, store):
+        if self.remaining <= 0:
+            raise InjectedCrash(f"killed before write group {g}")
+        self.remaining -= 1
+        super()._write_group(plan, g, buffers, store)
+
+
+def _world(seed=3, nprocs=4):
+    blocks = simulate_load_balance(uniform_grid_blocks(GLOBAL, (8, 8, 8)),
+                                   num_procs=nprocs, seed=seed)
+    rng = np.random.default_rng(seed)
+    data = {b.block_id: rng.standard_normal(b.shape).astype(np.float32)
+            for b in blocks}
+    ref = np.zeros(GLOBAL, np.float32)
+    for b in blocks:
+        ref[b.slices()] = data[b.block_id]
+    return blocks, data, ref
+
+
+def _write_src(tmp_path, blocks, data):
+    src = str(tmp_path / "src")
+    ds = Dataset.create(src)
+    ds.write("B", plan_layout("subfiled_fpp", blocks, num_procs=4,
+                              global_shape=GLOBAL), np.float32, data)
+    ds.close()
+    return src
+
+
+def _dir_hashes(d):
+    out = {}
+    for name in sorted(os.listdir(d)):
+        with open(os.path.join(d, name), "rb") as f:
+            out[name] = hashlib.sha256(f.read()).hexdigest()
+    return out
+
+
+def _assert_dst_absent_or_consistent(dst, ref):
+    """The commit-after-data invariant: either no index (dead bytes at
+    worst) or a fully readable, correct dataset."""
+    if not os.path.exists(os.path.join(dst, "index.json")):
+        return "absent"
+    ds = Dataset.open(dst)
+    arr, _ = ds.read("B", Block((0, 0, 0), GLOBAL))
+    ds.close()
+    np.testing.assert_array_equal(arr, ref)
+    return "consistent"
+
+
+def _num_write_groups(src):
+    """Group count of the exact write plan the auto reorganize would run
+    (no history: the default scheme), learned from a dry planning pass."""
+    from repro.io.planner import build_write_plan
+    ds = Dataset.open(src)
+    rows = ds.index.var_rows("B")
+    blocks = [Block(tuple(int(v) for v in rows.los[i]),
+                    tuple(int(v) for v in rows.his[i]),
+                    owner=int(rows.subfiles[i]), block_id=i)
+              for i in range(rows.n)]
+    pol = LayoutPolicy()
+    dec = pol.choose_layout("B", blocks, GLOBAL,
+                            num_stagers=max(1, ds.index.num_subfiles))
+    wplan = build_write_plan(dec.layout, "B", np.float32)
+    ds.close()
+    return wplan.num_groups
+
+
+def test_fault_matrix_layout(tmp_path):
+    """The matrix below assumes a multi-group write plan — pin that here
+    so a layout change can't silently hollow the matrix out."""
+    blocks, data, _ = _world()
+    src = _write_src(tmp_path, blocks, data)
+    assert _num_write_groups(src) == 4
+
+
+@pytest.mark.parametrize("kill_at", [0, 1, 2, 3])
+def test_reorganize_killed_between_groups(tmp_path, kill_at):
+    blocks, data, ref = _world()
+    src = _write_src(tmp_path, blocks, data)
+    src_before = _dir_hashes(src)
+    dst = str(tmp_path / "dst")
+
+    with pytest.raises(InjectedCrash):
+        reorganize(src, dst, "B", "auto",
+                   engine=KillAfterGroups(kill_at))
+
+    # destination: absent or fully consistent — never a half-indexed state
+    assert _assert_dst_absent_or_consistent(dst, ref) == "absent"
+    # source untouched, byte for byte
+    assert _dir_hashes(src) == src_before
+    # retry over the dead space (same destination directory) succeeds
+    _, again, _ = reorganize(src, dst, "B", "auto")
+    arr, _ = again.read("B", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+    again.close()
+    assert _assert_dst_absent_or_consistent(dst, ref) == "consistent"
+
+
+def test_reorganize_killed_after_data_before_index(tmp_path, monkeypatch):
+    """All data groups land, the process dies before the index commit:
+    the destination must still read as absent and the source stay put."""
+    blocks, data, ref = _world()
+    src = _write_src(tmp_path, blocks, data)
+    src_before = _dir_hashes(src)
+    dst = str(tmp_path / "dst")
+
+    def boom(self, dirpath):
+        raise InjectedCrash("killed after data, before index commit")
+
+    monkeypatch.setattr(DatasetIndex, "save", boom)
+    with pytest.raises(InjectedCrash):
+        reorganize(src, dst, "B", "auto")
+    monkeypatch.undo()
+
+    # every byte of data is on disk, but without an index it is dead space
+    assert os.listdir(dst)                       # subfiles exist
+    assert _assert_dst_absent_or_consistent(dst, ref) == "absent"
+    assert _dir_hashes(src) == src_before
+    _, again, _ = reorganize(src, dst, "B", "auto")
+    arr, _ = again.read("B", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+    again.close()
+
+
+def test_reorganize_killed_mid_policy_flush_keeps_data(tmp_path,
+                                                       monkeypatch):
+    """A crash while persisting the *decision audit* (the post-commit
+    flush) must leave a fully consistent destination — the data and index
+    already landed."""
+    blocks, data, ref = _world()
+    src = _write_src(tmp_path, blocks, data)
+    dst = str(tmp_path / "dst")
+    real_save = DatasetIndex.save
+    calls = {"n": 0}
+
+    def save_then_boom(self, dirpath):
+        calls["n"] += 1
+        if calls["n"] == 1:                      # the data commit: succeed
+            return real_save(self, dirpath)
+        raise InjectedCrash("killed persisting the policy audit")
+
+    monkeypatch.setattr(DatasetIndex, "save", save_then_boom)
+    with pytest.raises(InjectedCrash):
+        reorganize(src, dst, "B", "auto")
+    monkeypatch.undo()
+    assert _assert_dst_absent_or_consistent(dst, ref) == "consistent"
+
+
+# -- concurrency stress ------------------------------------------------------
+
+def test_racing_appenders_policy_reader_and_ring_bound(tmp_path):
+    """N racing appender threads + a concurrent LayoutPolicy reader over
+    one ``access_log.json``: no observation may ever see corrupt JSON, the
+    256-record ring bound must hold at every observation, and the policy
+    must keep deciding without error throughout."""
+    d = str(tmp_path)
+    slab = Block((0, 0, 12), (32, 32, 16))
+    blocks = uniform_grid_blocks(GLOBAL, (8, 8, 8))
+    n_writers, n_each = 4, 90                    # 360 appends > capacity
+    logs = [AccessLog(d) for _ in range(n_writers)]
+    errors: list = []
+    decisions: list = []
+    observations = {"parses": 0}
+    stop = threading.Event()
+
+    def writer(log, tid):
+        try:
+            for i in range(n_each):
+                log.append(AccessRecord(
+                    var="B", kind="read",
+                    shape_class=classify_region(slab, GLOBAL),
+                    lo=slab.lo, hi=slab.hi, runs=64, groups=8,
+                    nbytes=slab.volume * 4, seconds=1e-3,
+                    ts=time.time()))
+        except Exception as e:                    # noqa: BLE001
+            errors.append(("writer", e))
+
+    def policy_reader():
+        pol = LayoutPolicy(log=AccessLog(d))
+        try:
+            while not stop.is_set():
+                decisions.append(pol.choose_layout("B", blocks, GLOBAL))
+        except Exception as e:                    # noqa: BLE001
+            errors.append(("policy", e))
+
+    def validator():
+        path = os.path.join(d, ACCESS_LOG_NAME)
+        while not stop.is_set():
+            try:
+                with open(path) as f:
+                    payload = json.load(f)
+                observations["parses"] += 1
+                n = len(payload["records"])
+                if n > ACCESS_LOG_CAPACITY:
+                    errors.append(("bound", n))
+            except FileNotFoundError:
+                pass
+            except Exception as e:                # noqa: BLE001
+                errors.append(("validator", e))
+
+    threads = [threading.Thread(target=writer, args=(log, i))
+               for i, log in enumerate(logs)]
+    aux = [threading.Thread(target=policy_reader),
+           threading.Thread(target=validator)]
+    for t in aux:
+        t.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    for t in aux:
+        t.join()
+
+    assert not errors
+    assert observations["parses"] > 0
+    # final state: intact, bounded, and only intact records inside
+    final = AccessLog(d).records()
+    assert 1 <= len(final) <= ACCESS_LOG_CAPACITY
+    assert all(r.var == "B" and r.ndim == 3 for r in final)
+    # the reader saw a live mix of histories, always deciding cleanly
+    assert decisions
+    assert all(dec.strategy in ("reorganized", "merged_node", "chunked")
+               for dec in decisions)

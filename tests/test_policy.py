@@ -365,7 +365,7 @@ def test_staging_auto_layout(tmp_path):
     results = ex.drain()
     ex.close()
     assert all(r.error is None for r in results)
-    decision = ex._decisions[("B", GLOBAL)]
+    decision = ex._decisions[("B", GLOBAL, None)]
     assert decision.scheme != (4, 4, 4)
     ds = Dataset.open(sd)
     for step in range(2):
@@ -421,6 +421,130 @@ def test_async_checkpointer_auto_scheme(tmp_path):
     arr, _ = ds.read("B@0", Block((0, 0, 0), GLOBAL))
     np.testing.assert_array_equal(arr, ref)
     ds.close()
+
+
+# -- cross-run prior plumbing (ISSUE 5) --------------------------------------
+
+def _warm_prior(tmp_path, name="warm"):
+    """A previous run's dataset with slab-skewed telemetry, exported."""
+    blocks, data, _ = _world()
+    warm = str(tmp_path / name)
+    ds = Dataset.create(warm)
+    ds.write("B", plan_layout("subfiled_fpp", blocks, num_procs=4,
+                              global_shape=GLOBAL), np.float32, data)
+    drive_pattern_mix(ds, "B", [("plane_xy", 8), ("sub_area", 2)],
+                      slab_thickness=4)
+    ds.close()
+    return AccessLog(warm).export_prior()
+
+
+def test_reorganize_prior_seeds_cold_dataset(tmp_path):
+    prior = _warm_prior(tmp_path)
+    blocks, data, ref = _world(seed=5)
+    cold = str(tmp_path / "cold")
+    ds = Dataset.create(cold)
+    ds.write("B", plan_layout("subfiled_fpp", blocks, num_procs=4,
+                              global_shape=GLOBAL), np.float32, data)
+    ds.close()
+    _, dst, _ = reorganize(cold, str(tmp_path / "dst"), "B", "auto",
+                           prior=prior)
+    info = dst.index.attrs["policy"]["B"]
+    assert info["num_prior_records"] == 10
+    assert "prior" in info["reason"]
+    assert "no usable access history" not in info["reason"]
+    arr, _ = dst.read("B", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+    dst.close()
+
+
+def test_staging_prior_seeds_layout(tmp_path):
+    prior = _warm_prior(tmp_path)
+    blocks, data, ref = _world()
+    sd = str(tmp_path / "staged_prior")
+    ex = StagingExecutor(sd, num_workers=2, prior=prior)
+    ex.submit(0, "B", np.float32, "auto", data, blocks=blocks,
+              global_shape=GLOBAL)
+    results = ex.drain()
+    ex.close()
+    assert all(r.error is None for r in results)
+    decision = ex._decisions[("B", GLOBAL, None)]
+    assert decision.num_prior_records == 10
+    ds = Dataset.open(sd)
+    arr, _ = ds.read("B@0", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+    ds.close()
+
+
+def test_staging_submit_prior_overrides_per_call(tmp_path):
+    prior = _warm_prior(tmp_path)
+    blocks, data, _ = _world()
+    ex = StagingExecutor(str(tmp_path / "staged_pc"), num_workers=1)
+    ex.submit(0, "B", np.float32, "auto", data, blocks=blocks,
+              global_shape=GLOBAL)                      # no prior
+    ex.submit(1, "B", np.float32, "auto", data, blocks=blocks,
+              global_shape=GLOBAL, prior=prior)          # seeded
+    ex.drain()
+    ex.close()
+    bare = ex._decisions[("B", GLOBAL, None)]
+    seeded = ex._decisions[("B", GLOBAL, prior)]
+    assert bare.num_records == 0
+    assert seeded.num_prior_records == 10
+
+
+def test_checkpoint_save_prior_and_export(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    # a previous run's manager, with restore telemetry of its own
+    prev = CheckpointManager(str(tmp_path / "prev_ckpt"), strategy="auto")
+    tree = {"w": np.arange(16 ** 3, dtype=np.float32).reshape(16, 16, 16)}
+    prev.save(1, tree)
+    prev.restore(1)
+    prior = prev.export_prior()
+    assert os.path.exists(prior)
+    # a fresh root: the first auto save is already history-driven
+    mgr = CheckpointManager(str(tmp_path / "new_ckpt"), strategy="auto",
+                            prior=prior)
+    mgr.save(1, tree)
+    man = json.load(open(os.path.join(mgr.step_dir(1), "manifest.json")))
+    assert man["policy"]["w"]["num_prior_records"] >= 1
+    assert "no usable access history" not in man["policy"]["w"]["reason"]
+    got, _ = mgr.restore(1)
+    np.testing.assert_array_equal(got["w"], tree["w"])
+    # per-call prior on a prior-less manager works too
+    mgr2 = CheckpointManager(str(tmp_path / "new_ckpt2"), strategy="auto")
+    mgr2.save(1, tree, prior=prior)
+    man2 = json.load(open(os.path.join(mgr2.step_dir(1), "manifest.json")))
+    assert man2["policy"]["w"]["num_prior_records"] >= 1
+
+
+def test_async_checkpointer_prior_passthrough(tmp_path):
+    from repro.checkpoint.async_ckpt import AsyncCheckpointer
+    prior = _warm_prior(tmp_path)
+    blocks, data, ref = _world()
+    ck = AsyncCheckpointer(str(tmp_path / "ac_prior"),
+                           reorg_scheme="auto", num_workers=2, prior=prior)
+    ck.save(0, {"B": ref}, block_map={"B": blocks})
+    results = ck.finish()
+    assert results and all(r.error is None for r in results)
+    decision = ck.executor._decisions[("B", GLOBAL, None)]
+    assert decision.num_prior_records == 10
+
+
+def test_restore_stats_feed_measured_cost_into_auto_saves(tmp_path):
+    """RestoreStats engine decisions/measured seconds land in the
+    checkpoint-root log and weigh the next auto save's mix."""
+    from repro.checkpoint import CheckpointManager
+    root = str(tmp_path / "ckpt_feed")
+    mgr = CheckpointManager(root, strategy="auto")
+    tree = {"w": np.arange(16 ** 3, dtype=np.float32).reshape(16, 16, 16)}
+    mgr.save(1, tree)
+    _, rstats = mgr.restore(1)
+    recs = mgr.access_log.records()
+    assert recs
+    # each record carries the executed engine and the measured seconds the
+    # cost weighting consumes
+    assert all(r.engine for r in recs)
+    assert all(r.seconds >= 0 for r in recs)
+    assert rstats.per_var["w"].engine == recs[-1].engine
 
 
 # -- recalibrate-on-drift ----------------------------------------------------

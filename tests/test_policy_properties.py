@@ -1,0 +1,484 @@
+"""Property-based oracle harness for the planner/policy core (ISSUE 5).
+
+Seeded-random layouts × regions × ranks (1-D..4-D), asserting that the
+policy's *analytic* plan-shape estimators reproduce the real planners
+bit-for-bit:
+
+* :func:`repro.core.policy.estimate_read_shape` (with extent placement)
+  == :func:`repro.io.planner.build_read_plan` on runs, coalesced groups,
+  payload bytes and span bytes — for every strategy, alignment and region
+  the sweep generates;
+* :func:`repro.core.policy.estimate_write_shape`
+  == :func:`repro.io.planner.build_write_plan` on extent count, coalesced
+  groups, payload and span.
+
+No file I/O happens: the "dataset" is an in-memory ``DatasetIndex`` built
+from the write plan's own extent table, which is exactly what the real
+write path commits.
+
+The second half asserts decision-level properties of the lifecycle policy:
+permutation invariance in record order, recency/measured-cost weighting,
+the expected-reads tradeoff, and cross-run prior round-trips.
+"""
+
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import uniform_grid_blocks
+from repro.core.blocks import Block
+from repro.core.layouts import plan_layout
+from repro.core.policy import (ACCESS_PRIOR_NAME, AccessLog, AccessRecord,
+                               LayoutPolicy, append_extent_offsets,
+                               classify_region, estimate_read_shape,
+                               estimate_write_shape, load_prior_records)
+from repro.io.format import ChunkRecord, DatasetIndex
+from repro.io.planner import build_read_plan, build_write_plan
+
+NDIM_SHAPES = {1: (128,), 2: (64, 48), 3: (32, 32, 32), 4: (8, 8, 8, 8)}
+NDIM_BLOCKS = {1: (16,), 2: (16, 12), 3: (8, 8, 8), 4: (4, 4, 4, 4)}
+
+
+def _random_world(rng, ndim):
+    """A random-ish but valid world for one rank: grid blocks plus a
+    random layout strategy and alignment."""
+    gshape = NDIM_SHAPES[ndim]
+    blocks = uniform_grid_blocks(gshape, NDIM_BLOCKS[ndim])
+    strategy = rng.choice(["reorganized", "subfiled_fpp", "chunked"])
+    kwargs = {}
+    if strategy == "reorganized":
+        scheme = tuple(int(rng.choice([1, 2, 4])) for _ in range(ndim))
+        kwargs = dict(reorg_scheme=scheme,
+                      num_stagers=int(rng.integers(1, 4)))
+    lay = plan_layout(strategy, blocks, num_procs=4, global_shape=gshape,
+                      **kwargs)
+    align = [None, 512, 4096][int(rng.integers(0, 3))]
+    return gshape, lay, align
+
+
+def _index_from_write_plan(wplan, gshape, strategy):
+    """Commit a write plan's extent table into an in-memory index — the
+    byte-for-byte metadata the real write path would persist."""
+    idx = DatasetIndex()
+    idx.add_variable("v", gshape, np.float32, strategy)
+    for row in np.argsort(wplan.chunk_ids):
+        idx.chunks.append(ChunkRecord(
+            var="v", lo=tuple(int(x) for x in wplan.chunk_los[row]),
+            hi=tuple(int(x) for x in wplan.chunk_his[row]),
+            subfile=int(wplan.subfiles[row]),
+            offset=int(wplan.file_lo[row]),
+            nbytes=int(wplan.nbytes[row])))
+    return idx
+
+
+def _random_region(rng, gshape):
+    lo = tuple(int(rng.integers(0, g)) for g in gshape)
+    hi = tuple(int(rng.integers(l + 1, g + 1)) for l, g in zip(lo, gshape))
+    return Block(lo, hi)
+
+
+# -- write-shape oracle ------------------------------------------------------
+
+@pytest.mark.parametrize("ndim", [1, 2, 3, 4])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_estimate_write_shape_matches_write_plan(ndim, seed):
+    rng = np.random.default_rng(1000 * ndim + seed)
+    for _ in range(4):
+        gshape, lay, align = _random_world(rng, ndim)
+        wplan = build_write_plan(lay, "v", np.float32, align=align)
+        los = np.asarray([c.chunk.lo for c in lay.chunks], dtype=np.int64)
+        his = np.asarray([c.chunk.hi for c in lay.chunks], dtype=np.int64)
+        subf = np.asarray([c.subfile for c in lay.chunks], dtype=np.int64)
+        est = estimate_write_shape(los, his, 4, subfiles=subf, align=align)
+        assert est.runs == wplan.num_chunks
+        assert est.groups == wplan.num_groups
+        assert est.bytes_needed == wplan.bytes_total
+        assert est.span_bytes == wplan.span_bytes
+
+
+@pytest.mark.parametrize("ndim", [1, 2, 3])
+def test_estimate_write_shape_matches_appends_to_existing(ndim):
+    """Appending past existing extents (base_offsets) must also match."""
+    rng = np.random.default_rng(77 + ndim)
+    gshape, lay, align = _random_world(rng, ndim)
+    base = {k: int(rng.integers(1, 100_000)) for k in range(4)}
+    wplan = build_write_plan(lay, "v", np.float32, align=align,
+                             base_offsets=base)
+    los = np.asarray([c.chunk.lo for c in lay.chunks], dtype=np.int64)
+    his = np.asarray([c.chunk.hi for c in lay.chunks], dtype=np.int64)
+    subf = np.asarray([c.subfile for c in lay.chunks], dtype=np.int64)
+    est = estimate_write_shape(los, his, 4, subfiles=subf, align=align,
+                               base_offsets=base)
+    assert (est.groups, est.runs, est.bytes_needed, est.span_bytes) == \
+        (wplan.num_groups, wplan.num_chunks, wplan.bytes_total,
+         wplan.span_bytes)
+    # and the per-extent offsets themselves agree row-for-row
+    nbytes = (his - los).prod(axis=1) * 4
+    offs = append_extent_offsets(nbytes, subf, align=align,
+                                 base_offsets=base)
+    got = np.empty_like(offs)
+    got[wplan.chunk_ids] = wplan.file_lo
+    np.testing.assert_array_equal(offs, got)
+
+
+def test_estimate_write_shape_default_subfiles_round_robin():
+    """Without explicit subfiles the estimator assumes plan_layout's
+    round-robin stager assignment."""
+    gshape = (16, 16)
+    blocks = uniform_grid_blocks(gshape, (4, 4))
+    lay = plan_layout("reorganized", blocks, num_procs=1,
+                      global_shape=gshape, reorg_scheme=(2, 2),
+                      num_stagers=3)
+    los = np.asarray([c.chunk.lo for c in lay.chunks], dtype=np.int64)
+    his = np.asarray([c.chunk.hi for c in lay.chunks], dtype=np.int64)
+    est = estimate_write_shape(los, his, 4, num_subfiles=3)
+    wplan = build_write_plan(lay, "v", np.float32)
+    assert est.groups == wplan.num_groups
+    assert est.span_bytes == wplan.span_bytes
+
+
+def test_estimate_write_shape_empty():
+    z = np.empty((0, 3), dtype=np.int64)
+    est = estimate_write_shape(z, z, 4)
+    assert (est.groups, est.runs, est.bytes_needed, est.span_bytes) \
+        == (0, 0, 0, 0)
+
+
+# -- read-shape oracle -------------------------------------------------------
+
+@pytest.mark.parametrize("ndim", [1, 2, 3, 4])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_estimate_read_shape_matches_read_plan(ndim, seed):
+    rng = np.random.default_rng(2000 * ndim + seed)
+    for _ in range(3):
+        gshape, lay, align = _random_world(rng, ndim)
+        wplan = build_write_plan(lay, "v", np.float32, align=align)
+        idx = _index_from_write_plan(wplan, gshape, lay.strategy)
+        rows = idx.var_rows("v")
+        for _ in range(8):
+            region = _random_region(rng, gshape)
+            rplan = build_read_plan(idx, "v", region)
+            est = estimate_read_shape(rows.los, rows.his, region, 4,
+                                      subfiles=rows.subfiles,
+                                      offsets=rows.offsets)
+            assert est.groups == rplan.num_groups, (gshape, region)
+            assert est.runs == rplan.runs, (gshape, region)
+            assert est.bytes_needed == rplan.bytes_needed
+            assert est.span_bytes == rplan.span_bytes, (gshape, region)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_estimate_read_shape_without_offsets_is_upper_bound(seed):
+    """The placement-free estimate never under-counts groups or runs and
+    always agrees on payload bytes."""
+    rng = np.random.default_rng(31 + seed)
+    gshape, lay, align = _random_world(rng, 3)
+    wplan = build_write_plan(lay, "v", np.float32, align=align)
+    idx = _index_from_write_plan(wplan, gshape, lay.strategy)
+    rows = idx.var_rows("v")
+    for _ in range(10):
+        region = _random_region(rng, gshape)
+        rplan = build_read_plan(idx, "v", region)
+        est = estimate_read_shape(rows.los, rows.his, region, 4)
+        assert est.groups >= rplan.num_groups
+        assert est.runs >= rplan.runs
+        assert est.bytes_needed == rplan.bytes_needed
+
+
+def test_estimate_read_shape_miss_is_empty():
+    t = uniform_grid_blocks((8, 8), (4, 4))
+    los = np.asarray([b.lo for b in t])
+    his = np.asarray([b.hi for b in t])
+    est = estimate_read_shape(los, his, Block((100, 100), (101, 101)), 4,
+                              subfiles=np.zeros(len(t), dtype=np.int64),
+                              offsets=np.zeros(len(t), dtype=np.int64))
+    assert (est.groups, est.runs, est.bytes_needed, est.span_bytes) \
+        == (0, 0, 0, 0)
+
+
+# -- batched pricing oracle --------------------------------------------------
+
+@pytest.mark.parametrize("direction", ["read", "write"])
+def test_predict_best_seconds_batch_matches_scalar(direction):
+    """The vectorized best-engine pricing is the scalar model, exactly —
+    per element, over random plan shapes including empty plans."""
+    from repro.core.cost_model import (FALLBACK_CALIBRATION,
+                                      predict_best_seconds,
+                                      predict_best_seconds_batch)
+    rng = np.random.default_rng(9)
+    groups = rng.integers(0, 200, size=64)
+    runs = groups + rng.integers(0, 5000, size=64)
+    nbytes = rng.integers(0, 1 << 26, size=64)
+    span = nbytes + rng.integers(0, 1 << 20, size=64)
+    batch = predict_best_seconds_batch(
+        FALLBACK_CALIBRATION, groups=groups, runs=runs, bytes_moved=nbytes,
+        span_bytes=span, direction=direction)
+    for i in range(64):
+        scalar = predict_best_seconds(
+            FALLBACK_CALIBRATION, groups=int(groups[i]), runs=int(runs[i]),
+            bytes_moved=int(nbytes[i]), span_bytes=int(span[i]),
+            direction=direction)
+        assert batch[i] == pytest.approx(scalar, rel=1e-12, abs=1e-15)
+
+
+@pytest.mark.parametrize("ndim", [1, 2, 3])
+def test_estimate_gather_shapes_matches_scalar_estimates(ndim):
+    """The batched gather estimator agrees with one offset-free
+    estimate_read_shape call per target region."""
+    from repro.core.policy import estimate_gather_shapes
+    rng = np.random.default_rng(40 + ndim)
+    gshape = NDIM_SHAPES[ndim]
+    src = uniform_grid_blocks(gshape, NDIM_BLOCKS[ndim])
+    src_los = np.asarray([b.lo for b in src], dtype=np.int64)
+    src_his = np.asarray([b.hi for b in src], dtype=np.int64)
+    targets = [_random_region(rng, gshape) for _ in range(12)]
+    tgt_los = np.asarray([t.lo for t in targets], dtype=np.int64)
+    tgt_his = np.asarray([t.hi for t in targets], dtype=np.int64)
+    gg, gr, gb, gs = estimate_gather_shapes(src_los, src_his,
+                                            tgt_los, tgt_his, 4)
+    for i, t in enumerate(targets):
+        est = estimate_read_shape(src_los, src_his, t, 4)
+        assert (gg[i], gr[i], gb[i], gs[i]) == \
+            (est.groups, est.runs, est.bytes_needed, est.span_bytes)
+
+
+# -- decision-level properties -----------------------------------------------
+
+G3 = (32, 32, 32)
+
+
+def _blocks3():
+    return uniform_grid_blocks(G3, (8, 8, 8))
+
+
+def _rec(region, shape=G3, var="B", seconds=1e-3, ts=None, source="live",
+         kind="read"):
+    return AccessRecord(var=var, kind=kind,
+                        shape_class=classify_region(region, shape),
+                        lo=region.lo, hi=region.hi, runs=64, groups=8,
+                        nbytes=region.volume * 4, seconds=seconds,
+                        ts=time.time() if ts is None else ts, source=source)
+
+
+def _slab(shape=G3, thickness=4):
+    return Block((0, 0, shape[2] // 2),
+                 (shape[0], shape[1], shape[2] // 2 + thickness))
+
+
+def _sub(shape=G3):
+    return Block(tuple(g // 4 for g in shape),
+                 tuple(g // 4 + g // 2 for g in shape))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_choose_layout_permutation_invariant(seed):
+    """Shuffling the record order must not change the decision — or any
+    score it was based on."""
+    rng = np.random.default_rng(seed)
+    now = time.time()
+    regions = [_slab(), _sub(), _slab(thickness=2),
+               Block((0, 0, 0), G3)]
+    recs = [_rec(regions[int(rng.integers(0, len(regions)))],
+                 seconds=float(rng.uniform(1e-5, 1e-2)),
+                 ts=now - float(rng.uniform(0, 3600)))
+            for _ in range(24)]
+    blocks = _blocks3()
+    base = LayoutPolicy(records=recs).choose_layout("B", blocks, G3,
+                                                    now=now)
+    for _ in range(3):
+        perm = list(recs)
+        rng.shuffle(perm)
+        d = LayoutPolicy(records=perm).choose_layout("B", blocks, G3,
+                                                     now=now)
+        assert d.strategy == base.strategy
+        assert d.scheme == base.scheme
+        assert set(d.scores) == set(base.scores)
+        for k in base.scores:
+            assert d.scores[k] == pytest.approx(base.scores[k], rel=1e-9)
+
+
+def test_recency_weighting_prefers_recent_pattern():
+    """A stale slab history many half-lives old must lose to a handful of
+    fresh sub-area reads; with equal timestamps the slab majority wins."""
+    now = time.time()
+    stale_slab = [_rec(_slab(), ts=now - 60 * 24 * 3600.0)
+                  for _ in range(12)]
+    fresh_sub = [_rec(_sub(), ts=now) for _ in range(3)]
+    pol = LayoutPolicy(records=stale_slab + fresh_sub)
+    mix = dict()
+    for w, _r, cls in pol.pattern_mix(stale_slab + fresh_sub, now=now):
+        mix[cls] = mix.get(cls, 0.0) + w
+    assert mix["sub_area"] > 0.98
+    # equal-age control: frequency wins again
+    even = [_rec(_slab(), ts=now) for _ in range(12)] + \
+        [_rec(_sub(), ts=now) for _ in range(3)]
+    mix2 = dict()
+    for w, _r, cls in pol.pattern_mix(even, now=now):
+        mix2[cls] = mix2.get(cls, 0.0) + w
+    assert mix2["slab(axis=2)"] > mix2["sub_area"]
+
+
+def test_measured_cost_weighting_prefers_expensive_accesses():
+    now = time.time()
+    cheap_sub = [_rec(_sub(), seconds=1e-5, ts=now) for _ in range(8)]
+    dear_slab = [_rec(_slab(), seconds=5e-2, ts=now) for _ in range(2)]
+    pol = LayoutPolicy(records=cheap_sub + dear_slab)
+    mix = dict()
+    for w, _r, cls in pol.pattern_mix(cheap_sub + dear_slab, now=now):
+        mix[cls] = mix.get(cls, 0.0) + w
+    assert mix["slab(axis=2)"] > 0.9
+    # untimed history degrades to pure frequency
+    untimed = [_rec(_sub(), seconds=0.0, ts=now) for _ in range(8)] + \
+        [_rec(_slab(), seconds=0.0, ts=now) for _ in range(2)]
+    mix2 = dict()
+    for w, _r, cls in pol.pattern_mix(untimed, now=now):
+        mix2[cls] = mix2.get(cls, 0.0) + w
+    assert mix2["sub_area"] == pytest.approx(0.8)
+
+
+def test_expected_reads_trades_build_cost_against_read_cost():
+    """The paper's central tension, in one assertion: with few expected
+    reads the cheap-to-build candidate wins; with many, the read-optimal
+    one does — and the read-optimal one has more chunks."""
+    recs = [_rec(_slab()) for _ in range(4)]
+    blocks = _blocks3()
+    few = LayoutPolicy(records=recs).choose_layout(
+        "B", blocks, G3, expected_reads=0.5)
+    many = LayoutPolicy(records=recs).choose_layout(
+        "B", blocks, G3, expected_reads=5000.0)
+    assert few.scheme != many.scheme
+    assert few.layout.num_chunks < many.layout.num_chunks
+    # the many-reads decision matches read-only (v1) scoring
+    v1 = LayoutPolicy(records=recs,
+                      include_write_cost=False).choose_layout(
+        "B", blocks, G3)
+    assert many.scheme == v1.scheme
+    assert v1.write_scores == {}
+
+
+def test_effective_reads_is_decayed_record_mass():
+    now = time.time()
+    pol = LayoutPolicy()
+    fresh = [_rec(_slab(), ts=now) for _ in range(6)]
+    assert pol.effective_reads(fresh, now=now) == pytest.approx(6.0)
+    stale = [_rec(_slab(), ts=now - 7 * 24 * 3600.0) for _ in range(6)]
+    assert pol.effective_reads(stale, now=now) == pytest.approx(3.0)
+    assert pol.effective_reads([], now=now) == 1.0   # floor
+
+
+def test_decision_audit_fields_round_trip():
+    recs = [_rec(_slab()) for _ in range(4)]
+    d = LayoutPolicy(records=recs).choose_layout("B", _blocks3(), G3)
+    j = json.loads(json.dumps(d.to_json()))
+    assert j["expected_reads"] > 0
+    assert set(j["read_scores"]) == set(j["scores"])
+    assert set(j["write_scores"]) == set(j["scores"])
+    best = min(j["scores"], key=lambda k: j["scores"][k])
+    for k in j["scores"]:
+        assert j["scores"][k] == pytest.approx(
+            j["write_scores"][k] + j["expected_reads"] * j["read_scores"][k],
+            rel=1e-6)
+    assert "E[reads]" in j["reason"]
+
+
+# -- cross-run priors --------------------------------------------------------
+
+def test_prior_export_roundtrip(tmp_path):
+    d = str(tmp_path)
+    log = AccessLog(d)
+    for _ in range(6):
+        log.append(_rec(_slab()))
+    path = log.export_prior()
+    assert os.path.basename(path) == ACCESS_PRIOR_NAME
+    prior = load_prior_records(path)
+    assert len(prior) == 6
+    assert all(r.source == "prior" for r in prior)
+    # the seeded cold policy decides like the warm one
+    warm = LayoutPolicy(log=log).choose_layout("B", _blocks3(), G3)
+    cold = LayoutPolicy().with_prior(path).choose_layout("B", _blocks3(), G3)
+    assert cold.scheme == warm.scheme
+    assert cold.num_prior_records == 6
+    assert "6 prior" in cold.reason
+
+
+def test_prior_loads_from_directory_and_raw_log(tmp_path):
+    d = str(tmp_path)
+    log = AccessLog(d)
+    for _ in range(4):
+        log.append(_rec(_slab()))
+    # directory without an exported prior falls back to access_log.json
+    from_dir = load_prior_records(d)
+    from_log = load_prior_records(log.path)
+    assert len(from_dir) == len(from_log) == 4
+    # an exported snapshot in the directory takes precedence
+    log.export_prior()
+    log.append(_rec(_sub()))
+    assert len(load_prior_records(d)) == 4          # the snapshot
+    assert len(load_prior_records(log.path)) == 5   # the live ring
+
+
+def test_prior_survives_old_wall_clock_age(tmp_path):
+    """A prior from a month-old run must still steer (live-ring TTL does
+    not apply to priors — they are re-stamped at load)."""
+    d = str(tmp_path)
+    log = AccessLog(d)
+    old = time.time() - 45 * 24 * 3600.0
+    log._save([_rec(_slab(), ts=old) for _ in range(5)])
+    assert log.records() == []                      # TTL kills the live view
+    prior = load_prior_records(log.path)
+    assert len(prior) == 5
+    cold = LayoutPolicy().with_prior(log.path).choose_layout(
+        "B", _blocks3(), G3)
+    assert cold.num_records == 5
+    # the month-old history decides exactly like an equivalent fresh one
+    live = LayoutPolicy(
+        records=[_rec(_slab()) for _ in range(5)]).choose_layout(
+        "B", _blocks3(), G3)
+    assert (cold.strategy, cold.scheme) == (live.strategy, live.scheme)
+
+
+def test_prior_decays_as_live_telemetry_accumulates():
+    now = time.time()
+    prior = [_rec(_slab(), ts=now, source="prior") for _ in range(8)]
+    live = [_rec(_sub(), ts=now) for _ in range(100)]
+    pol = LayoutPolicy(records=live, prior_records=prior)
+    mix = dict()
+    for w, _r, cls in pol.pattern_mix(pol.records(), now=now):
+        mix[cls] = mix.get(cls, 0.0) + w
+    # 100 live records vs PRIOR_MASS=8: the prior's share is ~8/108
+    assert mix["sub_area"] > 0.85
+    # with no live telemetry the prior alone decides — exactly like the
+    # same records would as live history
+    alone = LayoutPolicy(prior_records=prior).choose_layout(
+        "B", _blocks3(), G3)
+    as_live = LayoutPolicy(
+        records=[_rec(_slab(), ts=now) for _ in range(8)]).choose_layout(
+        "B", _blocks3(), G3, now=now)
+    assert (alone.strategy, alone.scheme) == (as_live.strategy,
+                                              as_live.scheme)
+
+
+def test_prior_missing_or_corrupt_degrades(tmp_path):
+    pol = LayoutPolicy().with_prior(str(tmp_path / "nope.json"))
+    assert pol.prior_records == []
+    bad = tmp_path / "bad.json"
+    bad.write_text("{broken")
+    assert LayoutPolicy().with_prior(str(bad)).prior_records == []
+    future = tmp_path / "future.json"
+    future.write_text(json.dumps({"version": 999, "records": []}))
+    assert LayoutPolicy().with_prior(str(future)).prior_records == []
+    d = LayoutPolicy().with_prior(None).choose_layout("B", _blocks3(), G3)
+    assert "no usable access history" in d.reason
+
+
+def test_prior_record_json_round_trip():
+    r = _rec(_slab(), source="prior")
+    back = AccessRecord.from_json(json.loads(json.dumps(r.to_json())))
+    assert back.source == "prior"
+    live = _rec(_slab())
+    j = live.to_json()
+    assert "src" not in j                 # live files stay byte-compatible
+    assert AccessRecord.from_json(j).source == "live"
