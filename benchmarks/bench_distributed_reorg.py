@@ -1,0 +1,75 @@
+"""Distributed crash-safe reorganization smoke cell (ISSUE 6).
+
+Times a single-process ``reorganize`` against a 2-worker lease-based fleet
+(``distributed_reorganize``) over byte-identical copies of the same
+source, asserts both produce the correct bytes, and reports the fleet's
+journal bookkeeping (rounds, units) plus the post-commit CRC-32
+verification pass.  The fleet pays real process spawn + journal-transaction
+overhead at this scale — the cell is a correctness/plumbing smoke, not a
+speedup claim.
+"""
+
+from __future__ import annotations
+
+import shutil
+
+import numpy as np
+
+from repro.core import plan_layout
+from repro.core.blocks import Block
+from repro.distributed.reorg import distributed_reorganize
+from repro.io import Dataset, reorganize
+
+from .common import GLOBAL, NPROCS, SMOKE, TmpDir, build_world, emit, timed
+
+#: the fleet needs a concrete per-worker engine ("auto" resolves per-plan
+#: inside one session only), so this cell pins pread regardless of
+#: BENCH_ENGINE
+FLEET_ENGINE = "pread"
+
+
+def run(tmp: TmpDir) -> None:
+    block = (16, 16, 16) if SMOKE else (32, 32, 64)
+    blocks, data = build_world(seed=5, block_shape=block)
+    ref = np.zeros(GLOBAL, np.float32)
+    for b in blocks:
+        ref[b.slices()] = data[b.block_id]
+
+    src = tmp.sub("src")
+    ds = Dataset.create(src, engine=FLEET_ENGINE)
+    ds.write("B", plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
+                              global_shape=GLOBAL), np.float32, data)
+    ds.close()
+    # byte-identical copies: each run decides from (and records stats into)
+    # its own source directory
+    src_single, src_fleet = tmp.sub("src_single"), tmp.sub("src_fleet")
+    shutil.copytree(src, src_single)
+    shutil.copytree(src, src_fleet)
+
+    def single():
+        _, out, _ = reorganize(src_single, tmp.sub("dst_single"), "B",
+                               layout="auto", engine=FLEET_ENGINE)
+        return out
+
+    ds1, t1 = timed(single)
+    arr, _ = ds1.read("B", Block((0, 0, 0), GLOBAL))
+    ds1.close()
+    np.testing.assert_array_equal(arr, ref)
+    emit("dreorg/single_process", t1 * 1e6)
+
+    def fleet():
+        return distributed_reorganize(src_fleet, tmp.sub("dst_fleet"), "B",
+                                      num_workers=2, units_per_worker=2,
+                                      engine=FLEET_ENGINE)
+
+    (ds2, stats), t2 = timed(fleet)
+    arr, _ = ds2.read("B", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+    emit("dreorg/fleet_2workers", t2 * 1e6,
+         f"rounds={stats['rounds']};units={stats['units']};"
+         f"chunks={stats['num_chunks']}")
+
+    (checked, bad), t3 = timed(ds2.verify_checksums)
+    ds2.close()
+    assert bad == [] and checked == stats["num_chunks"]
+    emit("dreorg/verify_crc", t3 * 1e6, f"checked={checked}")

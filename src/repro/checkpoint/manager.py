@@ -48,7 +48,8 @@ import numpy as np
 
 from ..core.blocks import Block
 from ..core.layouts import plan_layout
-from ..core.policy import AccessLog, AccessRecord, LayoutPolicy
+from ..core.policy import (ACCESS_PRIOR_NAME, AccessLog, AccessRecord,
+                           LayoutPolicy)
 from ..io.engine import IOEngine
 from ..io.reader import Dataset, ReadStats
 from .blocks_map import blocks_from_sharding, flatten_pytree, unflatten_like
@@ -83,7 +84,7 @@ class CheckpointManager:
                  keep: int = 3, reorg_scheme=None, align=None,
                  engine: str | IOEngine = "memmap",
                  policy: LayoutPolicy | None = None,
-                 prior: str | None = None):
+                 prior: str | None = None, auto_prior: bool = True):
         self.root = root
         self.strategy = strategy
         self.devices_per_host = devices_per_host
@@ -104,16 +105,51 @@ class CheckpointManager:
         #: prior file) whose restore history seeds ``strategy="auto"``
         #: saves until this root has restore telemetry of its own
         self.prior = prior
+        #: with no explicit ``prior``, scan sibling run roots (directories
+        #: next to this one) for the freshest exported ``access_prior.json``
+        #: — run N+1 inherits run N's restore patterns without any plumbing
+        self.auto_prior = auto_prior
         self._policy = policy
+
+    def discover_prior(self) -> str | None:
+        """Auto-discover a cross-run prior: the newest
+        ``access_prior.json`` exported by any *sibling* run root (a
+        directory next to this manager's root — the layout run launchers
+        produce: ``runs/run_001``, ``runs/run_002``, ...).  The manager's
+        own root is excluded; no sibling prior means ``None`` (fresh cold
+        start).  An explicit ``prior=`` always wins over discovery."""
+        own = os.path.abspath(self.root)
+        parent = os.path.dirname(own)
+        best = None
+        try:
+            entries = os.listdir(parent)
+        except OSError:
+            return None
+        for e in entries:
+            d = os.path.join(parent, e)
+            if os.path.abspath(d) == own or not os.path.isdir(d):
+                continue
+            p = os.path.join(d, ACCESS_PRIOR_NAME)
+            try:
+                mt = os.path.getmtime(p)
+            except OSError:
+                continue
+            if best is None or mt > best[0]:
+                best = (mt, p)
+        return best[1] if best else None
 
     def layout_policy(self, prior: str | None = None) -> LayoutPolicy:
         """The policy ``strategy="auto"`` consults — over this manager's
         own restore-pattern log unless one was injected, seeded with
-        ``prior`` (or the manager-level one) when given."""
+        ``prior`` (or the manager-level one, or the freshest sibling-run
+        prior :meth:`discover_prior` finds) when available."""
         if self._policy is None:
             self._policy = LayoutPolicy(log=self.access_log)
-            if self.prior is not None:
-                self._policy = self._policy.with_prior(self.prior)
+            src = self.prior
+            if src is None and self.auto_prior:
+                src = self.discover_prior()
+            if src is not None:
+                self._policy = self._policy.with_prior(src)
         pol = self._policy
         if prior is not None:
             pol = pol.with_prior(prior)

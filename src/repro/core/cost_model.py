@@ -62,6 +62,9 @@ __all__ = ["StagingTimings", "PAPER_TIMINGS", "posthoc_utilization",
            # lifecycle scoring (ISSUE 5)
            "REORG_CHUNK_OVERHEAD_S", "predict_lifecycle_seconds",
            "predict_best_seconds_batch",
+           # learned reorg overhead (ISSUE 6)
+           "REORG_STATS_NAME", "ReorgStats", "observe_reorg_overhead",
+           "load_reorg_stats", "load_reorg_overhead",
            # recalibrate-on-drift (ISSUE 4)
            "CalibrationDrift", "invalidate_calibration"]
 
@@ -528,8 +531,105 @@ def predict_best_seconds(cal: EngineCalibration, *, groups: int, runs: int,
 #: one even when both move the same bytes — the paper's write-side cost
 #: that read-only scoring ignored.  The bytes- and seek-dependent parts of
 #: a chunk's build are priced by the gather/write estimates; this covers
-#: only the fixed per-call dispatch.
+#: only the fixed per-call dispatch.  This constant is the *cold-start
+#: default*: every ``reorganize`` measures its actual per-chunk dispatch
+#: cost and folds it into a persisted :class:`ReorgStats` EMA
+#: (:func:`observe_reorg_overhead`), which the layout policy prefers over
+#: the constant once observations exist.
 REORG_CHUNK_OVERHEAD_S = 5e-5
+
+#: file persisted next to index.json / calibration.json holding the
+#: measured per-chunk reorganization overhead
+REORG_STATS_NAME = "reorg_stats.json"
+REORG_STATS_VERSION = 1
+#: EMA weight of each new reorganize observation (recent builds dominate,
+#: one outlier cannot swing the estimate)
+REORG_STATS_ALPHA = 0.3
+
+
+@dataclasses.dataclass(frozen=True)
+class ReorgStats:
+    """Measured per-chunk reorganization overhead for one dataset
+    directory, learned across ``reorganize`` runs.
+
+    ``chunk_overhead_s`` is an EMA over observed runs of the *fixed*
+    per-target-chunk cost (probe + plan + Python dispatch + buffer
+    assembly), i.e. exactly what :data:`REORG_CHUNK_OVERHEAD_S` hard-coded
+    before it was learned.  Persisted with the same atomic-replace
+    discipline as ``calibration.json``; corrupt or absent files degrade to
+    "nothing learned yet".
+    """
+
+    chunk_overhead_s: float
+    num_observations: int = 0
+    updated_at: float = 0.0
+    version: int = REORG_STATS_VERSION
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "ReorgStats":
+        fields = {f.name for f in dataclasses.fields(ReorgStats)}
+        return ReorgStats(**{k: v for k, v in d.items() if k in fields})
+
+
+def load_reorg_stats(dirpath: str) -> ReorgStats | None:
+    """The directory's persisted reorg overhead stats; ``None`` when
+    missing, unparseable, version-mismatched, or non-positive."""
+    path = os.path.join(dirpath, REORG_STATS_NAME)
+    try:
+        with open(path) as f:
+            st = ReorgStats.from_json(json.load(f))
+    except (OSError, ValueError, TypeError, KeyError):
+        return None
+    if st.version != REORG_STATS_VERSION or not st.chunk_overhead_s > 0 \
+            or st.num_observations < 1:
+        return None
+    return st
+
+
+def load_reorg_overhead(dirpath: str) -> float | None:
+    """The learned per-chunk overhead for ``dirpath``, or ``None`` when no
+    reorganize has been measured there yet (callers fall back to
+    :data:`REORG_CHUNK_OVERHEAD_S`)."""
+    st = load_reorg_stats(dirpath)
+    return st.chunk_overhead_s if st is not None else None
+
+
+def observe_reorg_overhead(dirpath: str, overhead_s: float,
+                           num_chunks: int = 1) -> ReorgStats | None:
+    """Fold one measured reorganize's per-chunk overhead into the
+    directory's persisted EMA (atomic replace; best-effort — read-only
+    media degrade to no learning, never an error).  ``overhead_s`` is the
+    measured fixed cost *per target chunk*; ``num_chunks`` records how many
+    chunks backed the observation (observations from bigger builds are not
+    weighted extra — the EMA already favors recency)."""
+    if not (overhead_s > 0) or num_chunks < 1:
+        return None
+    prev = load_reorg_stats(dirpath)
+    if prev is None:
+        ema = float(overhead_s)
+        n = 1
+    else:
+        ema = (REORG_STATS_ALPHA * float(overhead_s)
+               + (1.0 - REORG_STATS_ALPHA) * prev.chunk_overhead_s)
+        n = prev.num_observations + 1
+    st = ReorgStats(chunk_overhead_s=ema, num_observations=n,
+                    updated_at=time.time())
+    tmp = os.path.join(dirpath, f"{REORG_STATS_NAME}.tmp.{os.getpid()}."
+                                f"{next(_probe_counter)}")
+    try:
+        with open(tmp, "w") as f:
+            json.dump(st.to_json(), f)
+        os.replace(tmp, os.path.join(dirpath, REORG_STATS_NAME))
+    except OSError:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        return None
+    return st
 
 
 def predict_best_seconds_batch(cal: EngineCalibration, *,
@@ -566,10 +666,12 @@ def predict_lifecycle_seconds(cal: EngineCalibration, *,
                               write: dict, reads: float,
                               expected_reads: float = 1.0,
                               num_chunks: int = 0,
-                              gather: float = 0.0) -> float:
+                              gather: float = 0.0,
+                              chunk_overhead_s: float | None = None
+                              ) -> float:
     """Predicted wall seconds of a candidate layout's whole I/O lifecycle:
 
-    ``gather + write_cost + num_chunks * REORG_CHUNK_OVERHEAD_S
+    ``gather + write_cost + num_chunks * chunk_overhead
     + expected_reads * reads``
 
     ``write`` is a plan-shape dict (``groups``/``runs``/``bytes_moved``/
@@ -579,9 +681,14 @@ def predict_lifecycle_seconds(cal: EngineCalibration, *,
     chunk regions out of the *current* layout (zero for staged writes,
     where the data arrives in memory).  ``expected_reads`` is how many
     future mix replays the one-time build cost amortizes over.
+    ``chunk_overhead_s`` is the per-target-chunk dispatch cost — pass the
+    dataset's *learned* value (:func:`load_reorg_overhead`) when one
+    exists; ``None`` falls back to :data:`REORG_CHUNK_OVERHEAD_S`.
     """
+    if chunk_overhead_s is None:
+        chunk_overhead_s = REORG_CHUNK_OVERHEAD_S
     w = predict_best_seconds(cal, direction="write", **write)
-    return (gather + w + max(0, num_chunks) * REORG_CHUNK_OVERHEAD_S
+    return (gather + w + max(0, num_chunks) * chunk_overhead_s
             + max(0.0, expected_reads) * reads)
 
 

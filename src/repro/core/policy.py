@@ -67,7 +67,7 @@ import numpy as np
 
 from .blocks import Block, regular_decomposition
 from .cost_model import (EngineCalibration, FALLBACK_CALIBRATION,
-                         load_calibration, predict_best_seconds,
+                         load_calibration, load_reorg_overhead,
                          predict_best_seconds_batch,
                          predict_lifecycle_seconds)
 from .layouts import LayoutPlan, default_reorg_scheme, plan_layout
@@ -689,7 +689,8 @@ class LayoutPolicy:
                  prior_records: Sequence[AccessRecord] | None = None,
                  include_write_cost: bool = True,
                  expected_reads: float | None = None,
-                 half_life_s: float = ACCESS_RECENCY_HALF_LIFE_S):
+                 half_life_s: float = ACCESS_RECENCY_HALF_LIFE_S,
+                 chunk_overhead_s: float | None = None):
         self.log = log
         self._records = list(records) if records is not None else None
         self.calibration = calibration or FALLBACK_CALIBRATION
@@ -698,6 +699,10 @@ class LayoutPolicy:
         self.include_write_cost = include_write_cost
         self.expected_reads = expected_reads
         self.half_life_s = half_life_s
+        #: learned per-chunk metadata/bookkeeping cost charged by lifecycle
+        #: scoring; ``None`` falls back to the static
+        #: :data:`~repro.core.cost_model.REORG_CHUNK_OVERHEAD_S`
+        self.chunk_overhead_s = chunk_overhead_s
 
     @classmethod
     def for_dataset(cls, dirpath: str,
@@ -705,7 +710,10 @@ class LayoutPolicy:
                     target_chunks: int = 64, **kwargs) -> "LayoutPolicy":
         """Policy over ``dirpath``'s own access log, predicting with its
         persisted calibration when one is fresh (no probe is triggered —
-        policy evaluation stays I/O-free)."""
+        policy evaluation stays I/O-free) and the per-chunk overhead
+        *measured* by previous ``reorganize`` runs over this dataset
+        (``reorg_stats.json``) when one exists."""
+        kwargs.setdefault("chunk_overhead_s", load_reorg_overhead(dirpath))
         return cls(log=AccessLog(dirpath),
                    calibration=calibration or load_calibration(dirpath),
                    target_chunks=target_chunks, **kwargs)
@@ -724,7 +732,8 @@ class LayoutPolicy:
                             prior_records=prior,
                             include_write_cost=self.include_write_cost,
                             expected_reads=self.expected_reads,
-                            half_life_s=self.half_life_s)
+                            half_life_s=self.half_life_s,
+                            chunk_overhead_s=self.chunk_overhead_s)
 
     # -- history -------------------------------------------------------------
     def records(self) -> list:
@@ -941,21 +950,36 @@ class LayoutPolicy:
             sums = np.add.reduceat(per_chunk, bounds[:-1])
             gather_for = {c[0]: float(s) for c, s in zip(candidates, sums)}
 
+        # read term: estimate every (candidate, region) plan shape, then
+        # price the whole matrix through ONE vectorized cost-model pass —
+        # the per-pair engine sweep (the expensive Python part of scoring)
+        # runs once over len(candidates) * len(mix) rows instead of once
+        # per pair; the batch pricer is element-exact vs the scalar one,
+        # so decisions are bit-identical to the per-pair loop
+        ests = [estimate_read_shape(los, his, region, itemsize,
+                                    subfiles=subf,
+                                    offsets=append_extent_offsets(
+                                        (his - los).prod(axis=1) * itemsize,
+                                        subf, align=align))
+                for _, _, _, los, his, subf, _ in candidates
+                for _weight, region, _cls in mix]
+        prices = predict_best_seconds_batch(
+            cal,
+            groups=np.asarray([e.groups for e in ests], dtype=np.int64),
+            runs=np.asarray([e.runs for e in ests], dtype=np.int64),
+            bytes_moved=np.asarray([e.bytes_needed for e in ests],
+                                   dtype=np.int64),
+            span_bytes=np.asarray([e.span_bytes for e in ests],
+                                  dtype=np.int64))
+
         scores: dict = {}
         read_scores: dict = {}
         write_scores: dict = {}
-        for name, _, _, los, his, subf, _ in candidates:
-            nbytes = (his - los).prod(axis=1) * itemsize
-            # hypothetical fresh-append placement of this candidate: the
-            # read estimates coalesce exactly like the planner would on the
-            # materialized dataset
-            offs = append_extent_offsets(nbytes, subf, align=align)
+        n_mix = len(mix)
+        for ci, (name, _, _, los, his, subf, _) in enumerate(candidates):
             t_read = 0.0
-            for weight, region, _cls in mix:
-                est = estimate_read_shape(los, his, region, itemsize,
-                                          subfiles=subf, offsets=offs)
-                t_read += weight * predict_best_seconds(
-                    cal, **est.shape_kwargs())
+            for j, (weight, _region, _cls) in enumerate(mix):
+                t_read += weight * float(prices[ci * n_mix + j])
             read_scores[name] = t_read
             if include_write_cost:
                 west = estimate_write_shape(los, his, itemsize,
@@ -963,7 +987,8 @@ class LayoutPolicy:
                 total = predict_lifecycle_seconds(
                     cal, write=west.shape_kwargs(), reads=t_read,
                     expected_reads=expected_reads, num_chunks=len(los),
-                    gather=gather_for.get(name, 0.0))
+                    gather=gather_for.get(name, 0.0),
+                    chunk_overhead_s=self.chunk_overhead_s)
                 write_scores[name] = total - expected_reads * t_read
                 scores[name] = total
             else:

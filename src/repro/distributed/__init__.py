@@ -1,7 +1,32 @@
-from .sharding import (DEFAULT_RULES, FSDP_RULES, ShardingCtx, ShardingRules,
-                       current_ctx, logical_spec, named_sharding, shard,
-                       use_sharding)
+"""Distributed-runtime helpers: sharding rules, fault tolerance, and the
+crash-safe distributed reorganization fleet.
 
-__all__ = ["DEFAULT_RULES", "FSDP_RULES", "ShardingCtx", "ShardingRules",
-           "current_ctx", "logical_spec", "named_sharding", "shard",
-           "use_sharding"]
+Package attributes load lazily (PEP 562): :mod:`repro.distributed.sharding`
+pulls in jax, but the fault-tolerance primitives and the reorg worker path
+are pure stdlib+numpy — reorg worker processes (and jax-free environments)
+import them without paying for, or depending on, the accelerator stack.
+Direct submodule imports (``from repro.distributed import sharding``) are
+unaffected.
+"""
+
+_SHARDING_NAMES = ("DEFAULT_RULES", "FSDP_RULES", "ShardingCtx",
+                   "ShardingRules", "current_ctx", "logical_spec",
+                   "named_sharding", "shard", "use_sharding")
+_FAULT_NAMES = ("HeartbeatMonitor", "ElasticPlan", "plan_rescale",
+                "StragglerTracker")
+_REORG_NAMES = ("ReorgWorkerStats", "distributed_reorganize", "worker_main",
+                "with_retry")
+
+__all__ = list(_SHARDING_NAMES + _FAULT_NAMES + _REORG_NAMES)
+
+
+def __getattr__(name):
+    if name in _SHARDING_NAMES:
+        from . import sharding as mod
+    elif name in _FAULT_NAMES:
+        from . import fault_tolerance as mod
+    elif name in _REORG_NAMES:
+        from . import reorg as mod
+    else:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(mod, name)

@@ -1,0 +1,381 @@
+"""Distributed, crash-safe ``reorganize``: a lease-based worker fleet over
+an on-disk job journal (the tentpole of ISSUE 6).
+
+The coordinator (:func:`distributed_reorganize`) makes the layout decision
+once (same policy path as single-process
+:func:`~repro.io.reader.reorganize`), builds the FULL destination
+:class:`~repro.io.planner.WritePlan` — every extent's subfile and byte
+offset preassigned — and journals it (:class:`~repro.io.journal.
+ReorgJournal`) split into worker-claimable units.  Worker *processes*
+(:func:`worker_main`) then lease units, gather each chunk region out of
+the source through the normal plan/engine read path, write their slab via
+:func:`~repro.io.planner.subset_write_plan` (a slice of the one global
+plan, so independent workers produce the byte-identical destination a
+single process would), checksum every buffer and complete the unit.
+
+Failure model:
+
+* **Worker death** (SIGKILL, OOM) — the lease stops renewing and expires;
+  any surviving or restarted worker reclaims the unit and redoes it.
+  Redone writes are idempotent: same bytes at the same preassigned,
+  disjoint offsets.
+* **Transient I/O faults** — every gather and slab write runs under
+  :func:`with_retry` (bounded attempts, exponential backoff).
+* **Fleet shrink** (elastic N -> N-1) — the coordinator's
+  :class:`~repro.distributed.fault_tolerance.HeartbeatMonitor` (seeded
+  from the journal's persisted heartbeats) detects the silent worker and
+  records the :func:`~repro.distributed.fault_tolerance.plan_rescale`
+  decision in the journal's event log; the surviving workers converge on
+  the remaining units without coordinator help.
+* **Coordinator death** — the journal has everything (plan + unit states);
+  re-running :func:`distributed_reorganize` on the same destination adopts
+  it and finishes the same plan instead of re-deciding.
+
+Commit-after-data at the journal level: the destination's ``index.json``
+is written (atomically) only after every unit is done AND every recorded
+checksum re-validates against the bytes on disk.  Until that instant the
+destination directory has no index — readers see the old state or the new
+state, never a torn layout.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from ..core.blocks import Block
+from ..io.engine import SubfileStore, get_engine
+from ..io.format import (ChunkRecord, DatasetIndex, extent_checksum,
+                         subfile_name)
+from ..io.journal import DEFAULT_LEASE_TIMEOUT_S, ReorgJournal
+from ..io.planner import WritePlan, build_write_plan, subset_write_plan
+from ..io.reader import Dataset, choose_reorg_layout
+from .fault_tolerance import plan_rescale
+
+__all__ = ["ReorgWorkerStats", "with_retry", "worker_main",
+           "distributed_reorganize", "validate_journal"]
+
+#: barrier names a worker touches, in the order it reaches them — the kill
+#: matrix SIGKILLs workers parked at each of these
+BARRIERS = ("mid_gather", "pre_renew", "mid_write", "pre_complete")
+
+
+def with_retry(fn, *, attempts: int = 4, backoff_s: float = 0.05,
+               retry_on: tuple = (OSError,), sleep=time.sleep):
+    """Call ``fn()`` with bounded retry + exponential backoff on the
+    exception types in ``retry_on`` (transient I/O faults: EINTR-ish
+    hiccups, NFS blips).  The last failure propagates — a *persistent*
+    fault must kill the worker so its lease expires and another worker
+    inherits the unit; swallowing it would wedge the fleet."""
+    for i in range(max(1, attempts)):
+        try:
+            return fn()
+        except retry_on:
+            if i >= attempts - 1:
+                raise
+            sleep(backoff_s * (2 ** i))
+
+
+class _Barriers:
+    """Crash-point instrumentation for the kill matrix.  With no
+    ``barrier_dir`` every wait is a no-op (production).  Otherwise the
+    first time this worker reaches each named point it writes its pid to
+    ``<dir>/<worker>.<name>.reached`` and parks until ``<dir>/go.<name>``
+    appears — or until the test SIGKILLs it mid-flight.  Per-name release
+    files let a test arm one crash point (withhold its release) while
+    letting workers sail through the others."""
+
+    def __init__(self, worker: str, barrier_dir: str | None,
+                 poll_s: float = 0.01):
+        self.worker = worker
+        self.dir = barrier_dir
+        self.poll_s = poll_s
+        self._hit: set = set()
+
+    def wait(self, name: str) -> None:
+        if self.dir is None or name in self._hit:
+            return
+        self._hit.add(name)
+        marker = os.path.join(self.dir, f"{self.worker}.{name}.reached")
+        with open(marker, "w") as f:
+            f.write(str(os.getpid()))
+        release = os.path.join(self.dir, f"go.{name}")
+        while not os.path.exists(release):
+            time.sleep(self.poll_s)
+
+
+class ReorgWorkerStats(dict):
+    """Per-worker outcome: ``units_done``, ``units_lost`` (lease stolen
+    mid-unit), ``chunks_gathered``."""
+
+
+def worker_main(dst_dir: str, worker_id: str, engine: str = "pread", *,
+                barrier_dir: str | None = None, poll_s: float = 0.02,
+                max_attempts: int = 4, backoff_s: float = 0.05,
+                sleep=time.sleep) -> ReorgWorkerStats:
+    """One reorg worker: claim -> gather -> renew -> write -> checksum ->
+    complete, until the journal has no work left.  Safe to run any number
+    of these concurrently — in separate processes or (tests) threads — and
+    safe to SIGKILL at any instant."""
+    journal = ReorgJournal(dst_dir)
+    spec = journal.spec()
+    plan = journal.plan()
+    var = plan.var
+    src = Dataset.open(spec["src_dir"], engine=engine, telemetry=False)
+    eng = get_engine(engine)
+    store = SubfileStore(dst_dir)
+    bar = _Barriers(worker_id, barrier_dir)
+    stats = ReorgWorkerStats(units_done=0, units_lost=0, chunks_gathered=0)
+    try:
+        while True:
+            unit = journal.claim(worker_id)
+            if unit is None:
+                if journal.done():
+                    break
+                sleep(poll_s)        # live leases elsewhere: wait them out
+                continue
+            rows = np.unique(np.asarray(unit.rows, dtype=np.int64))
+            sub = subset_write_plan(plan, rows)
+            buffers = []
+            for i in range(sub.num_chunks):
+                region = Block(tuple(int(v) for v in sub.chunk_los[i]),
+                               tuple(int(v) for v in sub.chunk_his[i]))
+                arr = with_retry(lambda r=region: src.read(var, r)[0],
+                                 attempts=max_attempts, backoff_s=backoff_s,
+                                 sleep=sleep)
+                buffers.append(np.ascontiguousarray(arr))
+                stats["chunks_gathered"] += 1
+                if i == 0:
+                    bar.wait("mid_gather")
+            bar.wait("pre_renew")
+            if not journal.renew(worker_id, unit.unit_id):
+                stats["units_lost"] += 1
+                continue             # lease stolen: the new holder owns it
+            checksums = {int(rows[i]): extent_checksum(buffers[i])
+                         for i in range(len(rows))}
+            gb = sub.group_bounds
+            for g in range(sub.num_groups):
+                s, e = int(gb[g]), int(gb[g + 1])
+                gsub = subset_write_plan(plan, rows[s:e])
+
+                def write_group(gs=gsub, bs=buffers[s:e]):
+                    for sf, size in gs.file_sizes.items():
+                        store.ensure_size(sf, size)
+                    eng.write_plan(gs, bs, store)
+                with_retry(write_group, attempts=max_attempts,
+                           backoff_s=backoff_s, sleep=sleep)
+                if g == 0:
+                    bar.wait("mid_write")
+            store.fsync()
+            bar.wait("pre_complete")
+            if journal.complete(worker_id, unit.unit_id, checksums):
+                stats["units_done"] += 1
+            else:
+                stats["units_lost"] += 1
+    finally:
+        src.close()
+        store.close()
+    return stats
+
+
+def validate_journal(dst_dir: str, plan: WritePlan,
+                     journal: ReorgJournal) -> list:
+    """Re-read every done unit's extents from the destination subfiles and
+    compare against the journal's recorded CRCs.  Returns the unit ids
+    that fail (missing rows, short reads, checksum mismatch) — the
+    coordinator resets those to pending and runs another round."""
+    bad = []
+    fds: dict = {}
+    try:
+        for unit in journal.units():
+            if unit.state != "done":
+                continue
+            ok = set(unit.checksums) == {int(r) for r in unit.rows}
+            for row, crc in unit.checksums.items():
+                if not ok:
+                    break
+                sf = int(plan.subfiles[row])
+                if sf not in fds:
+                    try:
+                        fds[sf] = os.open(
+                            os.path.join(dst_dir, subfile_name(sf)),
+                            os.O_RDONLY)
+                    except OSError:
+                        ok = False
+                        break
+                buf = os.pread(fds[sf], int(plan.nbytes[row]),
+                               int(plan.file_lo[row]))
+                ok = (len(buf) == int(plan.nbytes[row])
+                      and extent_checksum(buf) == crc)
+            if not ok:
+                bad.append(unit.unit_id)
+    finally:
+        for fd in fds.values():
+            os.close(fd)
+    return bad
+
+
+def _run_fleet(dst_dir: str, workers: list, engine: str,
+               barrier_dir: str | None, journal: ReorgJournal,
+               events: list, timeout_s: float) -> None:
+    """Spawn one fleet of worker processes and babysit it: join them,
+    watch the journal's heartbeat monitor for silently-dead workers, and
+    record the elastic rescale decision for each death."""
+    import multiprocessing as mp
+    ctx = mp.get_context("spawn")
+    procs = {w: ctx.Process(target=worker_main, args=(dst_dir, w, engine),
+                            kwargs={"barrier_dir": barrier_dir}, daemon=True)
+             for w in workers}
+    for p in procs.values():
+        p.start()
+    deadline = time.monotonic() + timeout_s
+    known_dead: set = set()
+    while any(p.is_alive() for p in procs.values()):
+        if time.monotonic() > deadline:
+            for p in procs.values():
+                if p.is_alive():
+                    p.terminate()
+            break
+        time.sleep(0.05)
+        try:
+            mon = journal.monitor()
+        except (OSError, ValueError, KeyError):
+            continue
+        dead = [w for w in mon.dead_hosts()
+                if w not in known_dead and not procs.get(w, _DEAD).is_alive()]
+        for w in dead:
+            known_dead.add(w)
+            alive = [h for h in procs
+                     if h not in known_dead and procs[h].is_alive()]
+            try:
+                desc = plan_rescale((len(workers), 1), len(alive),
+                                    alive).describe()
+            except ValueError:
+                desc = "no surviving workers"
+            ev = {"event": "worker_dead", "worker": w, "rescale": desc}
+            events.append(ev)
+            try:
+                journal.record_event(ev)
+            except OSError:
+                pass
+    for p in procs.values():
+        p.join(timeout=10.0)
+
+
+class _Dead:
+    @staticmethod
+    def is_alive():
+        return False
+
+
+_DEAD = _Dead()
+
+
+def distributed_reorganize(src_dir: str, dst_dir: str, var: str,
+                           layout="auto", *, num_workers: int = 2,
+                           units_per_worker: int = 2,
+                           engine: str = "pread",
+                           align: int | None = None,
+                           policy=None, prior: str | None = None,
+                           expected_reads: float | None = None,
+                           lease_timeout_s: float = DEFAULT_LEASE_TIMEOUT_S,
+                           max_rounds: int = 5,
+                           round_timeout_s: float = 120.0,
+                           barrier_dir: str | None = None) -> tuple:
+    """Crash-safe multi-process reorganization of ``var`` from ``src_dir``
+    into ``dst_dir``.
+
+    Decides the target layout exactly like single-process
+    :func:`~repro.io.reader.reorganize` (``layout="auto"`` routes through
+    the source's :class:`~repro.core.policy.LayoutPolicy`; a
+    :class:`~repro.core.layouts.LayoutPlan` pins it), journals the full
+    write plan split into ``num_workers * units_per_worker`` lease-based
+    units, and runs fleets of ``num_workers`` worker processes until every
+    unit is done and validates, then commits ``index.json`` atomically and
+    deletes the journal.  If ``dst_dir`` already holds a journal (a
+    previous coordinator died), it is adopted: the SAME plan is finished,
+    not re-decided, so recovery converges bit-identically.
+
+    Returns ``(Dataset, stats)`` — the open destination session and a dict
+    with ``rounds``, ``units``, ``events`` (worker deaths + rescale
+    decisions) and ``validation_failures``.
+    """
+    if isinstance(engine, str) and engine == "auto":
+        raise ValueError("distributed reorganization needs a concrete "
+                         "engine per worker; 'auto' resolves per-plan "
+                         "inside a single session only")
+    journal = ReorgJournal(dst_dir)
+    decision = None
+    if journal.exists():
+        plan = journal.plan()
+    else:
+        if isinstance(layout, str) and layout != "auto":
+            raise ValueError(f"layout must be a LayoutPlan or 'auto', "
+                             f"got {layout!r}")
+        src = Dataset.open(src_dir, engine=engine, telemetry=False)
+        if isinstance(layout, str):
+            decision = choose_reorg_layout(src, var, align=align,
+                                           policy=policy, prior=prior,
+                                           expected_reads=expected_reads)
+            layout = decision.layout
+        dtype = src.index.var_dtype(var)
+        src.close()
+        plan = build_write_plan(layout, var, dtype, align=align)
+        journal = ReorgJournal.create(
+            dst_dir, plan, src_dir,
+            num_units=max(1, num_workers * units_per_worker),
+            lease_timeout_s=lease_timeout_s,
+            attrs={"var": var, "engine": engine,
+                   "policy": decision.to_json() if decision else None})
+
+    events: list = []
+    rounds = 0
+    validation_failures = 0
+    while True:
+        if journal.done():
+            bad = validate_journal(dst_dir, plan, journal)
+            if not bad:
+                break
+            validation_failures += len(bad)
+            journal.reset_units(bad)
+        if rounds >= max_rounds:
+            raise RuntimeError(
+                f"distributed reorganize did not converge after "
+                f"{rounds} rounds; journal left in {dst_dir} for resume")
+        rounds += 1
+        workers = [f"w{i}" for i in range(num_workers)]
+        _run_fleet(dst_dir, workers, engine, barrier_dir, journal, events,
+                   round_timeout_s)
+        barrier_dir = None       # crash points apply to the first fleet only
+
+    # ---- commit: publish the index only now, in one atomic replace -------
+    attrs = journal.load().get("attrs", {})
+    units = journal.units()
+    crc_by_row = {}
+    for unit in units:
+        crc_by_row.update(unit.checksums)
+    idx = DatasetIndex()
+    idx.add_variable(var, plan.layout.global_shape, plan.dtype,
+                     plan.layout.strategy)
+    for row in np.argsort(plan.chunk_ids):       # original layout order
+        idx.chunks.append(ChunkRecord(
+            var=var, lo=tuple(int(v) for v in plan.chunk_los[row]),
+            hi=tuple(int(v) for v in plan.chunk_his[row]),
+            subfile=int(plan.subfiles[row]),
+            offset=int(plan.file_lo[row]),
+            nbytes=int(plan.nbytes[row]),
+            checksum=crc_by_row.get(int(row))))
+    idx.num_subfiles = len(plan.file_sizes)
+    if attrs.get("policy"):
+        idx.attrs.setdefault("policy", {})[var] = attrs["policy"]
+    idx.attrs["distributed_reorg"] = {
+        "workers": num_workers, "rounds": rounds, "units": len(units),
+        "events": [dict(e) for e in events]}
+    idx.save(dst_dir)
+    journal.delete()
+    ds = Dataset.open(dst_dir, engine=engine)
+    return ds, {"rounds": rounds, "units": len(units), "events": events,
+                "validation_failures": validation_failures,
+                "num_chunks": plan.num_chunks}

@@ -17,28 +17,34 @@ from .aggregation import gather_to_nodes
 from .engine import (ENGINES, IOEngine, MemmapEngine, OverlappedPreadEngine,
                      PreadEngine, SubfileStore, WriteStats, assemble_chunk,
                      get_engine, validate_engine_spec)
-from .format import ChunkRecord, DatasetIndex, GPFS_BLOCK, VarRows
+from .format import (ChunkRecord, DatasetIndex, GPFS_BLOCK, VarRows,
+                     extent_checksum)
+from .journal import (REORG_JOURNAL_NAME, ReorgJournal, WorkUnit,
+                      partition_unit_rows)
 from .patterns import (drive_pattern_mix, measure_pattern_mix, normalize_mix,
                        resolve_pattern)
 from .planner import (ReadPlan, WritePlan, build_read_plan, build_write_plan,
-                      linear_candidates)
-from .reader import Dataset, ReadStats, reorganize
+                      linear_candidates, subset_write_plan)
+from .reader import Dataset, ReadStats, choose_reorg_layout, reorganize
 from .spatial import SpatialChunkIndex
 from .staging import StageResult, StagingExecutor
 
 __all__ = [
     # container + metadata
     "ChunkRecord", "DatasetIndex", "GPFS_BLOCK", "VarRows",
-    "SpatialChunkIndex",
+    "SpatialChunkIndex", "extent_checksum",
     # plans
     "ReadPlan", "WritePlan", "build_read_plan", "build_write_plan",
-    "linear_candidates",
+    "linear_candidates", "subset_write_plan",
+    # distributed reorg journal
+    "REORG_JOURNAL_NAME", "ReorgJournal", "WorkUnit", "partition_unit_rows",
     # engines
     "ENGINES", "IOEngine", "MemmapEngine", "PreadEngine",
     "OverlappedPreadEngine", "SubfileStore", "get_engine",
     "validate_engine_spec",
     # session + execution
     "Dataset", "ReadStats", "WriteStats", "assemble_chunk", "reorganize",
+    "choose_reorg_layout",
     "StageResult", "StagingExecutor", "gather_to_nodes",
     # shared pattern helpers
     "resolve_pattern", "normalize_mix", "drive_pattern_mix",

@@ -6,7 +6,11 @@ A *dataset* is a directory holding:
   * ``index.json`` — the metadata the paper notes ADIOS2 must keep: for every
     chunk, its global cuboid ``[lo, hi)``, its subfile, byte offset and size,
     plus (format version 2) a per-variable spatial chunk index so readers
-    locate intersecting chunks without scanning the whole record list.
+    locate intersecting chunks without scanning the whole record list, plus
+    (format version 3) an optional per-chunk CRC-32 checksum of the stored
+    extent bytes, so recovery paths can *validate* a partially-built
+    destination instead of trusting it.  Version-2 files (no checksums)
+    load transparently; checksums are simply absent.
 
 Optional 16 MiB extent alignment mirrors GPFS's internal block size on Summit
 (§3.2: "GPFS internally splits big data chunks into 16MB blocks").
@@ -17,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import zlib
 from typing import Sequence
 
 import numpy as np
@@ -25,11 +30,22 @@ from ..core.blocks import Block
 from .spatial import SpatialChunkIndex
 
 __all__ = ["ChunkRecord", "DatasetIndex", "VarRows", "GPFS_BLOCK",
-           "subfile_name", "align_up"]
+           "subfile_name", "align_up", "extent_checksum"]
 
 GPFS_BLOCK = 16 * 1024 * 1024
 INDEX_NAME = "index.json"
-INDEX_VERSION = 2
+INDEX_VERSION = 3
+#: index versions this reader understands (v1: no spatial payload; v2: no
+#: checksums; v3: optional per-chunk CRC-32 of each stored extent) — all
+#: older versions load transparently, unknown *newer* versions fail loudly
+SUPPORTED_INDEX_VERSIONS = (1, 2, 3)
+
+
+def extent_checksum(buf) -> int:
+    """CRC-32 of one stored extent's bytes (the format-v3 per-chunk
+    checksum).  Accepts any buffer-protocol object — engines and recovery
+    paths feed raw ``uint8`` views of the extent."""
+    return zlib.crc32(memoryview(buf).cast("B")) & 0xFFFFFFFF
 
 
 def subfile_name(k: int) -> str:
@@ -50,23 +66,29 @@ class ChunkRecord:
     subfile: int
     offset: int
     nbytes: int
+    #: CRC-32 of the stored extent bytes (format v3); ``None`` for records
+    #: loaded from v2 indexes or written without checksumming
+    checksum: int | None = None
 
     @property
     def block(self) -> Block:
         return Block(tuple(self.lo), tuple(self.hi))
 
     def to_json(self) -> dict:
-        return {"var": self.var,
-                "lo": [int(v) for v in self.lo],
-                "hi": [int(v) for v in self.hi],
-                "subfile": int(self.subfile), "offset": int(self.offset),
-                "nbytes": int(self.nbytes)}
+        d = {"var": self.var,
+             "lo": [int(v) for v in self.lo],
+             "hi": [int(v) for v in self.hi],
+             "subfile": int(self.subfile), "offset": int(self.offset),
+             "nbytes": int(self.nbytes)}
+        if self.checksum is not None:
+            d["crc"] = int(self.checksum)
+        return d
 
     @staticmethod
     def from_json(d: dict) -> "ChunkRecord":
         return ChunkRecord(var=d["var"], lo=tuple(d["lo"]), hi=tuple(d["hi"]),
                            subfile=d["subfile"], offset=d["offset"],
-                           nbytes=d["nbytes"])
+                           nbytes=d["nbytes"], checksum=d.get("crc"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,6 +227,11 @@ class DatasetIndex:
     def load(dirpath: str) -> "DatasetIndex":
         with open(os.path.join(dirpath, INDEX_NAME)) as f:
             payload = json.load(f)
+        version = payload.get("version", 1)
+        if version not in SUPPORTED_INDEX_VERSIONS:
+            raise ValueError(
+                f"unsupported index version {version!r} in {dirpath} "
+                f"(this reader understands {SUPPORTED_INDEX_VERSIONS})")
         idx = DatasetIndex(variables=payload["variables"],
                            num_subfiles=payload["num_subfiles"],
                            attrs=payload.get("attrs", {}),

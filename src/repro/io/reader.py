@@ -64,13 +64,14 @@ from ..core.cost_model import (CalibrationDrift, EngineCalibration,
 from ..core.layouts import ChunkPlan, LayoutPlan
 from ..core.policy import AccessLog, AccessRecord, LayoutPolicy
 from ..core.read_patterns import best_decompositions, decompose_region
+from ..core.cost_model import observe_reorg_overhead
 from .engine import (IOEngine, SubfileStore, WriteStats, assemble_chunk,
                      get_engine)
-from .format import ChunkRecord, DatasetIndex
+from .format import ChunkRecord, DatasetIndex, extent_checksum
 from .patterns import resolve_pattern
 from .planner import ReadPlan, WritePlan, build_read_plan, build_write_plan
 
-__all__ = ["ReadStats", "Dataset", "reorganize"]
+__all__ = ["ReadStats", "Dataset", "reorganize", "choose_reorg_layout"]
 
 
 @dataclasses.dataclass
@@ -321,7 +322,9 @@ class Dataset:
                     hi=tuple(int(v) for v in plan.chunk_his[row]),
                     subfile=int(plan.subfiles[row]),
                     offset=int(plan.file_lo[row]),
-                    nbytes=int(plan.nbytes[row])))
+                    nbytes=int(plan.nbytes[row]),
+                    checksum=extent_checksum(
+                        np.ascontiguousarray(buffers[row]))))
             cursor = self._cursor_dict()
             for sf, end in plan.file_sizes.items():   # plans built directly
                 if end > cursor.get(sf, 0):
@@ -483,6 +486,53 @@ class Dataset:
         self._record_access(var, region, best[1])
         return best
 
+    # -- integrity -----------------------------------------------------------
+    def verify_checksums(self, var: str | None = None) -> tuple:
+        """Re-read every stored extent that carries a format-v3 CRC and
+        validate it.  Returns ``(checked, bad)`` — the number of records
+        validated and the list of record positions (rows into
+        ``index.chunks``) whose stored bytes no longer match.  Records
+        without a checksum (v2 indexes, pre-v3 writers) are skipped, so a
+        mixed-history dataset verifies what it can."""
+        checked = 0
+        bad = []
+        for i, rec in enumerate(self.index.chunks):
+            if rec.checksum is None or (var is not None and rec.var != var):
+                continue
+            fd = self._store.fd(rec.subfile)
+            buf = os.pread(fd, rec.nbytes, rec.offset)
+            checked += 1
+            if len(buf) != rec.nbytes or extent_checksum(buf) != rec.checksum:
+                bad.append(i)
+        return checked, bad
+
+
+def choose_reorg_layout(src: Dataset, var: str, *,
+                        align: int | None = None,
+                        policy: LayoutPolicy | None = None,
+                        prior: str | None = None,
+                        expected_reads: float | None = None):
+    """The ``layout="auto"`` decision both :func:`reorganize` and
+    :func:`repro.distributed.reorg.distributed_reorganize` make: ask the
+    source dataset's :class:`~repro.core.policy.LayoutPolicy` (its access
+    log + calibration + learned reorg overhead) which target layout the
+    observed pattern mix favors, charging each candidate the cost of
+    gathering out of the source's *current* extents.  Returns the
+    :class:`~repro.core.policy.PolicyDecision`."""
+    pol = policy if policy is not None else \
+        LayoutPolicy.for_dataset(src.dirpath)
+    if prior is not None:
+        pol = pol.with_prior(prior)
+    rows = src.index.var_rows(var)
+    blocks = [Block(tuple(int(v) for v in rows.los[i]),
+                    tuple(int(v) for v in rows.his[i]),
+                    owner=int(rows.subfiles[i]), block_id=i)
+              for i in range(rows.n)]
+    return pol.choose_layout(var, blocks, src.index.var_shape(var),
+                             num_stagers=max(1, src.index.num_subfiles),
+                             align=align, current_extents=rows,
+                             expected_reads=expected_reads)
+
 
 def reorganize(src_dir: str, dst_dir: str, var: str,
                layout: LayoutPlan | str = "auto", *,
@@ -522,26 +572,17 @@ def reorganize(src_dir: str, dst_dir: str, var: str,
     src = Dataset.open(src_dir, engine=engine, telemetry=False)
     decision = None
     if isinstance(layout, str):
-        pol = policy if policy is not None else \
-            LayoutPolicy.for_dataset(src_dir)
-        if prior is not None:
-            pol = pol.with_prior(prior)
-        rows = src.index.var_rows(var)
-        blocks = [Block(tuple(int(v) for v in rows.los[i]),
-                        tuple(int(v) for v in rows.his[i]),
-                        owner=int(rows.subfiles[i]), block_id=i)
-                  for i in range(rows.n)]
-        decision = pol.choose_layout(var, blocks, src.index.var_shape(var),
-                                     num_stagers=max(
-                                         1, src.index.num_subfiles),
-                                     align=align, current_extents=rows,
-                                     expected_reads=expected_reads)
+        decision = choose_reorg_layout(src, var, align=align, policy=policy,
+                                       prior=prior,
+                                       expected_reads=expected_reads)
         layout = decision.layout
     t0 = time.perf_counter()
     data = {}
     synth = []
+    engine_seconds = 0.0
     for i, cp in enumerate(layout.chunks):
-        arr, _ = src.read(var, cp.chunk)
+        arr, st = src.read(var, cp.chunk)
+        engine_seconds += st.seconds - st.probe_seconds - st.plan_seconds
         synth.append(Block(cp.chunk.lo, cp.chunk.hi, owner=cp.writer,
                            block_id=i))
         data[i] = arr
@@ -563,4 +604,15 @@ def reorganize(src_dir: str, dst_dir: str, var: str,
     if decision is not None:
         dst.index.attrs.setdefault("policy", {})[var] = decision.to_json()
         dst.flush()
+    # learned per-chunk reorg overhead: everything the gather loop paid on
+    # top of raw engine time (probe, plan, python bookkeeping) per chunk,
+    # folded into the source's reorg_stats.json so the NEXT policy decision
+    # over it charges a measured constant instead of the static default.
+    # Recorded only after the destination committed — a crashed run leaves
+    # the source directory byte-identical.
+    if len(layout.chunks):
+        observe_reorg_overhead(
+            src_dir,
+            max(0.0, read_seconds - engine_seconds) / len(layout.chunks),
+            num_chunks=len(layout.chunks))
     return read_seconds, dst, wstats

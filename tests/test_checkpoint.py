@@ -162,3 +162,51 @@ def test_flatten_unflatten_roundtrip():
     back = unflatten_like(t, flat)
     for a, b in zip(flatten_pytree(back).values(), flat.values()):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- cross-run prior auto-discovery (ISSUE 6 satellite) ----------------------
+
+def _run_with_history(root):
+    """A run root with restore telemetry and an exported prior."""
+    import os
+    mgr = CheckpointManager(root)
+    tree = _fake_tree()
+    mgr.save(1, tree, block_map=_block_map())
+    mgr.restore(1, template=tree)
+    p = mgr.export_prior()
+    assert os.path.exists(p)
+    return p
+
+
+def test_discover_prior_finds_newest_sibling(tmp_path):
+    import os
+    runs = tmp_path / "runs"
+    p1 = _run_with_history(str(runs / "run_001"))
+    p2 = _run_with_history(str(runs / "run_002"))
+    os.utime(p1, (1_000_000, 1_000_000))    # run_002's prior is fresher
+    m3 = CheckpointManager(str(runs / "run_003"))
+    assert m3.discover_prior() == p2
+    # discovery feeds layout_policy when no explicit prior was given
+    assert m3.layout_policy() is not None
+
+
+def test_discover_prior_excludes_own_root_and_handles_none(tmp_path):
+    runs = tmp_path / "runs"
+    m1 = CheckpointManager(str(runs / "run_001"))
+    tree = _fake_tree()
+    m1.save(1, tree, block_map=_block_map())
+    m1.restore(1, template=tree)
+    m1.export_prior()                       # only OUR root has a prior
+    assert m1.discover_prior() is None      # own root is not a sibling
+    lone = CheckpointManager(str(tmp_path / "elsewhere" / "run_x"))
+    assert lone.discover_prior() is None    # cold start: no siblings at all
+
+
+def test_explicit_prior_beats_discovery(tmp_path):
+    runs = tmp_path / "runs"
+    p1 = _run_with_history(str(runs / "run_001"))
+    explicit = _run_with_history(str(tmp_path / "exported"))
+    m = CheckpointManager(str(runs / "run_002"), prior=explicit)
+    assert m.discover_prior() == p1         # a sibling exists...
+    m.layout_policy()                       # ...but the explicit one is used
+    assert m.prior == explicit

@@ -78,3 +78,63 @@ def test_breakeven_matches_bruteforce():
                 brute = k
                 break
         assert n == brute, (t_c, n, brute)
+
+
+# -- learned reorganization overhead (ISSUE 6 satellite) ---------------------
+
+import json
+import os
+
+from repro.core.cost_model import (FALLBACK_CALIBRATION,
+                                   REORG_CHUNK_OVERHEAD_S, REORG_STATS_ALPHA,
+                                   REORG_STATS_NAME, load_reorg_overhead,
+                                   load_reorg_stats, observe_reorg_overhead,
+                                   predict_lifecycle_seconds)
+
+
+def test_observe_reorg_overhead_first_observation(tmp_path):
+    d = str(tmp_path)
+    assert load_reorg_stats(d) is None
+    assert load_reorg_overhead(d) is None
+    st = observe_reorg_overhead(d, 2e-4, num_chunks=64)
+    assert st.chunk_overhead_s == pytest.approx(2e-4)
+    assert st.num_observations == 1
+    assert load_reorg_overhead(d) == pytest.approx(2e-4)
+
+
+def test_observe_reorg_overhead_ema(tmp_path):
+    d = str(tmp_path)
+    observe_reorg_overhead(d, 1e-4)
+    st = observe_reorg_overhead(d, 2e-4)
+    a = REORG_STATS_ALPHA
+    assert st.chunk_overhead_s == pytest.approx(a * 2e-4 + (1 - a) * 1e-4)
+    assert st.num_observations == 2
+
+
+def test_reorg_stats_corrupt_or_invalid_degrade_to_none(tmp_path):
+    d = str(tmp_path)
+    p = os.path.join(d, REORG_STATS_NAME)
+    with open(p, "w") as f:
+        f.write("{not json")
+    assert load_reorg_stats(d) is None
+    with open(p, "w") as f:
+        json.dump({"chunk_overhead_s": -1.0, "num_observations": 3,
+                   "updated_at": 0.0, "version": 1}, f)
+    assert load_reorg_stats(d) is None
+    with open(p, "w") as f:
+        json.dump({"chunk_overhead_s": 1e-4, "num_observations": 3,
+                   "updated_at": 0.0, "version": 999}, f)
+    assert load_reorg_stats(d) is None
+
+
+def test_lifecycle_uses_learned_chunk_overhead():
+    shape = {"groups": 4, "runs": 4, "bytes_moved": 1 << 20,
+             "span_bytes": 1 << 20}
+    base = predict_lifecycle_seconds(FALLBACK_CALIBRATION, write=shape,
+                                     reads=0.0, num_chunks=100)
+    learned = predict_lifecycle_seconds(FALLBACK_CALIBRATION, write=shape,
+                                        reads=0.0, num_chunks=100,
+                                        chunk_overhead_s=1e-2)
+    # 100 chunks at 10 ms each must dominate the static default
+    assert learned == pytest.approx(base
+                                    + 100 * (1e-2 - REORG_CHUNK_OVERHEAD_S))

@@ -1,0 +1,157 @@
+"""Unit tests for the fault-tolerance primitives (ISSUE 6 satellite):
+HeartbeatMonitor deadline logic under an injected clock, plan_rescale
+mesh-shrink edges, and StragglerTracker outlier detection/reassignment."""
+
+import pytest
+
+from repro.distributed.fault_tolerance import (ElasticPlan, HeartbeatMonitor,
+                                               StragglerTracker, plan_rescale)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# -- HeartbeatMonitor --------------------------------------------------------
+
+def test_heartbeat_all_alive_initially():
+    clk = FakeClock()
+    mon = HeartbeatMonitor([0, 1, 2], timeout_s=10.0, clock=clk)
+    assert mon.dead_hosts() == []
+    assert mon.alive_hosts() == [0, 1, 2]
+
+
+def test_heartbeat_declares_dead_after_deadline():
+    clk = FakeClock()
+    mon = HeartbeatMonitor([0, 1], timeout_s=10.0, clock=clk)
+    clk.advance(5.0)
+    mon.beat(1)
+    clk.advance(6.0)           # host 0 last beat 11s ago, host 1 6s ago
+    assert mon.dead_hosts() == [0]
+    assert mon.alive_hosts() == [1]
+
+
+def test_heartbeat_exactly_at_deadline_is_alive():
+    # the deadline is strict: now - t must EXCEED the timeout
+    clk = FakeClock()
+    mon = HeartbeatMonitor([0], timeout_s=10.0, clock=clk)
+    clk.advance(10.0)
+    assert mon.dead_hosts() == []
+    clk.advance(0.001)
+    assert mon.dead_hosts() == [0]
+
+
+def test_heartbeat_beat_revives_host():
+    clk = FakeClock()
+    mon = HeartbeatMonitor([0], timeout_s=1.0, clock=clk)
+    clk.advance(5.0)
+    assert mon.dead_hosts() == [0]
+    mon.beat(0)
+    assert mon.dead_hosts() == []
+
+
+def test_heartbeat_beat_on_unknown_host_registers_it():
+    # journal-seeded monitors start empty and learn workers from beats
+    clk = FakeClock()
+    mon = HeartbeatMonitor([], timeout_s=1.0, clock=clk)
+    mon.beat(7)
+    assert mon.alive_hosts() == [7]
+    clk.advance(2.0)
+    assert mon.dead_hosts() == [7]
+
+
+# -- plan_rescale ------------------------------------------------------------
+
+def test_plan_rescale_shrinks_data_axis():
+    plan = plan_rescale((4, 2), 6, [0, 1, 2])
+    assert isinstance(plan, ElasticPlan)
+    assert plan.old_mesh == (4, 2)
+    assert plan.new_mesh == (3, 2)          # model axis kept, dp = 6 // 2
+    assert plan.surviving_hosts == [0, 1, 2]
+    assert plan.batch_refactor == pytest.approx(4 / 3)
+    assert "rescale (4, 2) -> (3, 2)" in plan.describe()
+
+
+def test_plan_rescale_n_minus_one_workers():
+    # the distributed-reorg elastic case: (N, 1) mesh, one worker dies
+    plan = plan_rescale((3, 1), 2, ["w0", "w2"])
+    assert plan.new_mesh == (2, 1)
+    assert plan.batch_refactor == pytest.approx(1.5)
+
+
+def test_plan_rescale_model_axis_unsatisfiable_raises():
+    with pytest.raises(ValueError, match="not enough devices"):
+        plan_rescale((4, 4), 3, [0])
+
+
+def test_plan_rescale_model_axis_relaxed():
+    # with model_axis_fixed=False the model axis may shrink instead
+    plan = plan_rescale((4, 4), 3, [0], model_axis_fixed=False)
+    assert plan.new_mesh == (1, 3)
+
+
+def test_plan_rescale_no_loss_is_identity_mesh():
+    plan = plan_rescale((2, 2), 4, [0, 1])
+    assert plan.new_mesh == (2, 2)
+    assert plan.batch_refactor == pytest.approx(1.0)
+
+
+# -- StragglerTracker --------------------------------------------------------
+
+def test_straggler_needs_two_samples():
+    trk = StragglerTracker([0, 1, 2])
+    assert trk.stragglers() == []
+    trk.record(0, 1.0)
+    assert trk.stragglers() == []           # a lone sample has no median
+
+
+def test_straggler_detects_slow_host():
+    trk = StragglerTracker([0, 1, 2], factor=1.5)
+    for _ in range(5):
+        trk.record(0, 1.0)
+        trk.record(1, 1.1)
+        trk.record(2, 5.0)
+    assert trk.stragglers() == [2]
+
+
+def test_straggler_ema_forgets_old_outliers():
+    trk = StragglerTracker([0, 1], alpha=0.5, factor=1.5)
+    trk.record(0, 1.0)
+    trk.record(1, 10.0)                     # one bad step
+    assert trk.stragglers() == [1]
+    for _ in range(12):                     # then it runs at the median pace
+        trk.record(0, 1.0)
+        trk.record(1, 1.0)
+    assert trk.stragglers() == []
+
+
+def test_straggler_reassignment_moves_to_fastest():
+    trk = StragglerTracker([0, 1, 2], factor=1.5)
+    for _ in range(3):
+        trk.record(0, 0.5)
+        trk.record(1, 1.0)
+        trk.record(2, 4.0)
+    moves = trk.reassignment({0: 4, 1: 4, 2: 4})
+    assert moves == {2: {"move_shards": 1, "to": 0}}
+
+
+def test_straggler_reassignment_skips_empty_hosts():
+    trk = StragglerTracker([0, 1], factor=1.5)
+    for _ in range(3):
+        trk.record(0, 1.0)
+        trk.record(1, 4.0)
+    assert trk.reassignment({0: 4, 1: 0}) == {}
+
+
+def test_straggler_no_stragglers_no_moves():
+    trk = StragglerTracker([0, 1])
+    trk.record(0, 1.0)
+    trk.record(1, 1.05)
+    assert trk.reassignment({0: 1, 1: 1}) == {}

@@ -20,7 +20,7 @@ from repro.io import (Dataset, ENGINES, GPFS_BLOCK, OverlappedPreadEngine,
                       PreadEngine, StagingExecutor, assemble_chunk,
                       build_write_plan, gather_to_nodes, reorganize)
 from repro.io.format import (ChunkRecord, DatasetIndex, align_up,
-                             subfile_name)
+                             extent_checksum, subfile_name)
 
 GLOBAL = (64, 64, 64)
 BLOCK = (16, 16, 16)
@@ -200,7 +200,8 @@ def _seed_write_variable(dirpath, name, dtype, plan, data, align=None,
     for cp, buf, sf, off in placed:
         index.chunks.append(ChunkRecord(var=name, lo=cp.chunk.lo,
                                         hi=cp.chunk.hi, subfile=sf,
-                                        offset=off, nbytes=buf.nbytes))
+                                        offset=off, nbytes=buf.nbytes,
+                                        checksum=extent_checksum(buf)))
     index.num_subfiles = max(index.num_subfiles, len(offsets))
     index.save(dirpath)
     return index

@@ -1,0 +1,300 @@
+"""Multi-process kill matrix for distributed reorganization (ISSUE 6).
+
+Real worker processes are SIGKILLed while parked at instrumented crash
+points (``repro.distributed.reorg.BARRIERS``: mid-gather, pre-renew,
+mid-write, pre-complete) and the tentpole guarantees are asserted at each
+cell:
+
+* after the kill the destination is *absent* (no ``index.json``; dead
+  bytes and a journal at worst) and the source is byte-identical;
+* a restarted fleet adopts the journal and converges to a destination
+  bit-identical to a single-process ``reorganize`` of the same source;
+* an elastic N -> N-1 shrink (one worker SIGKILLed mid-fleet) is detected
+  by the coordinator's heartbeat monitor, the ``plan_rescale`` decision is
+  journaled, and the survivors converge alone;
+* a live reader polling the destination throughout never observes a torn
+  layout — only "not there yet" or the complete, correct dataset.
+
+Every wait here is bounded by an explicit deadline, so a wedged fleet
+fails the test instead of hanging it.
+"""
+
+import hashlib
+import json
+import multiprocessing as mp
+import os
+import shutil
+import signal
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import plan_layout, simulate_load_balance, uniform_grid_blocks
+from repro.core.blocks import Block
+from repro.distributed.reorg import (BARRIERS, distributed_reorganize,
+                                     worker_main)
+from repro.io import Dataset, build_write_plan, choose_reorg_layout, reorganize
+from repro.io.journal import REORG_JOURNAL_NAME, ReorgJournal
+
+GLOBAL = (32, 32, 32)
+WAIT_S = 60.0
+
+
+def _world(seed=7, nprocs=4):
+    blocks = simulate_load_balance(uniform_grid_blocks(GLOBAL, (8, 8, 8)),
+                                   num_procs=nprocs, seed=seed)
+    rng = np.random.default_rng(seed)
+    data = {b.block_id: rng.standard_normal(b.shape).astype(np.float32)
+            for b in blocks}
+    ref = np.zeros(GLOBAL, np.float32)
+    for b in blocks:
+        ref[b.slices()] = data[b.block_id]
+    return blocks, data, ref
+
+
+def _write_src(tmp_path, blocks, data):
+    src = str(tmp_path / "src")
+    ds = Dataset.create(src)
+    ds.write("B", plan_layout("subfiled_fpp", blocks, num_procs=4,
+                              global_shape=GLOBAL), np.float32, data)
+    ds.close()
+    return src
+
+
+def _dir_hashes(d):
+    out = {}
+    for name in sorted(os.listdir(d)):
+        with open(os.path.join(d, name), "rb") as f:
+            out[name] = hashlib.sha256(f.read()).hexdigest()
+    return out
+
+
+def _reference(tmp_path, src):
+    """Single-process ``reorganize`` of a byte-identical copy of the source
+    — the bit-identity oracle for the distributed fleet.  (A copy, because
+    a successful reorganize records stats into its source directory.)"""
+    src2 = str(tmp_path / "src_ref")
+    shutil.copytree(src, src2)
+    refdst = str(tmp_path / "dst_ref")
+    _, ds, _ = reorganize(src2, refdst, "B", layout="auto", engine="pread")
+    ds.close()
+    return refdst
+
+
+def _assert_bit_identical(d_a, d_b):
+    bins_a = sorted(f for f in os.listdir(d_a) if f.endswith(".bin"))
+    bins_b = sorted(f for f in os.listdir(d_b) if f.endswith(".bin"))
+    assert bins_a == bins_b
+    ha, hb = _dir_hashes(d_a), _dir_hashes(d_b)
+    for f in bins_a:
+        assert ha[f] == hb[f], f
+    with open(os.path.join(d_a, "index.json")) as f:
+        ja = json.load(f)
+    with open(os.path.join(d_b, "index.json")) as f:
+        jb = json.load(f)
+    assert ja["chunks"] == jb["chunks"]      # extents, offsets AND crcs
+    assert ja["variables"] == jb["variables"]
+
+
+def _wait_for(predicate, timeout_s, what):
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        if predicate():
+            return
+        time.sleep(0.02)
+    raise AssertionError(f"timed out after {timeout_s}s waiting for {what}")
+
+
+def _arm_barrier(tmp_path, armed):
+    """A barrier dir where only ``armed`` parks workers: every other crash
+    point's release file pre-exists, so workers sail through them."""
+    bdir = str(tmp_path / "barriers")
+    os.makedirs(bdir, exist_ok=True)
+    for name in BARRIERS:
+        if name != armed:
+            with open(os.path.join(bdir, f"go.{name}"), "w"):
+                pass
+    return bdir
+
+
+def _reached(bdir, name):
+    return [f for f in os.listdir(bdir) if f.endswith(f".{name}.reached")]
+
+
+def _make_journal(src, dst, *, num_units, lease_timeout_s):
+    """The coordinator's journal-creation path, inlined so the test owns
+    the fleet (and can SIGKILL all of it) instead of the coordinator."""
+    sds = Dataset.open(src, engine="pread", telemetry=False)
+    decision = choose_reorg_layout(sds, "B")
+    dtype = sds.index.var_dtype("B")
+    sds.close()
+    plan = build_write_plan(decision.layout, "B", dtype)
+    ReorgJournal.create(dst, plan, src, num_units=num_units,
+                        lease_timeout_s=lease_timeout_s,
+                        attrs={"var": "B", "engine": "pread",
+                               "policy": decision.to_json()})
+
+
+def _spawn_workers(dst, names, bdir):
+    ctx = mp.get_context("spawn")
+    procs = {}
+    for w in names:
+        p = ctx.Process(target=worker_main, args=(dst, w, "pread"),
+                        kwargs={"barrier_dir": bdir}, daemon=True)
+        p.start()
+        procs[w] = p
+    return procs
+
+
+# -- the matrix: whole-fleet SIGKILL at each crash point ---------------------
+
+@pytest.mark.parametrize("barrier", BARRIERS)
+def test_fleet_sigkill_then_restart_converges(tmp_path, barrier):
+    blocks, data, ref = _world()
+    src = _write_src(tmp_path, blocks, data)
+    refdst = _reference(tmp_path, src)
+    src_before = _dir_hashes(src)
+    dst = str(tmp_path / "dst")
+    bdir = _arm_barrier(tmp_path, barrier)
+    _make_journal(src, dst, num_units=4, lease_timeout_s=1.0)
+
+    procs = _spawn_workers(dst, ["k0", "k1"], bdir)
+    try:
+        _wait_for(lambda: _reached(bdir, barrier), WAIT_S,
+                  f"a worker parked at {barrier}")
+        for p in procs.values():           # whole-fleet death, no cleanup
+            if p.is_alive():
+                os.kill(p.pid, signal.SIGKILL)
+        for p in procs.values():
+            p.join(timeout=10.0)
+    finally:
+        for p in procs.values():
+            if p.is_alive():
+                p.kill()
+
+    # crash invariant: destination absent (journal + dead bytes at worst),
+    # source untouched
+    assert not os.path.exists(os.path.join(dst, "index.json"))
+    assert os.path.exists(os.path.join(dst, REORG_JOURNAL_NAME))
+    assert _dir_hashes(src) == src_before
+
+    # a fresh fleet adopts the journal, inherits the expired leases, and
+    # converges bit-identically to the single-process oracle
+    ds, stats = distributed_reorganize(src, dst, "B", num_workers=2,
+                                       engine="pread", round_timeout_s=WAIT_S)
+    try:
+        arr, _ = ds.read("B", Block((0, 0, 0), GLOBAL))
+    finally:
+        ds.close()
+    np.testing.assert_array_equal(arr, ref)
+    _assert_bit_identical(refdst, dst)
+    assert not os.path.exists(os.path.join(dst, REORG_JOURNAL_NAME))
+    assert stats["validation_failures"] == 0
+
+
+# -- elastic shrink: N -> N-1, survivors converge ----------------------------
+
+def test_elastic_shrink_survivors_converge(tmp_path):
+    blocks, data, ref = _world(seed=13)
+    src = _write_src(tmp_path, blocks, data)
+    dst = str(tmp_path / "dst")
+    bdir = _arm_barrier(tmp_path, "mid_gather")
+    journal = ReorgJournal(dst)
+    result = {}
+
+    def run():
+        ds, stats = distributed_reorganize(
+            src, dst, "B", num_workers=3, units_per_worker=2,
+            engine="pread", lease_timeout_s=2.0, round_timeout_s=120.0,
+            barrier_dir=bdir)
+        try:
+            result["arr"], _ = ds.read("B", Block((0, 0, 0), GLOBAL))
+        finally:
+            ds.close()
+        result["stats"] = stats
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    try:
+        _wait_for(lambda: _reached(bdir, "mid_gather"), WAIT_S,
+                  "a worker parked at mid_gather")
+        marker = sorted(_reached(bdir, "mid_gather"))[0]
+        victim = marker.split(".")[0]
+        with open(os.path.join(bdir, marker)) as f:
+            os.kill(int(f.read()), signal.SIGKILL)
+
+        def death_recorded():
+            try:
+                events = journal.load()["events"]
+            except (OSError, ValueError):
+                return False
+            return any(e.get("event") == "worker_dead"
+                       and e.get("worker") == victim for e in events)
+
+        # the coordinator's heartbeat monitor must notice the silent worker
+        # and journal the rescale decision while the fleet is still parked
+        _wait_for(death_recorded, WAIT_S, "the worker's death to be journaled")
+        with open(os.path.join(bdir, "go.mid_gather"), "w"):
+            pass
+    finally:
+        t.join(timeout=120.0)
+    assert not t.is_alive(), "elastic fleet did not converge"
+
+    np.testing.assert_array_equal(result["arr"], ref)
+    deaths = [e for e in result["stats"]["events"]
+              if e["event"] == "worker_dead"]
+    assert [d["worker"] for d in deaths] == [victim]
+    assert "-> (2, 1)" in deaths[0]["rescale"]     # the N-1 mesh decision
+    assert result["stats"]["rounds"] == 1          # survivors, same fleet
+    assert not os.path.exists(os.path.join(dst, REORG_JOURNAL_NAME))
+
+
+# -- live reader: old state or new state, never torn -------------------------
+
+def test_live_reader_never_sees_torn_layout(tmp_path):
+    blocks, data, ref = _world(seed=23)
+    src = _write_src(tmp_path, blocks, data)
+    dst = str(tmp_path / "dst")
+    stop = threading.Event()
+    problems, observations = [], []
+
+    def reader():
+        while not stop.is_set():
+            try:
+                ds = Dataset.open(dst, engine="pread", telemetry=False)
+            except FileNotFoundError:
+                observations.append("absent")
+                time.sleep(0.002)
+                continue
+            try:
+                arr, _ = ds.read("B", Block((0, 0, 0), GLOBAL))
+                if np.array_equal(arr, ref):
+                    observations.append("consistent")
+                else:
+                    problems.append("read complete but wrong bytes")
+            except Exception as exc:   # noqa: BLE001 — any tear is a failure
+                problems.append(repr(exc))
+            finally:
+                ds.close()
+
+    t = threading.Thread(target=reader, daemon=True)
+    t.start()
+    try:
+        ds, _ = distributed_reorganize(src, dst, "B", num_workers=2,
+                                       engine="pread", round_timeout_s=WAIT_S)
+        ds.close()
+    finally:
+        stop.set()
+        t.join(timeout=30.0)
+
+    assert problems == []
+    assert "absent" in observations            # it saw the old state
+    # and the committed state is the complete, correct dataset
+    ds = Dataset.open(dst, engine="pread", telemetry=False)
+    try:
+        arr, _ = ds.read("B", Block((0, 0, 0), GLOBAL))
+    finally:
+        ds.close()
+    np.testing.assert_array_equal(arr, ref)

@@ -1,0 +1,384 @@
+"""Unit tests for the distributed-reorg journal layer (ISSUE 6 tentpole):
+WritePlan (de)serialization, group-aligned unit partitioning, the lease
+protocol under an injected clock, retry backoff, checksum validation and
+index-version transparency.  The multi-process SIGKILL matrix lives in
+``test_kill_matrix.py``; everything here is single-process."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import plan_layout, simulate_load_balance, uniform_grid_blocks
+from repro.core.blocks import Block
+from repro.distributed.reorg import validate_journal, with_retry, worker_main
+from repro.io import Dataset, build_write_plan, reorganize, subset_write_plan
+from repro.io.format import DatasetIndex, extent_checksum, subfile_name
+from repro.io.journal import (REORG_JOURNAL_NAME, ReorgJournal, WorkUnit,
+                              deserialize_write_plan, partition_unit_rows,
+                              serialize_write_plan)
+
+GLOBAL = (16, 16, 16)
+
+
+class FakeClock:
+    def __init__(self, t=1000.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _world(seed=11, nprocs=2):
+    blocks = simulate_load_balance(uniform_grid_blocks(GLOBAL, (8, 8, 8)),
+                                   num_procs=nprocs, seed=seed)
+    rng = np.random.default_rng(seed)
+    data = {b.block_id: rng.standard_normal(b.shape).astype(np.float32)
+            for b in blocks}
+    ref = np.zeros(GLOBAL, np.float32)
+    for b in blocks:
+        ref[b.slices()] = data[b.block_id]
+    return blocks, data, ref
+
+
+def _write_src(tmp_path, blocks, data):
+    src = str(tmp_path / "src")
+    ds = Dataset.create(src)
+    ds.write("B", plan_layout("subfiled_fpp", blocks, num_procs=2,
+                              global_shape=GLOBAL), np.float32, data)
+    ds.close()
+    return src
+
+
+def _dst_plan(blocks):
+    # align=4096 pads between extents, so nothing coalesces: 8 chunks ->
+    # 8 groups, enough to cut into several work units
+    layout = plan_layout("chunked", blocks, num_procs=2, global_shape=GLOBAL)
+    return build_write_plan(layout, "B", np.float32, align=4096)
+
+
+# -- WritePlan (de)serialization ---------------------------------------------
+
+def test_write_plan_roundtrip():
+    blocks, _, _ = _world()
+    plan = _dst_plan(blocks)
+    d = json.loads(json.dumps(serialize_write_plan(plan)))  # via real JSON
+    back = deserialize_write_plan(d)
+    assert back.var == plan.var and back.dtype == plan.dtype
+    for f in ("chunk_ids", "chunk_los", "chunk_his", "writers", "subfiles",
+              "file_lo", "file_hi", "nbytes", "group_bounds"):
+        np.testing.assert_array_equal(getattr(back, f), getattr(plan, f))
+    assert back.file_sizes == plan.file_sizes        # int keys restored
+    assert back.align == plan.align
+    assert back.span_bytes == plan.span_bytes
+    assert back.layout.strategy == plan.layout.strategy
+    assert len(back.layout.chunks) == len(plan.layout.chunks)
+    # layout.chunks must stay indexable by chunk_id
+    for row in range(back.num_chunks):
+        cid = int(back.chunk_ids[row])
+        assert back.layout.chunks[cid].chunk.block_id == cid
+
+
+def test_subset_of_deserialized_plan_matches_original():
+    blocks, _, _ = _world()
+    plan = _dst_plan(blocks)
+    back = deserialize_write_plan(serialize_write_plan(plan))
+    rows = np.arange(plan.num_chunks // 2)
+    a, b = subset_write_plan(plan, rows), subset_write_plan(back, rows)
+    np.testing.assert_array_equal(a.file_lo, b.file_lo)
+    np.testing.assert_array_equal(a.group_bounds, b.group_bounds)
+    assert a.file_sizes == b.file_sizes
+
+
+# -- unit partitioning -------------------------------------------------------
+
+def test_partition_covers_rows_exactly_once_and_group_aligned():
+    blocks, _, _ = _world()
+    plan = _dst_plan(blocks)
+    for num_units in (1, 2, 3, plan.num_groups, plan.num_groups + 5):
+        units = partition_unit_rows(plan, num_units)
+        assert len(units) == min(num_units, plan.num_groups)
+        flat = [r for rows in units for r in rows]
+        assert flat == list(range(plan.num_chunks))   # contiguous, complete
+        # every unit boundary is a coalesced-group boundary
+        bounds = set(int(b) for b in plan.group_bounds)
+        pos = 0
+        for rows in units:
+            assert pos in bounds
+            pos += len(rows)
+
+
+def test_partition_empty_plan():
+    blocks, _, _ = _world()
+    plan = _dst_plan(blocks)
+    empty = subset_write_plan(plan, np.array([], dtype=np.int64))
+    assert partition_unit_rows(empty, 4) == []
+
+
+# -- the lease protocol ------------------------------------------------------
+
+def _journal(tmp_path, clock, lease_timeout_s=10.0, num_units=3):
+    blocks, data, _ = _world()
+    src = _write_src(tmp_path, blocks, data)
+    plan = _dst_plan(blocks)
+    dst = str(tmp_path / "dst")
+    j = ReorgJournal.create(dst, plan, src, num_units=num_units,
+                            lease_timeout_s=lease_timeout_s, clock=clock)
+    return j, plan, src, dst
+
+
+def test_journal_create_refuses_double_create(tmp_path):
+    clk = FakeClock()
+    j, plan, src, dst = _journal(tmp_path, clk)
+    with pytest.raises(FileExistsError):
+        ReorgJournal.create(dst, plan, src, num_units=3, clock=clk)
+    assert j.spec()["src_dir"] == os.path.abspath(src)
+    assert j.spec()["var"] == "B"
+    assert not j.done()
+
+
+def test_claim_renew_complete_happy_path(tmp_path):
+    clk = FakeClock()
+    j, plan, _, _ = _journal(tmp_path, clk, num_units=2)
+    u = j.claim("w0")
+    assert u is not None and u.state == "leased" and u.attempt == 1
+    assert u.lease_expires == pytest.approx(clk() + 10.0)
+    assert j.renew("w0", u.unit_id)
+    crcs = {int(r): 0 for r in u.rows}
+    assert j.complete("w0", u.unit_id, crcs)
+    u2 = j.claim("w0")
+    assert u2.unit_id != u.unit_id
+    assert j.complete("w0", u2.unit_id, {int(r): 0 for r in u2.rows})
+    assert j.claim("w0") is None
+    assert j.done()
+    states = {u.unit_id: u.state for u in j.units()}
+    assert set(states.values()) == {"done"}
+
+
+def test_expired_lease_is_reclaimed_and_stale_worker_refused(tmp_path):
+    clk = FakeClock()
+    j, _, _, _ = _journal(tmp_path, clk, lease_timeout_s=10.0, num_units=1)
+    u = j.claim("w0")
+    clk.advance(11.0)                       # w0 goes silent past the deadline
+    u2 = j.claim("w1")
+    assert u2 is not None and u2.unit_id == u.unit_id
+    assert u2.worker == "w1" and u2.attempt == 2
+    # the stale holder must abandon: renew and complete both refused
+    assert not j.renew("w0", u.unit_id)
+    assert not j.complete("w0", u.unit_id, {})
+    # the new holder proceeds normally
+    assert j.renew("w1", u2.unit_id)
+    assert j.complete("w1", u2.unit_id, {int(r): 0 for r in u2.rows})
+    events = [e["event"] for e in j.load()["events"]]
+    assert "lease_expired" in events
+
+
+def test_live_lease_is_not_stolen(tmp_path):
+    clk = FakeClock()
+    j, _, _, _ = _journal(tmp_path, clk, lease_timeout_s=10.0, num_units=1)
+    j.claim("w0")
+    clk.advance(5.0)
+    assert j.claim("w1") is None            # under a live lease elsewhere
+
+
+def test_renew_extends_deadline(tmp_path):
+    clk = FakeClock()
+    j, _, _, _ = _journal(tmp_path, clk, lease_timeout_s=10.0, num_units=1)
+    u = j.claim("w0")
+    clk.advance(8.0)
+    assert j.renew("w0", u.unit_id)
+    clk.advance(8.0)                        # 16s after claim, 8s after renew
+    assert j.claim("w1") is None
+
+
+def test_reset_units_clears_completion(tmp_path):
+    clk = FakeClock()
+    j, _, _, _ = _journal(tmp_path, clk, num_units=1)
+    u = j.claim("w0")
+    j.complete("w0", u.unit_id, {int(r): 123 for r in u.rows})
+    assert j.done()
+    j.reset_units([u.unit_id], reason="validation")
+    assert not j.done()
+    fresh = j.units()[0]
+    assert fresh.state == "pending" and fresh.checksums == {}
+    assert any(e["event"] == "reset" for e in j.load()["events"])
+
+
+def test_monitor_seeded_from_persisted_heartbeats(tmp_path):
+    clk = FakeClock()
+    j, _, _, _ = _journal(tmp_path, clk, lease_timeout_s=10.0, num_units=2)
+    j.claim("w0")
+    clk.advance(6.0)
+    j.claim("w1")
+    mon = j.monitor()
+    assert mon.dead_hosts() == []
+    clk.advance(6.0)                        # w0 silent 12s, w1 silent 6s
+    mon = j.monitor()
+    assert mon.dead_hosts() == ["w0"]
+    assert mon.alive_hosts() == ["w1"]
+
+
+# -- with_retry --------------------------------------------------------------
+
+def test_with_retry_exponential_backoff():
+    calls, naps = [], []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("blip")
+        return "ok"
+
+    assert with_retry(flaky, attempts=4, backoff_s=0.1,
+                      sleep=naps.append) == "ok"
+    assert len(calls) == 3
+    assert naps == [pytest.approx(0.1), pytest.approx(0.2)]
+
+
+def test_with_retry_raises_after_budget():
+    naps = []
+
+    def dead():
+        raise OSError("gone")
+
+    with pytest.raises(OSError, match="gone"):
+        with_retry(dead, attempts=3, backoff_s=0.01, sleep=naps.append)
+    assert len(naps) == 2                   # no sleep after the last attempt
+
+
+def test_with_retry_unlisted_exception_propagates_immediately():
+    calls = []
+
+    def boom():
+        calls.append(1)
+        raise ValueError("not transient")
+
+    with pytest.raises(ValueError):
+        with_retry(boom, attempts=5, sleep=lambda s: None)
+    assert len(calls) == 1
+
+
+# -- worker + validation, in-process -----------------------------------------
+
+def test_worker_main_drains_journal_and_validates(tmp_path):
+    clk = FakeClock()
+    j, plan, _, dst = _journal(tmp_path, clk, num_units=3)
+    stats = worker_main(dst, "w0")
+    assert stats["units_done"] == 3 and stats["units_lost"] == 0
+    assert stats["chunks_gathered"] == plan.num_chunks
+    assert j.done()
+    assert validate_journal(dst, plan, j) == []
+
+
+def test_validation_flags_corrupt_unit_and_redo_heals(tmp_path):
+    clk = FakeClock()
+    j, plan, _, dst = _journal(tmp_path, clk, num_units=3)
+    worker_main(dst, "w0")
+    victim = j.units()[1]
+    row = int(victim.rows[0])
+    path = os.path.join(dst, subfile_name(int(plan.subfiles[row])))
+    with open(path, "r+b") as f:            # flip one byte of the extent
+        f.seek(int(plan.file_lo[row]))
+        b = f.read(1)
+        f.seek(int(plan.file_lo[row]))
+        f.write(bytes([b[0] ^ 0xFF]))
+    assert validate_journal(dst, plan, j) == [victim.unit_id]
+    j.reset_units([victim.unit_id])
+    worker_main(dst, "w1")                  # a fresh worker redoes only it
+    assert validate_journal(dst, plan, j) == []
+
+
+def test_validation_flags_missing_checksum_rows(tmp_path):
+    clk = FakeClock()
+    j, plan, _, dst = _journal(tmp_path, clk, num_units=2)
+    u = j.claim("w0")
+    j.complete("w0", u.unit_id, {})         # done, but no CRCs recorded
+    assert validate_journal(dst, plan, j) == [u.unit_id]
+
+
+# -- checksums end to end ----------------------------------------------------
+
+def test_reorganize_stamps_checksums_and_verify_passes(tmp_path):
+    blocks, data, _ = _world()
+    src = _write_src(tmp_path, blocks, data)
+    dst = str(tmp_path / "dst")
+    _, ds, _ = reorganize(src, dst, "B", layout="auto")
+    try:
+        recs = [r for r in ds.index.chunks if r.var == "B"]
+        assert all(r.checksum is not None for r in recs)
+        checked, bad = ds.verify_checksums()
+        assert checked == len(recs) and bad == []
+    finally:
+        ds.close()
+
+
+def test_verify_checksums_detects_corruption(tmp_path):
+    blocks, data, _ = _world()
+    src = _write_src(tmp_path, blocks, data)
+    dst = str(tmp_path / "dst")
+    _, ds, _ = reorganize(src, dst, "B", layout="auto")
+    rec = ds.index.chunks[0]
+    ds.close()
+    path = os.path.join(dst, subfile_name(rec.subfile))
+    with open(path, "r+b") as f:
+        f.seek(rec.offset)
+        b = f.read(1)
+        f.seek(rec.offset)
+        f.write(bytes([b[0] ^ 0xFF]))
+    ds = Dataset.open(dst)
+    try:
+        checked, bad = ds.verify_checksums()
+        assert len(bad) == 1 and checked >= 1
+    finally:
+        ds.close()
+
+
+def test_v2_index_without_checksums_reads_transparently(tmp_path):
+    blocks, data, ref = _world()
+    src = _write_src(tmp_path, blocks, data)
+    # rewrite the index as version 2 with the crc fields stripped
+    p = os.path.join(src, "index.json")
+    with open(p) as f:
+        payload = json.load(f)
+    payload["version"] = 2
+    for rec in payload["chunks"]:
+        rec.pop("crc", None)
+    with open(p, "w") as f:
+        json.dump(payload, f)
+    ds = Dataset.open(src)
+    try:
+        assert all(r.checksum is None for r in ds.index.chunks)
+        arr, _ = ds.read("B", Block((0, 0, 0), GLOBAL))
+        np.testing.assert_array_equal(arr, ref)
+        checked, bad = ds.verify_checksums()
+        assert checked == 0 and bad == []   # nothing to check, nothing wrong
+    finally:
+        ds.close()
+
+
+def test_reorganize_learns_chunk_overhead(tmp_path):
+    from repro.core.cost_model import load_reorg_stats
+    from repro.core.policy import LayoutPolicy
+    blocks, data, _ = _world()
+    src = _write_src(tmp_path, blocks, data)
+    assert load_reorg_stats(src) is None
+    _, ds, _ = reorganize(src, str(tmp_path / "dst"), "B", layout="auto")
+    ds.close()
+    st = load_reorg_stats(src)
+    assert st is not None
+    assert st.num_observations == 1 and st.chunk_overhead_s > 0
+    # the next layout decision over this dataset prices reorganization
+    # with the measured overhead, not the static default
+    pol = LayoutPolicy.for_dataset(src)
+    assert pol.chunk_overhead_s == pytest.approx(st.chunk_overhead_s)
+
+
+def test_unit_json_roundtrip():
+    u = WorkUnit(unit_id=3, rows=[4, 5, 6], state="done", worker="w1",
+                 lease_expires=12.5, attempt=2, checksums={4: 9, 5: 8, 6: 7})
+    back = WorkUnit.from_json(json.loads(json.dumps(u.to_json())))
+    assert back == u

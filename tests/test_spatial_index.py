@@ -158,7 +158,7 @@ def test_spatial_index_persistence_roundtrip(tmp_path, world):
     _write(d, "B", plan, data)
     with open(os.path.join(d, "index.json")) as f:
         payload = json.load(f)
-    assert payload["version"] == 2
+    assert payload["version"] == 3
     assert "B" in payload["spatial"]
     ds = Dataset(d)
     # loaded (persisted) index answers identically to a fresh rebuild
