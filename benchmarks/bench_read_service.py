@@ -1,0 +1,123 @@
+"""Multi-tenant read-service coalescing cell (ISSUE 7).
+
+An overlapping **slab storm**: 8 tenants repeatedly read overlapping slabs
+of one variable.  Three ways to serve one storm round:
+
+* ``independent`` — 8 separate ``Dataset.read`` calls (each pays its own
+  index probe, plan construction and gather: the no-service baseline);
+* ``service`` — one :class:`~repro.serve.read_service.ReadService` batch:
+  the requests coalesce into a cached super-plan (one probe and one plan
+  at first use, then zero), ONE engine gather over the merged byte spans,
+  and a scatter pass producing all 8 responses;
+* ``hand_merged`` — the client-side ideal: one read of the pre-computed
+  union region, then 8 numpy slice-copies into per-tenant buffers (what a
+  perfectly coordinated client library would do by hand).
+
+All three must produce byte-identical tenant responses (asserted).  The
+paper-motivated gates: hot, the service beats independent reads by >= 1.3x
+(probe/plan amortization + merged transfers) and lands within 5% of the
+hand-merged ideal.  Timing gates are asserted on the full-size run only —
+BENCH_SMOKE shrinks the world until constant overheads dominate, so the
+smoke run asserts correctness and emits the ratios for eyeballing.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.blocks import Block
+from repro.io import Dataset
+from repro.serve.coalesce import Request
+from repro.serve.read_service import ReadService
+
+from .common import ENGINE, SMOKE, TmpDir, emit, timed, write_dataset
+from repro.core import plan_layout, uniform_grid_blocks
+
+NUM_TENANTS = 8
+
+if SMOKE:
+    SHAPE = (32, 64, 64)          # 512 KB f32
+    CHUNK = (2, 64, 64)
+    SLAB, STRIDE = 6, 2
+else:
+    SHAPE = (64, 128, 128)        # 4 MB f32
+    CHUNK = (2, 128, 128)
+    SLAB, STRIDE = 12, 4
+
+
+def _storm_regions():
+    """Overlapping slab storm: tenant i reads planes [i*STRIDE,
+    i*STRIDE+SLAB) — neighbors overlap by SLAB-STRIDE planes."""
+    return [Block((i * STRIDE, 0, 0), (i * STRIDE + SLAB,) + SHAPE[1:])
+            for i in range(NUM_TENANTS)]
+
+
+def run(tmp: TmpDir) -> None:
+    rng = np.random.default_rng(11)
+    blocks = uniform_grid_blocks(SHAPE, CHUNK)
+    data = {b.block_id: rng.standard_normal(b.shape).astype(np.float32)
+            for b in blocks}
+    full = np.zeros(SHAPE, np.float32)
+    for b in blocks:
+        full[b.slices()] = data[b.block_id]
+    d = tmp.sub("storm")
+    write_dataset(d, "S", plan_layout("chunked", blocks, num_procs=4,
+                                      global_shape=SHAPE), data)
+
+    regions = _storm_regions()
+    union = Block((0, 0, 0),
+                  (max(r.hi[0] for r in regions),) + SHAPE[1:])
+    refs = [full[r.slices()] for r in regions]
+    repeats = 5 if SMOKE else 20
+
+    # telemetry off for every contender: this cell times the I/O path, not
+    # access-log bookkeeping (which all three paths would pay alike)
+    ds = Dataset.open(d, engine=ENGINE, telemetry=False)
+
+    def independent():
+        return [ds.read("S", r)[0] for r in regions]
+
+    outs, t_ind = timed(independent, repeats=repeats)
+    for out, ref in zip(outs, refs):
+        np.testing.assert_array_equal(out, ref)
+    emit("read_service/independent_8x", t_ind * 1e6,
+         f"tenants={NUM_TENANTS}")
+
+    def hand_merged():
+        # .copy(): tenants get owned buffers, as any serving contract
+        # requires — handing out views aliasing one mutable array is not a
+        # comparable response
+        merged, _ = ds.read("S", union)
+        return [merged[r.slices()].copy() for r in regions]
+
+    outs, t_hand = timed(hand_merged, repeats=repeats)
+    for out, ref in zip(outs, refs):
+        np.testing.assert_array_equal(out, ref)
+    emit("read_service/hand_merged", t_hand * 1e6, "one read + slices")
+
+    svc = ReadService(ds, window_s=0.0)
+    reqs = [Request(f"tenant{i}", "S", r) for i, r in enumerate(regions)]
+
+    def service():
+        return [arr for arr, _ in svc.read_batch(reqs)]
+
+    service()                                     # warm the plan cache
+    outs, t_svc = timed(service, repeats=repeats)
+    for out, ref in zip(outs, refs):
+        np.testing.assert_array_equal(out, ref)
+    st = svc.stats
+    emit("read_service/coalesced_hot", t_svc * 1e6,
+         f"cache_hits={st.cache_hits};fetch_mb="
+         f"{st.fetch_bytes / max(1, st.super_plans) / 1e6:.2f}")
+
+    speedup = t_ind / t_svc
+    vs_hand = t_svc / t_hand
+    emit("read_service/speedup_vs_independent", speedup, f"gate>=1.3")
+    emit("read_service/vs_hand_merged", vs_hand, f"gate<=1.05")
+    if not SMOKE:
+        assert speedup >= 1.3, \
+            f"coalesced service only {speedup:.2f}x vs independent reads"
+        assert vs_hand <= 1.05, \
+            f"service {vs_hand:.2f}x the hand-merged ideal (gate 1.05)"
+    svc.close()
+    ds.close()

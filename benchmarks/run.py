@@ -14,8 +14,8 @@ import traceback
 from . import (bench_auto_select, bench_checkpoint, bench_clustering,
                bench_cost_model, bench_distributed_reorg, bench_end_to_end,
                bench_layout_policy, bench_merging, bench_read_decomposition,
-               bench_read_patterns, bench_reorg_read, bench_staging,
-               bench_write_layouts, roofline)
+               bench_read_patterns, bench_read_service, bench_reorg_read,
+               bench_staging, bench_write_layouts, roofline)
 from .common import TmpDir
 
 SECTIONS = [
@@ -29,6 +29,7 @@ SECTIONS = [
     ("tab2_sec52_cost_model", bench_cost_model.run),
     ("fig15_reorg_read", bench_reorg_read.run),
     ("distributed_reorg", bench_distributed_reorg.run),
+    ("read_service", bench_read_service.run),
     ("auto_select", bench_auto_select.run),
     ("layout_policy", bench_layout_policy.run),
     ("ckpt_integration", bench_checkpoint.run),

@@ -150,6 +150,12 @@ class AccessRecord:
     engine: str = ""             # engine spec that executed the plan
     ts: float = 0.0              # wall clock (time.time()) at record time
     source: str = "live"         # "live" | "prior" (loaded cross-run)
+    #: tenant namespace (multi-tenant read service); "" = untagged legacy
+    #: records and single-reader sessions.  The policy always scores the
+    #: AGGREGATE mix across tenants — the tag exists so per-tenant slices
+    #: can be inspected and exported (``export_prior(tenant=...)``), never
+    #: so one tenant's traffic overwrites another's.
+    tenant: str = ""
 
     @property
     def ndim(self) -> int:
@@ -169,6 +175,8 @@ class AccessRecord:
              "ts": float(self.ts)}
         if self.source != "live":      # pre-prior files stay byte-compatible
             d["src"] = self.source
+        if self.tenant:                # untagged records stay byte-compatible
+            d["tn"] = self.tenant
         return d
 
     @staticmethod
@@ -181,15 +189,18 @@ class AccessRecord:
                             seconds=d.get("sec", 0.0),
                             predicted_seconds=d.get("pred", 0.0),
                             engine=d.get("eng", ""), ts=d.get("ts", 0.0),
-                            source=d.get("src", "live"))
+                            source=d.get("src", "live"),
+                            tenant=d.get("tn", ""))
 
     @classmethod
     def from_stats(cls, var: str, kind: str, region: Block,
-                   global_shape: Sequence[int], stats) -> "AccessRecord":
+                   global_shape: Sequence[int], stats,
+                   tenant: str = "") -> "AccessRecord":
         """Fingerprint one executed read: ``stats`` is any object with the
         ``ReadStats`` telemetry fields (runs/groups/bytes_read/seconds/
         predicted_seconds/engine) — the one constructor both the Dataset
-        session and the checkpoint restore path record through."""
+        session and the checkpoint restore path record through.
+        ``tenant`` namespaces the record for multi-tenant serving."""
         return cls(var=var, kind=kind,
                    shape_class=classify_region(region, global_shape),
                    lo=tuple(int(v) for v in region.lo),
@@ -197,7 +208,7 @@ class AccessRecord:
                    runs=stats.runs, groups=stats.groups,
                    nbytes=stats.bytes_read, seconds=stats.seconds,
                    predicted_seconds=stats.predicted_seconds,
-                   engine=stats.engine, ts=time.time())
+                   engine=stats.engine, ts=time.time(), tenant=tenant)
 
 
 class AccessLog:
@@ -284,11 +295,18 @@ class AccessLog:
             # read-only media: telemetry is optional; cap the dead buffer
             del self._pending[:-self.capacity]
 
-    def records(self, var: str | None = None) -> list:
+    def records(self, var: str | None = None,
+                tenant: str | None = None) -> list:
+        """History slice: ``var`` filters by variable, ``tenant`` by the
+        multi-tenant namespace tag (``""`` selects untagged records;
+        ``None`` — the default — returns the aggregate mix across all
+        tenants, which is what layout decisions score)."""
         with self._lock:
             recs = (self.load() + self._pending)[-self.capacity:]
         if var is not None:
             recs = [r for r in recs if r.var == var]
+        if tenant is not None:
+            recs = [r for r in recs if r.tenant == tenant]
         return recs
 
     def clear(self) -> None:
@@ -299,15 +317,18 @@ class AccessLog:
             except OSError:
                 pass
 
-    def export_prior(self, path: str | None = None) -> str:
+    def export_prior(self, path: str | None = None,
+                     tenant: str | None = None) -> str:
         """Snapshot the current history (disk + pending) as a *cross-run
         prior*: a plain JSON file a future run's
         :meth:`LayoutPolicy.with_prior` can seed its decisions from.
         Returns the path written (default ``access_prior.json`` in the log's
-        directory).  Unlike the live ring, a prior is a one-shot artifact —
-        TTL does not apply to it at load time; its influence decays against
-        live telemetry instead (:data:`PRIOR_MASS`)."""
-        recs = self.records()
+        directory).  ``tenant`` restricts the snapshot to one tenant's
+        traffic (default: the aggregate mix).  Unlike the live ring, a
+        prior is a one-shot artifact — TTL does not apply to it at load
+        time; its influence decays against live telemetry instead
+        (:data:`PRIOR_MASS`)."""
+        recs = self.records(tenant=tenant)
         if path is None:
             path = os.path.join(self.dirpath, ACCESS_PRIOR_NAME)
         payload = {"version": ACCESS_LOG_VERSION, "prior": True,

@@ -357,6 +357,13 @@ def distributed_reorganize(src_dir: str, dst_dir: str, var: str,
     for unit in units:
         crc_by_row.update(unit.checksums)
     idx = DatasetIndex()
+    # layout lineage: the committed index supersedes the source's layout,
+    # so generation-keyed plan caches (the read service) drop stale plans
+    try:
+        idx.generation = DatasetIndex.load(
+            journal.load()["src_dir"]).generation + 1
+    except (OSError, ValueError, KeyError):
+        idx.generation = 1
     idx.add_variable(var, plan.layout.global_shape, plan.dtype,
                      plan.layout.strategy)
     for row in np.argsort(plan.chunk_ids):       # original layout order

@@ -16,15 +16,15 @@ calibration (see :mod:`repro.core.cost_model` and
 from .aggregation import gather_to_nodes
 from .engine import (ENGINES, IOEngine, MemmapEngine, OverlappedPreadEngine,
                      PreadEngine, SubfileStore, WriteStats, assemble_chunk,
-                     get_engine, validate_engine_spec)
+                     get_engine, scatter_row, validate_engine_spec)
 from .format import (ChunkRecord, DatasetIndex, GPFS_BLOCK, VarRows,
                      extent_checksum)
 from .journal import (REORG_JOURNAL_NAME, ReorgJournal, WorkUnit,
                       partition_unit_rows)
 from .patterns import (drive_pattern_mix, measure_pattern_mix, normalize_mix,
                        resolve_pattern)
-from .planner import (ReadPlan, WritePlan, build_read_plan, build_write_plan,
-                      linear_candidates, subset_write_plan)
+from .planner import (ReadPlan, WritePlan, build_read_plan, build_span_plan,
+                      build_write_plan, linear_candidates, subset_write_plan)
 from .reader import Dataset, ReadStats, choose_reorg_layout, reorganize
 from .spatial import SpatialChunkIndex
 from .staging import StageResult, StagingExecutor
@@ -34,8 +34,8 @@ __all__ = [
     "ChunkRecord", "DatasetIndex", "GPFS_BLOCK", "VarRows",
     "SpatialChunkIndex", "extent_checksum",
     # plans
-    "ReadPlan", "WritePlan", "build_read_plan", "build_write_plan",
-    "linear_candidates", "subset_write_plan",
+    "ReadPlan", "WritePlan", "build_read_plan", "build_span_plan",
+    "build_write_plan", "linear_candidates", "subset_write_plan",
     # distributed reorg journal
     "REORG_JOURNAL_NAME", "ReorgJournal", "WorkUnit", "partition_unit_rows",
     # engines
@@ -44,7 +44,7 @@ __all__ = [
     "validate_engine_spec",
     # session + execution
     "Dataset", "ReadStats", "WriteStats", "assemble_chunk", "reorganize",
-    "choose_reorg_layout",
+    "choose_reorg_layout", "scatter_row",
     "StageResult", "StagingExecutor", "gather_to_nodes",
     # shared pattern helpers
     "resolve_pattern", "normalize_mix", "drive_pattern_mix",

@@ -50,7 +50,7 @@ from .planner import ReadPlan, WritePlan
 __all__ = ["IOEngine", "MemmapEngine", "PreadEngine",
            "OverlappedPreadEngine", "SubfileStore", "WriteStats",
            "ENGINES", "get_engine", "validate_engine_spec",
-           "assemble_chunk"]
+           "assemble_chunk", "scatter_row"]
 
 #: Linux caps one preadv/pwritev at IOV_MAX iovecs
 _IOV_MAX = 1024
@@ -158,6 +158,14 @@ class SubfileStore:
         with self._lock:
             self._maps.pop(k, None)
 
+    def invalidate_all(self) -> None:
+        """Drop every cached read map — used by ``Dataset.refresh`` after
+        another process republished the index (subfiles may have grown
+        past the cached map lengths)."""
+        with self._lock:
+            self._maps.clear()
+            self._wmaps.clear()
+
     def fsync(self) -> None:
         with self._lock:
             for (k, writable), fd in self._fds.items():
@@ -173,9 +181,14 @@ class SubfileStore:
             self._wmaps.clear()
 
 
-def _scatter(plan: ReadPlan, row: int, span: np.ndarray,
-             out: np.ndarray) -> None:
-    """Strided-gather plan row ``row`` from its byte span into ``out``."""
+def scatter_row(plan: ReadPlan, row: int, span: np.ndarray,
+                out: np.ndarray) -> None:
+    """Strided-gather plan row ``row`` from its byte span into ``out``.
+
+    Public because it is the *execution* half of the plan/execute split:
+    super-plan consumers (:mod:`repro.serve.read_service`) replay member
+    plan rows against an already-fetched flat buffer — the same scatter
+    every engine performs, with no I/O attached."""
     elems = span.view(plan.dtype)
     ishape = tuple(int(s) for s in
                    (plan.inter_his[row] - plan.inter_los[row]))
@@ -184,6 +197,10 @@ def _scatter(plan: ReadPlan, row: int, span: np.ndarray,
     view = np.lib.stride_tricks.as_strided(elems, shape=ishape,
                                            strides=byte_strides)
     out[plan.out_slices(row)] = view
+
+
+#: pre-ISSUE-7 private name, kept for the engine subclasses below
+_scatter = scatter_row
 
 
 def _flat_bytes(buf: np.ndarray) -> np.ndarray:

@@ -119,6 +119,13 @@ class DatasetIndex:
     chunks: list = dataclasses.field(default_factory=list)
     num_subfiles: int = 0
     attrs: dict = dataclasses.field(default_factory=dict)
+    #: layout generation: bumped (old + 1) every time a reorganization
+    #: republishes the index with *relocated* extents — in-place online
+    #: reorganize and the distributed fleet's commit both stamp it.  Plain
+    #: appends do not bump it (existing extents never move), so cached
+    #: read plans are stale iff ``(generation, len(chunks))`` changed.
+    #: Pre-generation index files load as generation 0.
+    generation: int = 0
     #: persisted spatial-index payloads per variable (format v2)
     spatial: dict = dataclasses.field(default_factory=dict, repr=False)
     _rows: dict = dataclasses.field(default_factory=dict, repr=False,
@@ -212,6 +219,7 @@ class DatasetIndex:
         self.spatial = new_spatial
         payload = {
             "version": INDEX_VERSION,
+            "generation": int(self.generation),
             "variables": self.variables,
             "num_subfiles": self.num_subfiles,
             "attrs": self.attrs,
@@ -235,6 +243,7 @@ class DatasetIndex:
         idx = DatasetIndex(variables=payload["variables"],
                            num_subfiles=payload["num_subfiles"],
                            attrs=payload.get("attrs", {}),
-                           spatial=payload.get("spatial", {}))
+                           spatial=payload.get("spatial", {}),
+                           generation=int(payload.get("generation", 0)))
         idx.chunks = [ChunkRecord.from_json(c) for c in payload["chunks"]]
         return idx

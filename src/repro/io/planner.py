@@ -48,7 +48,7 @@ from .format import DatasetIndex, VarRows, align_up
 from .spatial import aabb_mask
 
 __all__ = ["ReadPlan", "WritePlan", "build_read_plan", "build_write_plan",
-           "subset_write_plan", "linear_candidates"]
+           "build_span_plan", "subset_write_plan", "linear_candidates"]
 
 
 def linear_candidates(rows: VarRows, region: Block) -> np.ndarray:
@@ -220,6 +220,47 @@ def build_read_plan(index: DatasetIndex, var: str, region: Block,
         probe_seconds=probe_seconds,
         plan_seconds=time.perf_counter() - t1)
     return plan
+
+
+def build_span_plan(var: str, subfiles: np.ndarray, file_lo: np.ndarray,
+                    file_hi: np.ndarray) -> ReadPlan:
+    """A :class:`ReadPlan` over raw *byte spans* instead of array geometry.
+
+    This is the plan-construction half of the super-plan split (ISSUE 7):
+    given disjoint byte spans (already sorted by ``(subfile, offset)`` —
+    :func:`repro.serve.coalesce.union_spans` output), it builds a 1-D
+    ``uint8`` plan whose output array is the flat concatenation of the
+    spans, in row order.  Any :class:`~repro.io.engine.IOEngine` executes
+    it unchanged — one contiguous transfer per span, overlapped engines at
+    depth — and the caller then scatters slices of the flat buffer into
+    any number of consumers' output arrays without further I/O.  Because
+    it is an ordinary ``ReadPlan``, ``engine="auto"`` prices the gather
+    from its real shape (each span is one group and one contiguous run).
+    """
+    subfiles = np.asarray(subfiles, dtype=np.int64)
+    file_lo = np.asarray(file_lo, dtype=np.int64)
+    file_hi = np.asarray(file_hi, dtype=np.int64)
+    m = len(subfiles)
+    sizes = file_hi - file_lo
+    total = int(sizes.sum())
+    region = Block((0,), (max(1, total),))
+    if m == 0:
+        return _empty_plan(var, region, np.dtype(np.uint8), 1, 0.0)
+    # flat-buffer positions: span i occupies out[prefix[i]:prefix[i]+size]
+    prefix = np.cumsum(sizes) - sizes
+    inter_los = prefix[:, None]
+    inter_his = (prefix + sizes)[:, None]
+    return ReadPlan(
+        var=var, region=region, dtype=np.dtype(np.uint8),
+        rec_ids=np.arange(m, dtype=np.int64),
+        chunk_los=inter_los, chunk_his=inter_his,
+        inter_los=inter_los, inter_his=inter_his,
+        strides=np.ones((m, 1), dtype=np.int64),
+        subfiles=subfiles, extent_offsets=file_lo, extent_nbytes=sizes,
+        file_lo=file_lo, file_hi=file_hi,
+        chunk_runs=np.ones(m, dtype=np.int64),
+        group_bounds=np.arange(m + 1, dtype=np.int64),
+        runs=m, bytes_needed=total, span_bytes=total)
 
 
 @dataclasses.dataclass

@@ -66,8 +66,8 @@ from ..core.policy import AccessLog, AccessRecord, LayoutPolicy
 from ..core.read_patterns import best_decompositions, decompose_region
 from ..core.cost_model import observe_reorg_overhead
 from .engine import (IOEngine, SubfileStore, WriteStats, assemble_chunk,
-                     get_engine)
-from .format import ChunkRecord, DatasetIndex, extent_checksum
+                     get_engine, scatter_row)
+from .format import ChunkRecord, DatasetIndex, INDEX_NAME, extent_checksum
 from .patterns import resolve_pattern
 from .planner import ReadPlan, WritePlan, build_read_plan, build_write_plan
 
@@ -136,12 +136,14 @@ class Dataset:
         self._drift_lock = threading.Lock()
         self._telemetry = telemetry
         self._access_log: AccessLog | None = None
+        self._index_stat = None
         if index is not None:
             self.index = index
         elif create:
             self.index = DatasetIndex()
         else:
             self.index = DatasetIndex.load(dirpath)
+            self._index_stat = self._stat_index()
         if create or index is not None:
             os.makedirs(dirpath, exist_ok=True)
         self._store = SubfileStore(dirpath)
@@ -176,6 +178,43 @@ class Dataset:
         is deferred to plan-execution time)."""
         return "auto" if self._auto else self._engine.name
 
+    @property
+    def generation(self) -> int:
+        """The index's layout generation — bumped every time a
+        reorganization republishes relocated extents (see
+        :class:`~repro.io.format.DatasetIndex.generation`)."""
+        return self.index.generation
+
+    def _stat_index(self):
+        """Cheap identity of the on-disk ``index.json`` (atomic replace
+        changes the inode, appends change mtime/size)."""
+        try:
+            st = os.stat(os.path.join(self.dirpath, INDEX_NAME))
+        except OSError:
+            return None
+        return (st.st_ino, st.st_mtime_ns, st.st_size)
+
+    def refresh(self) -> bool:
+        """Reload ``index.json`` iff another session republished it (a
+        reorganization commit, or a writer's append flush).  Returns True
+        when the index was reloaded — callers holding plans or decision
+        caches keyed on ``(generation, len(index.chunks))`` must drop the
+        stale entries.  Sessions created around an in-memory index (fleet
+        workers, tests) never refresh: their index IS the truth."""
+        if self._index_stat is None:
+            return False
+        st = self._stat_index()
+        if st is None or st == self._index_stat:
+            return False
+        with self._lock:
+            self.index = DatasetIndex.load(self.dirpath)
+            self._index_stat = st
+            self._cursor = None
+        # subfiles may have grown past any cached memmap's length, and an
+        # in-place reorg appended extents the old maps cannot see
+        self._store.invalidate_all()
+        return True
+
     def calibration(self) -> EngineCalibration:
         """The session's storage calibration (lazy: ``calibration.json`` if
         fresh, the per-device cache, else a micro-probe that is persisted
@@ -199,13 +238,17 @@ class Dataset:
         return self._access_log
 
     def _record_access(self, var: str, region: Block, stats: "ReadStats",
-                       kind: str = "read") -> None:
-        """Append one pattern fingerprint; telemetry never breaks a read."""
+                       kind: str = "read", tenant: str = "") -> None:
+        """Append one pattern fingerprint; telemetry never breaks a read.
+        ``tenant`` namespaces the record (multi-tenant read service) — the
+        aggregate mix still feeds the layout policy, but per-tenant slices
+        stay exportable via ``AccessLog.export_prior(tenant=...)``."""
         if not self._telemetry:
             return
         try:
             self.access_log.append(AccessRecord.from_stats(
-                var, kind, region, self.index.var_shape(var), stats))
+                var, kind, region, self.index.var_shape(var), stats,
+                tenant=tenant))
         except Exception:               # noqa: BLE001 — telemetry only
             pass
 
@@ -401,6 +444,59 @@ class Dataset:
             self._note_drift(choice, stats.seconds)
         return out, stats
 
+    def read_super_planned(self, sp, outs: Sequence[np.ndarray] | None = None,
+                           engine: str | IOEngine | None = None) -> tuple:
+        """Execute a :class:`~repro.serve.coalesce.SuperPlan`: ONE engine
+        gather over the merged byte spans, then scatter slices of the flat
+        fetch buffer into every member's output array (no further I/O).
+
+        Returns ``(outs, fetch_stats, member_stats)`` — the per-member
+        arrays (region-shaped, same bytes as independent :meth:`read`
+        calls), the :class:`ReadStats` of the shared gather, and one
+        ``ReadStats`` per member whose structural fields come from the
+        member's own plan and whose ``seconds`` apportions the batch wall
+        time by payload bytes."""
+        t0 = time.perf_counter()
+        flat = np.empty(sp.fetch_bytes, dtype=np.uint8)
+        fetch = sp.fetch_plan()
+        _, fstats = self.read_planned(fetch, out=flat, engine=engine,
+                                      note_drift=False)
+        if outs is None:
+            outs = [np.empty(p.region.shape, p.dtype) for p in sp.members]
+        programs = sp.scatter_programs()
+        for plan, span_of, out, prog in zip(sp.members, sp.member_span,
+                                            outs, programs):
+            fl, ol, nb, fallback = prog
+            if len(fl) and out.flags.c_contiguous:
+                # coalesced fast path: whole-segment flat byte copies
+                dst = out.reshape(-1).view(np.uint8)
+                for i in range(len(fl)):
+                    o, f, n = int(ol[i]), int(fl[i]), int(nb[i])
+                    dst[o:o + n] = flat[f:f + n]
+                rows = fallback
+            else:
+                rows = range(plan.num_chunks)
+            if len(rows):
+                base = sp.span_out[span_of] - sp.span_lo[span_of]
+                for row in rows:
+                    lo = int(plan.file_lo[row] + base[row])
+                    hi = int(plan.file_hi[row] + base[row])
+                    scatter_row(plan, row, flat[lo:hi], out)
+        wall = time.perf_counter() - t0
+        fstats.probe_seconds += sp.probe_seconds
+        fstats.plan_seconds += sp.plan_seconds
+        total = max(1, sum(int(p.bytes_needed) for p in sp.members))
+        member_stats = []
+        for plan in sp.members:
+            st = ReadStats(seconds=wall * plan.bytes_needed / total,
+                           bytes_read=plan.bytes_needed,
+                           chunks_touched=plan.num_chunks, runs=plan.runs,
+                           groups=plan.num_groups,
+                           engine=fstats.engine,
+                           engine_reason=fstats.engine_reason)
+            member_stats.append(st)
+        return outs, fstats, member_stats
+
     def read(self, var: str, region: Block,
              candidates: np.ndarray | None = None,
              engine: str | IOEngine | None = None) -> tuple:
@@ -561,12 +657,22 @@ def reorganize(src_dir: str, dst_dir: str, var: str,
     directory, seeding the decision when this dataset's own telemetry is
     thin (see :meth:`~repro.core.policy.LayoutPolicy.with_prior`).
 
+    With ``dst_dir == src_dir`` the reorganization happens **in place,
+    online**: the new layout's extents are appended past the live ones
+    (log-structured — existing extents never move), and the index is then
+    republished in one atomic replace with its generation bumped.  A
+    concurrent reader holds either the old index (whose extents are
+    intact) or the new one — never a torn mix — and generation-keyed plan
+    caches (the read service's) detect the commit and drop stale plans.
+    Records of *other* variables carry over unchanged.
+
     Returns ``(read_seconds, Dataset, WriteStats)`` — the returned session
     is open on the destination.
     """
     if isinstance(layout, str) and layout != "auto":
         raise ValueError(f"layout must be a LayoutPlan or 'auto', "
                          f"got {layout!r}")
+    in_place = os.path.abspath(src_dir) == os.path.abspath(dst_dir)
     # the source session's bulk chunk reads are mechanical, not an
     # application access pattern: keep them out of the telemetry
     src = Dataset.open(src_dir, engine=engine, telemetry=False)
@@ -587,7 +693,6 @@ def reorganize(src_dir: str, dst_dir: str, var: str,
                            block_id=i))
         data[i] = arr
     read_seconds = time.perf_counter() - t0
-    src.close()
     # rewrite with chunk==source identity
     ident = LayoutPlan(strategy=layout.strategy,
                        global_shape=layout.global_shape,
@@ -598,9 +703,34 @@ def reorganize(src_dir: str, dst_dir: str, var: str,
                        num_subfiles=layout.num_subfiles,
                        inter_process_moved=layout.inter_process_moved,
                        intra_node_moved=layout.intra_node_moved)
-    dst = Dataset.create(dst_dir, engine=engine)
-    wstats = dst.write(var, ident, src.index.var_dtype(var), data,
-                       align=align)
+    dtype = src.index.var_dtype(var)
+    if in_place:
+        # online in-place republish: the fresh index starts with only the
+        # OTHER variables' records (they don't move), the new extents are
+        # appended past the current cursor so live readers' old extents
+        # stay byte-identical, and write_planned's commit is the atomic
+        # index replace that flips readers to the new layout.
+        new_index = DatasetIndex(num_subfiles=src.index.num_subfiles,
+                                 attrs=dict(src.index.attrs),
+                                 generation=src.index.generation + 1)
+        for name, meta in src.index.variables.items():
+            if name != var:
+                new_index.variables[name] = dict(meta)
+        for rec in src.index.chunks:
+            if rec.var != var:
+                new_index.chunks.append(dataclasses.replace(rec))
+        with src._lock:
+            cursor = dict(src._cursor_dict())
+        src.close()
+        dst = Dataset(dst_dir, engine=engine, index=new_index)
+        dst._cursor = cursor                  # append past the live extents
+        wstats = dst.write(var, ident, dtype, data, align=align)
+    else:
+        src.close()
+        dst = Dataset.create(dst_dir, engine=engine)
+        # layout lineage: the destination supersedes the source's layout
+        dst.index.generation = src.index.generation + 1
+        wstats = dst.write(var, ident, dtype, data, align=align)
     if decision is not None:
         dst.index.attrs.setdefault("policy", {})[var] = decision.to_json()
         dst.flush()

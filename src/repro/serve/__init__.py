@@ -1,5 +1,32 @@
-from .engine import ServeEngine, make_decode_step, make_prefill_step
-from .kv_cache import cache_bytes, cache_spec_summary, flatten_cache
+"""Serving: batched generation (jax) and the multi-tenant read service.
 
-__all__ = ["ServeEngine", "make_decode_step", "make_prefill_step",
-           "cache_bytes", "cache_spec_summary", "flatten_cache"]
+Package attributes load lazily (PEP 562, mirroring
+:mod:`repro.distributed`): :mod:`repro.serve.engine` and
+:mod:`repro.serve.kv_cache` pull in jax, but the read service
+(:mod:`repro.serve.read_service` + :mod:`repro.serve.coalesce`) is pure
+stdlib+numpy — I/O-serving processes import it without paying for, or
+depending on, the accelerator stack.  Direct submodule imports
+(``from repro.serve import engine``) are unaffected.
+"""
+
+_ENGINE_NAMES = ("ServeEngine", "make_decode_step", "make_prefill_step")
+_KV_NAMES = ("cache_bytes", "cache_spec_summary", "flatten_cache")
+_SERVICE_NAMES = ("ReadService", "ServiceStats", "TenantStats")
+_COALESCE_NAMES = ("Request", "SuperPlan", "build_super_plan",
+                   "union_spans", "union_spans_naive")
+
+__all__ = list(_ENGINE_NAMES + _KV_NAMES + _SERVICE_NAMES + _COALESCE_NAMES)
+
+
+def __getattr__(name):
+    if name in _ENGINE_NAMES:
+        from . import engine as mod
+    elif name in _KV_NAMES:
+        from . import kv_cache as mod
+    elif name in _SERVICE_NAMES:
+        from . import read_service as mod
+    elif name in _COALESCE_NAMES:
+        from . import coalesce as mod
+    else:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(mod, name)

@@ -1,0 +1,392 @@
+"""Multi-tenant read service (ISSUE 7): coalesced results must stay
+byte-identical to independent ``Dataset.read`` calls under every engine;
+the vectorized request-merge must match a naive reference merger
+bit-for-bit; generation-keyed plan caches must drop on a concurrent
+reorganization commit (zero torn reads while racing one); and per-tenant
+telemetry must aggregate — never last-tenant-wins — into the layout
+policy's history."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import plan_layout, uniform_grid_blocks
+from repro.core.blocks import Block
+from repro.core.policy import LayoutPolicy
+from repro.io import Dataset, ENGINES, reorganize
+from repro.serve.coalesce import (Request, build_super_plan, union_spans,
+                                  union_spans_naive)
+from repro.serve.read_service import ReadService
+
+GLOBAL = (48, 48)
+BLOCK = (8, 8)
+
+
+def _build(dirpath, engine="pread", var="T"):
+    rng = np.random.default_rng(7)
+    blocks = uniform_grid_blocks(GLOBAL, BLOCK)
+    data = {b.block_id: rng.standard_normal(b.shape).astype(np.float32)
+            for b in blocks}
+    ref = np.zeros(GLOBAL, np.float32)
+    for b in blocks:
+        ref[b.slices()] = data[b.block_id]
+    plan = plan_layout("chunked", blocks, num_procs=4, global_shape=GLOBAL)
+    ds = Dataset.create(dirpath, engine=engine)
+    ds.write_planned(ds.plan_write(var, plan, np.float32), data)
+    ds.close()
+    return ref
+
+
+@pytest.fixture(scope="module")
+def world(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("svc") / "data")
+    ref = _build(d)
+    return d, ref
+
+
+# -- vectorized merge vs naive reference (property sweep) --------------------
+
+def test_union_spans_matches_naive_reference():
+    """Seeded random sweep: the vectorized interval union must be
+    bit-identical to the one-span-at-a-time reference on overlapping,
+    nested, adjacent, duplicate and multi-subfile inputs."""
+    rng = np.random.default_rng(42)
+    for trial in range(300):
+        n = int(rng.integers(0, 40))
+        subf = rng.integers(0, 4, size=n)
+        lo = rng.integers(0, 256, size=n)
+        hi = lo + rng.integers(1, 64, size=n)
+        got = union_spans(subf, lo, hi)
+        want = union_spans_naive(subf, lo, hi)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+        us, ul, uh = got
+        # structural invariants: sorted, disjoint with real gaps, covering
+        for k in range(1, len(ul)):
+            assert (us[k], ul[k]) > (us[k - 1], ul[k - 1])
+            if us[k] == us[k - 1]:
+                assert ul[k] > uh[k - 1]
+        for s, l, h in zip(subf, lo, hi):
+            m = (us == s) & (ul <= l) & (uh >= h)
+            assert m.any(), "input span not covered by the union"
+
+
+def test_union_spans_adjacency_and_boundaries():
+    # byte-adjacent spans merge ...
+    s, l, h = union_spans([0, 0], [0, 10], [10, 20])
+    assert len(l) == 1 and l[0] == 0 and h[0] == 20
+    # ... a one-byte gap does not ...
+    s, l, h = union_spans([0, 0], [0, 11], [10, 20])
+    assert len(l) == 2
+    # ... and subfile boundaries never merge, even at extreme offsets
+    s, l, h = union_spans([0, 1], [0, 0], [100, 100])
+    assert len(l) == 2 and list(s) == [0, 1]
+    s, l, h = union_spans([], [], [])
+    assert len(s) == 0
+
+
+# -- byte identity with independent reads, all engines -----------------------
+
+REGION_SETS = {
+    "overlapping": [Block((0, 0), (24, 48)), Block((12, 0), (36, 48)),
+                    Block((20, 8), (48, 40))],
+    "disjoint": [Block((0, 0), (16, 48)), Block((24, 0), (40, 48)),
+                 Block((40, 0), (48, 24))],
+    "adjacent": [Block((0, 0), (16, 48)), Block((16, 0), (32, 48)),
+                 Block((32, 0), (48, 48))],
+}
+
+
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+@pytest.mark.parametrize("kind", sorted(REGION_SETS))
+def test_coalesced_identical_to_independent(world, engine, kind):
+    d, ref = world
+    regions = REGION_SETS[kind]
+    checker = Dataset.open(d, engine=engine, telemetry=False)
+    ds = Dataset.open(d, engine=engine)
+    with ReadService(ds, window_s=0.02) as svc:
+        futs = [svc.submit(f"tenant{i}", "T", r)
+                for i, r in enumerate(regions)]
+        for r, f in zip(regions, futs):
+            arr, st = f.result(timeout=30)
+            want, _ = checker.read("T", r)
+            np.testing.assert_array_equal(arr, want)
+            np.testing.assert_array_equal(arr, ref[r.slices()])
+            assert st.bytes_read == want.nbytes
+    ds.close()
+    checker.close()
+
+
+def test_batch_front_door_order_and_identity(world):
+    d, ref = world
+    ds = Dataset.open(d, engine="pread")
+    reqs = [Request("a", "T", REGION_SETS["overlapping"][0]),
+            Request("b", "T", REGION_SETS["overlapping"][1]),
+            Request("a", "T", REGION_SETS["disjoint"][2])]
+    with ReadService(ds, window_s=0.5) as svc:   # long window: flush beats it
+        t0 = time.perf_counter()
+        results = svc.read_batch(reqs)
+        assert time.perf_counter() - t0 < 0.5    # batch didn't wait the window
+    for req, (arr, _) in zip(reqs, results):
+        np.testing.assert_array_equal(arr, ref[req.region.slices()])
+    ds.close()
+
+
+# -- one probe, one gather, plan cache ---------------------------------------
+
+def test_super_plan_one_gather_and_cache_hits(world):
+    d, ref = world
+    ds = Dataset.open(d, engine="pread")
+    regions = REGION_SETS["overlapping"]
+    reqs = [Request(f"t{i}", "T", r) for i, r in enumerate(regions)]
+    with ReadService(ds, window_s=0.0) as svc:
+        svc.read_batch(reqs)
+        assert svc.stats.super_plans == 1        # one shared gather
+        assert svc.stats.cache_misses == 1 and svc.stats.cache_hits == 0
+        # overlap folds: the shared gather moves fewer bytes than the
+        # members' payloads sum to
+        assert svc.stats.fetch_bytes < svc.stats.bytes_served
+        svc.read_batch(reqs)
+        assert svc.stats.cache_hits == 1         # same batch -> cached plan
+        assert svc.stats.super_plans == 2
+    ds.close()
+
+
+def test_super_plan_construction_shape(world):
+    d, _ = world
+    ds = Dataset.open(d, telemetry=False)
+    sp = build_super_plan(ds.index, "T", REGION_SETS["overlapping"])
+    assert sp.num_members == 3
+    assert sp.payload_bytes == sum(p.bytes_needed for p in sp.members)
+    assert sp.fetch_bytes <= sp.payload_bytes    # overlap deduplicated
+    fetch = sp.fetch_plan()
+    assert fetch.bytes_needed == sp.fetch_bytes
+    assert fetch.num_groups == sp.num_spans      # one transfer per span
+    # every member row maps to the span that contains its bytes
+    for plan, span_of in zip(sp.members, sp.member_span):
+        for row in range(plan.num_chunks):
+            k = int(span_of[row])
+            assert sp.span_subfiles[k] == plan.subfiles[row]
+            assert sp.span_lo[k] <= plan.file_lo[row]
+            assert sp.span_hi[k] >= plan.file_hi[row]
+    # a region intersecting nothing still plans (empty member)
+    sp = build_super_plan(ds.index, "T", [Block((0, 0), (1, 1)),
+                                          Block((47, 47), (48, 48))])
+    assert sp.num_members == 2 and sp.fetch_bytes > 0
+    ds.close()
+
+
+# -- window, admission control, fairness -------------------------------------
+
+def test_window_coalesces_concurrent_submits(world):
+    d, ref = world
+    ds = Dataset.open(d, engine="pread")
+    with ReadService(ds, window_s=0.25) as svc:
+        futs = [svc.submit(f"t{i % 3}", "T", REGION_SETS["overlapping"][i % 3])
+                for i in range(6)]
+        for f in futs:
+            f.result(timeout=30)
+        assert svc.stats.batches == 1            # all six landed in one window
+        assert svc.stats.requests == 6
+        assert svc.tenant_stats("t0").coalesced == 2
+    ds.close()
+
+
+def test_admission_control_bounds_batch_bytes(world):
+    d, ref = world
+    region = Block((0, 0), (16, 48))             # 3072 bytes
+    ds = Dataset.open(d, engine="pread")
+    with ReadService(ds, window_s=0.01,
+                     max_inflight_bytes=4000) as svc:  # < 2 regions
+        futs = [svc.submit("t", "T", region) for _ in range(5)]
+        for f in futs:
+            arr, _ = f.result(timeout=30)
+            np.testing.assert_array_equal(arr, ref[region.slices()])
+        assert svc.stats.batches >= 5            # one request admitted each
+        assert svc.stats.deferred > 0
+    ds.close()
+
+
+def test_round_robin_fairness_across_tenants(world):
+    """A tenant with one queued request lands in the first batch even when
+    another tenant queued many ahead of it."""
+    d, _ = world
+    region = Block((0, 0), (8, 48))
+    ds = Dataset.open(d, engine="pread")
+    order, lock = [], threading.Lock()
+
+    def tag(name):
+        def cb(_fut):
+            with lock:
+                order.append(name)
+        return cb
+
+    with ReadService(ds, window_s=0.25, max_batch=2) as svc:
+        for i in range(6):
+            svc.submit("chatty", "T", region).add_done_callback(tag("chatty"))
+        fb = svc.submit("quiet", "T", region)
+        fb.add_done_callback(tag("quiet"))
+        fb.result(timeout=30)
+        assert svc.stats.batches >= 1
+    assert "quiet" in order[:2], f"quiet tenant starved: {order}"
+    ds.close()
+
+
+def test_closed_service_rejects_and_drains(world):
+    d, ref = world
+    region = Block((0, 0), (8, 48))
+    ds = Dataset.open(d, engine="pread")
+    svc = ReadService(ds, window_s=5.0)          # window close() must beat
+    fut = svc.submit("t", "T", region)
+    svc.close()
+    arr, _ = fut.result(timeout=5)               # drained, not dropped
+    np.testing.assert_array_equal(arr, ref[region.slices()])
+    with pytest.raises(RuntimeError):
+        svc.submit("t", "T", region)
+    svc.close()                                  # idempotent
+    ds.close()
+
+
+# -- generation invalidation + racing reorganization -------------------------
+
+def _reorg_layout(scheme):
+    blocks = uniform_grid_blocks(GLOBAL, BLOCK)
+    return plan_layout("reorganized", blocks, num_procs=4,
+                       global_shape=GLOBAL, reorg_scheme=scheme)
+
+
+def test_generation_invalidates_cached_plans(tmp_path):
+    d = str(tmp_path / "data")
+    ref = _build(d)
+    region = Block((4, 4), (40, 40))
+    ds = Dataset.open(d, engine="pread")
+    with ReadService(ds, window_s=0.0) as svc:
+        svc.read_batch([Request("t", "T", region)])
+        svc.read_batch([Request("t", "T", region)])
+        assert svc.stats.cache_hits == 1
+        gen0 = ds.generation
+        _, dst, _ = reorganize(d, d, "T", _reorg_layout((4, 4)),
+                               engine="pread")
+        dst.close()
+        arr, _ = svc.read_batch([Request("t", "T", region)])[0]
+        np.testing.assert_array_equal(arr, ref[region.slices()])
+        assert ds.generation == gen0 + 1         # service saw the republish
+        assert svc.stats.refreshes >= 1
+        assert svc.stats.invalidations >= 1      # stale plans were dropped
+        svc.read_batch([Request("t", "T", region)])
+        assert svc.stats.cache_hits == 2         # new-generation plan caches
+    ds.close()
+
+
+def test_zero_torn_reads_racing_inplace_reorg(tmp_path):
+    """Readers hammer the service while in-place reorganizations commit
+    under them: every single result must be byte-identical to the
+    reference — a torn read (stale plan against relocated extents) fails
+    the equality, not just a flag."""
+    d = str(tmp_path / "data")
+    ref = _build(d)
+    regions = [Block((0, 0), (24, 48)), Block((12, 12), (44, 44)),
+               Block((30, 0), (48, 48))]
+    ds = Dataset.open(d, engine="pread")
+    stop = threading.Event()
+    failures, served = [], [0]
+
+    def hammer():
+        i = 0
+        while not stop.is_set():
+            r = regions[i % len(regions)]
+            arr, _ = ds_svc.read_batch([Request("t", "T", r)])[0]
+            if not np.array_equal(arr, ref[r.slices()]):
+                failures.append(i)
+            served[0] += 1
+            i += 1
+
+    with ReadService(ds, window_s=0.0) as ds_svc:
+        t = threading.Thread(target=hammer)
+        t.start()
+        for k, scheme in enumerate([(4, 4), (2, 8), (8, 2)]):
+            _, dst, _ = reorganize(d, d, "T", _reorg_layout(scheme),
+                                   engine="pread")
+            dst.close()
+        time.sleep(0.2)
+        stop.set()
+        t.join(timeout=30)
+        assert not t.is_alive()
+        assert not failures, f"torn reads at iterations {failures}"
+        assert served[0] > 3
+        assert ds_svc.stats.invalidations >= 1
+    ds.refresh()
+    assert ds.generation == 3
+    ds.close()
+
+
+def test_service_racing_distributed_reorganize(tmp_path):
+    """Serving the source while a crash-safe fleet reorganizes it: reads
+    stay byte-identical throughout, and the committed destination carries
+    the bumped generation so a service over it starts from fresh plans."""
+    from repro.distributed.reorg import distributed_reorganize
+
+    src = str(tmp_path / "src")
+    dst = str(tmp_path / "dst")
+    ref = _build(src)
+    region = Block((6, 6), (42, 42))
+    ds = Dataset.open(src, engine="pread")
+    stop = threading.Event()
+    failures = []
+
+    def hammer():
+        while not stop.is_set():
+            arr, _ = svc.read_batch([Request("t", "T", region)])[0]
+            if not np.array_equal(arr, ref[region.slices()]):
+                failures.append(1)
+
+    with ReadService(ds, window_s=0.0) as svc:
+        t = threading.Thread(target=hammer)
+        t.start()
+        dst_ds, info = distributed_reorganize(
+            src, dst, "T", _reorg_layout((4, 4)), engine="pread",
+            num_workers=2)
+        stop.set()
+        t.join(timeout=30)
+        assert not failures, "reads torn while the fleet ran"
+    assert dst_ds.index.generation == ds.generation + 1
+    arr, _ = dst_ds.read("T", Block((0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+    with ReadService(dst_ds, window_s=0.0) as svc2:
+        arr, _ = svc2.read_batch([Request("t", "T", region)])[0]
+        np.testing.assert_array_equal(arr, ref[region.slices()])
+    dst_ds.close()
+    ds.close()
+
+
+# -- per-tenant telemetry feeding the layout policy --------------------------
+
+def test_tenant_tagged_telemetry_aggregates(tmp_path):
+    d = str(tmp_path / "data")
+    _build(d)
+    ds = Dataset.open(d, engine="pread")
+    slab = Block((0, 0), (8, 48))                # tenant A: slabs
+    column = Block((0, 0), (48, 8))              # tenant B: columns
+    with ReadService(ds, window_s=0.0) as svc:
+        for _ in range(4):
+            svc.read_batch([Request("A", "T", slab)])
+            svc.read_batch([Request("B", "T", column)])
+    ds.close()
+
+    log = Dataset.open(d, telemetry=False).access_log
+    assert len(log.records(tenant="A")) == 4
+    assert len(log.records(tenant="B")) == 4
+    # the AGGREGATE mix — both tenants' traffic — is what the policy
+    # scores; one tenant's records never overwrite another's
+    pol = LayoutPolicy.for_dataset(d)
+    tenants = {r.tenant for r in pol.records()}
+    assert {"A", "B"} <= tenants
+    assert len(pol.records_for("T", 2)) == 8
+
+    # per-tenant slices stay exportable as cross-run priors
+    pa = log.export_prior(path=str(tmp_path / "prior_a.json"), tenant="A")
+    import json
+    recs = json.load(open(pa))["records"]
+    assert len(recs) == 4 and all(r.get("tn") == "A" for r in recs)
