@@ -1,0 +1,167 @@
+"""Replay the committed trace corpus through the real I/O stack (ISSUE 8).
+
+``python -m benchmarks.replay [filter ...]`` replays every trace under
+``traces/`` whose name contains a filter substring (default: all; under
+``BENCH_SMOKE=1`` only the CI pair).  Per scenario:
+
+1. **byte correctness** — every replayed read is oracle-checked inside
+   :func:`~repro.io.replay.replay_trace` (raises on divergence);
+2. **determinism** — each trace is replayed twice; the two runs' digests
+   (read bytes + policy decision audits + final index chunk tables) must
+   be identical;
+3. **policy regression gate** — for scenarios whose header names a
+   ``gate_var``: the replayed dataset already carries the layout the
+   policy chose from the replayed telemetry; the gate reorganizes the
+   same variable into a matrix of static contrast layouts, measures the
+   trace's own recorded read mix (weighted by occurrence, best-of-3) on
+   every candidate, and asserts the policy choice is within
+   ``GATE_TOLERANCE`` of the measured best.
+
+The exit contract matches ``benchmarks.run``: any assertion failure
+propagates (CI leg fails); an empty filter match raises.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+from repro.core.blocks import Block
+from repro.core.cost_model import FALLBACK_CALIBRATION
+from repro.core.layouts import plan_layout
+from repro.io import Dataset, load_trace, replay_trace, reorganize
+
+from .common import TmpDir, emit
+from .trace_scenarios import CI_SCENARIOS, TRACES_DIR
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+
+#: policy choice must be within 10% of the measured best candidate (the
+#: absolute epsilon absorbs scheduler jitter on microsecond-scale reads)
+GATE_TOLERANCE = 1.10
+GATE_EPSILON_S = 50e-6
+GATE_REPEATS = 3
+
+#: static contrast layouts the gate measures against the policy choice:
+#: the pre-policy cubic default, slab and pencil splits along each axis
+_GATE_SCHEMES_3D = ((4, 4, 4), (1, 1, 8), (8, 1, 1), (1, 4, 4))
+
+
+def _corpus(filters=None) -> list:
+    """(name, path) for every committed trace matching the filters."""
+    names = sorted(os.path.splitext(f)[0] for f in os.listdir(TRACES_DIR)
+                   if f.endswith(".jsonl"))
+    if SMOKE and not filters:
+        names = [n for n in names if n in CI_SCENARIOS]
+    if filters:
+        names = [n for n in names
+                 if any(f in n for f in filters)]
+    if not names:
+        raise AssertionError(f"no committed trace matches {filters!r} "
+                             f"under {TRACES_DIR}")
+    return [(n, os.path.join(TRACES_DIR, f"{n}.jsonl")) for n in names]
+
+
+def _source_blocks(ds: Dataset, var: str) -> list:
+    rows = ds.index.var_rows(var)
+    return [Block(tuple(int(v) for v in rows.los[i]),
+                  tuple(int(v) for v in rows.his[i]),
+                  owner=int(rows.subfiles[i]) % 8, block_id=i)
+            for i in range(rows.n)]
+
+
+def _measure_mix(ds: Dataset, var: str, mix: dict,
+                 repeats: int = GATE_REPEATS) -> float:
+    """Weighted best-of-``repeats`` read seconds over the trace's own
+    recorded region mix."""
+    total = 0.0
+    for (lo, hi), count in sorted(mix.items()):
+        region = Block(lo, hi)
+        best = None
+        for _ in range(repeats):
+            _, st = ds.read(var, region)
+            best = st.seconds if best is None else min(best, st.seconds)
+        total += count * best
+    return total
+
+
+def _policy_gate(name: str, trace, result, tmp: TmpDir) -> None:
+    """Measure the replayed policy choice against static contrast layouts
+    on the trace's own read mix."""
+    var = trace.header.attrs.get("gate_var")
+    if not var:
+        return
+    mix = trace.read_mix().get(var)
+    if not mix:
+        raise AssertionError(f"{name}: gate_var={var!r} but the trace "
+                             f"records no reads of it")
+    ds = Dataset.open(result.data_dir, engine="memmap",
+                      calibration=FALLBACK_CALIBRATION, telemetry=False)
+    shape = ds.index.var_shape(var)
+    blocks = _source_blocks(ds, var)
+    sessions = {"policy": ds}
+    for scheme in _GATE_SCHEMES_3D:
+        if len(scheme) != len(shape):
+            continue
+        label = "x".join(map(str, scheme))
+        lay = plan_layout("reorganized", blocks, num_procs=8,
+                          global_shape=shape, reorg_scheme=scheme,
+                          num_stagers=2)
+        _, cand, _ = reorganize(result.data_dir,
+                                tmp.sub(f"{name}_gate_{label}"), var, lay,
+                                engine="memmap")
+        sessions[label] = cand
+    for s in sessions.values():                      # warm-up pass
+        _measure_mix(s, var, mix, repeats=1)
+    measured = {}
+    for label, s in sessions.items():                # measured pass
+        measured[label] = _measure_mix(s, var, mix)
+        if s is not ds:
+            s.close()
+    ds.close()
+    best_label = min(measured, key=lambda k: measured[k])
+    best = measured[best_label]
+    ratio = measured["policy"] / max(best, 1e-12)
+    emit(f"replay/{name}/gate", measured["policy"] * 1e6,
+         f"var={var};best={best_label}({best * 1e6:.0f}us);"
+         f"ratio={ratio:.3f}")
+    assert measured["policy"] <= best * GATE_TOLERANCE + GATE_EPSILON_S, \
+        f"{name}: policy layout {measured['policy']:.6f}s regressed " \
+        f">{GATE_TOLERANCE:.2f}x vs best candidate {best_label} " \
+        f"({best:.6f}s) on the trace's own read mix"
+
+
+def _replay_one(name: str, path: str, tmp: TmpDir) -> None:
+    trace = load_trace(path)
+    t0 = time.perf_counter()
+    r1 = replay_trace(trace, tmp.sub(f"{name}_a"))
+    wall = time.perf_counter() - t0
+    r2 = replay_trace(trace, tmp.sub(f"{name}_b"))
+    assert r1.digest == r2.digest, \
+        f"{name}: replay is not deterministic " \
+        f"({r1.digest[:16]} != {r2.digest[:16]})"
+    emit(f"replay/{name}", wall * 1e6,
+         f"events={r1.events};bytes_verified={r1.bytes_verified};"
+         f"digest={r1.digest[:12]}")
+    _policy_gate(name, trace, r1, tmp)
+
+
+def run(tmp: TmpDir, filters=None) -> None:
+    for name, path in _corpus(filters):
+        _replay_one(name, path, tmp)
+
+
+def main(argv=None) -> int:
+    args = sys.argv[1:] if argv is None else argv
+    print("name,us_per_call,derived")
+    tmp = TmpDir(prefix="repro_replay_")
+    try:
+        run(tmp, filters=args or None)
+    finally:
+        tmp.cleanup()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

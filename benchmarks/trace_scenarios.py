@@ -1,0 +1,308 @@
+"""Workload trace corpus generators (ISSUE 8).
+
+Each builder runs a *real* workload — seed writes, slab/decomposed/pattern
+reads, served multi-tenant batches, staging submits, checkpoint
+save/restore storms, online reorganizations — inside a scratch directory
+with a :class:`~repro.io.trace.TraceRecorder` attached, and journals the
+resulting trace to ``traces/<name>.jsonl``.  The committed corpus is what
+``tests/test_replay.py`` and the CI ``replay`` job replay and gate.
+
+Regenerate with ``python -m benchmarks.trace_scenarios [name ...]`` (no
+names: all scenarios).  Regeneration keeps the event *sequence* stable
+(everything that replay verifies); only the measured ``seconds`` fields —
+which replay deliberately ignores — differ run to run.
+
+Scenario roster:
+
+* ``pic_slab_small`` / ``pic_slab_large`` — PIC post-hoc analysis motif:
+  a 3-D mesh variable written ``subfiled_fpp``, a slab-dominated read mix
+  (thin ``plane_xy`` slices + sub-domains + decomposed and pattern
+  reads), one online in-place ``layout="auto"`` reorganization
+  mid-stream, post-reorg reads.  ``attrs["gate_var"]`` marks the variable
+  the policy regression gate scores.
+* ``serve_paged_small`` — serving motif: four tenants page through a KV
+  block via :class:`~repro.serve.read_service.ReadService` batches,
+  an auto reorg between paging waves.
+* ``restore_storm_small`` — elastic restart storm: checkpoint saves at
+  ``strategy="auto"`` followed by full and re-decomposed restores.
+* ``mixed_rw_small`` — reader/writer contention: slab reads interleaved
+  with fresh-variable writes and staging submits.
+* ``dims_small`` / ``dims_large`` — 1-D through 4-D variables (halves,
+  interior boxes, full scans, decomposed reads) at two scales.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+
+import numpy as np
+
+from repro.core.blocks import Block, uniform_grid_blocks
+from repro.core.layouts import plan_layout
+from repro.io import Dataset, StagingExecutor, TraceRecorder, \
+    header_for_dataset, reorganize
+from repro.io.trace import TraceHeader
+from repro.serve.coalesce import Request
+from repro.serve.read_service import ReadService
+
+__all__ = ["CI_SCENARIOS", "SCENARIOS", "TRACES_DIR", "generate"]
+
+TRACES_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "traces")
+
+#: the two cheapest scenarios — what the CI ``replay`` job (BENCH_SMOKE=1)
+#: replays and gates on every push
+CI_SCENARIOS = ("pic_slab_small", "serve_paged_small")
+
+
+def _grid_layout(strategy: str, global_shape, block_shape, num_procs: int,
+                 **kw):
+    blocks = [b.with_owner(i % num_procs) for i, b in
+              enumerate(uniform_grid_blocks(global_shape, block_shape))]
+    return plan_layout(strategy, blocks, num_procs=num_procs,
+                       global_shape=global_shape, **kw)
+
+
+def _write(ds: Dataset, var: str, layout, arr: np.ndarray) -> None:
+    ds.write(var, layout, arr.dtype,
+             {cp.chunk.block_id: arr[cp.chunk.slices()]
+              for cp in layout.chunks})
+
+
+def _synth(seed: int, shape, dtype=np.float32) -> np.ndarray:
+    return np.random.default_rng(seed).standard_normal(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# scenario builders: each captures one trace into ``path``
+# ---------------------------------------------------------------------------
+
+def _pic_slab(path: str, work: str, *, n: int, block: int, thick: int,
+              seed: int, name: str) -> None:
+    """Slab-dominated PIC analysis mix over an ``n``^3 mesh variable."""
+    src = os.path.join(work, "src")
+    ds = Dataset.create(src, engine="memmap")
+    layout = _grid_layout("subfiled_fpp", (n, n, n), (block, block, block),
+                          num_procs=8)
+    _write(ds, "T", layout, _synth(seed, (n, n, n)))
+    rec = TraceRecorder(path, header_for_dataset(
+        ds, name=name, seed=seed, attrs={"gate_var": "T"}))
+    ds.attach_trace(rec)
+    # the skewed mix the policy should reorganize for: 8 thin z-slabs per
+    # 2 interior boxes, repeated — plus decomposed + pattern reads
+    q = n // 4
+    for r in range(2):
+        for z in range(0, n, max(thick, n // 8)):
+            ds.read("T", Block((0, 0, z), (n, n, min(n, z + thick))))
+        ds.read("T", Block((q, q, q), (3 * q, 3 * q, 3 * q)))
+        ds.read_decomposed("T", Block((0, 0, 0), (n, n, n)), (2, 2, 1))
+        ds.read_pattern("T", "plane_xy", num_readers=2,
+                        slab_thickness=thick)
+    # online in-place reorganization mid-stream, then keep reading
+    reorganize(src, src, "T", "auto", engine="memmap", trace=rec)
+    ds.refresh()
+    for z in range(0, n, max(thick, n // 4)):
+        ds.read("T", Block((0, 0, z), (n, n, min(n, z + thick))))
+    ds.read("T", Block((0, 0, 0), (q, q, q)))
+    ds.detach_trace()
+    ds.close()
+    rec.close()
+
+
+def pic_slab_small(path: str, work: str) -> None:
+    _pic_slab(path, work, n=48, block=16, thick=6, seed=1301,
+              name="pic_slab_small")
+
+
+def pic_slab_large(path: str, work: str) -> None:
+    _pic_slab(path, work, n=96, block=24, thick=12, seed=1302,
+              name="pic_slab_large")
+
+
+def serve_paged_small(path: str, work: str) -> None:
+    """Four tenants page through a KV block via the read service."""
+    src = os.path.join(work, "src")
+    shape = (8, 256, 32)
+    ds = Dataset.create(src, engine="memmap")
+    layout = _grid_layout("subfiled_fpp", shape, (8, 32, 32), num_procs=4)
+    _write(ds, "kv", layout, _synth(1401, shape))
+    rec = TraceRecorder(path, header_for_dataset(
+        ds, name="serve_paged_small", seed=1401,
+        attrs={"gate_var": "kv"}))
+    ds.attach_trace(rec)
+    tenants = [f"tenant_{i}" for i in range(4)]
+    page = 32
+
+    def wave(svc):
+        for start in range(0, shape[1], page):
+            svc.read_batch([
+                Request(t, "kv",
+                        Block((0, start, 0), (8, start + page, 32)))
+                for t in tenants])
+
+    with ReadService(ds, engine="memmap") as svc:
+        wave(svc)
+        # a hot row every tenant re-reads (coalescing motif)
+        svc.read_batch([Request(t, "kv", Block((0, 0, 0), (8, page, 32)))
+                        for t in tenants])
+    reorganize(src, src, "kv", "auto", engine="memmap", trace=rec)
+    ds.refresh()
+    with ReadService(ds, engine="memmap") as svc:
+        wave(svc)
+    ds.detach_trace()
+    ds.close()
+    rec.close()
+
+
+def restore_storm_small(path: str, work: str) -> None:
+    """Checkpoint saves at ``strategy="auto"`` + an elastic restore storm."""
+    from repro.checkpoint.manager import CheckpointManager
+    rec = TraceRecorder(path, TraceHeader(name="restore_storm_small",
+                                          seed=1501))
+    mgr = CheckpointManager(os.path.join(work, "ckpt"), strategy="auto",
+                            keep=0, engine="memmap", auto_prior=False,
+                            trace=rec)
+    w = _synth(1501, (64, 32))
+    kv = _synth(1502, (8, 64, 16))
+    blocks = {
+        "w": [Block((0, 0), (32, 32), owner=0, block_id=0),
+              Block((32, 0), (64, 32), owner=1, block_id=1)],
+        "kv": [Block((0, 0, 0), (8, 32, 16), owner=0, block_id=0),
+               Block((0, 32, 0), (8, 64, 16), owner=1, block_id=1)],
+    }
+    for step in range(3):
+        mgr.save(step, {"w": w, "kv": kv, "step_no": np.int64(step)},
+                 block_map=blocks)
+        # the restore history auto saves learn from
+        if step:
+            mgr.restore(step - 1)
+    mgr.restore(2)                      # full restart
+    # the storm: three elastic configs re-decompose the same step
+    mgr.restore(2, target_blocks={
+        "w": [Block((0, 0), (64, 16), owner=0, block_id=0),
+              Block((0, 16), (64, 32), owner=1, block_id=1)]})
+    mgr.restore(2, target_blocks={
+        "w": [Block((16 * i, 0), (16 * (i + 1), 32), owner=i, block_id=i)
+              for i in range(4)],
+        "kv": [Block((0, 16 * i, 0), (8, 16 * (i + 1), 16),
+                     owner=i, block_id=i) for i in range(4)]})
+    mgr.restore(1)
+    rec.close()
+
+
+def mixed_rw_small(path: str, work: str) -> None:
+    """Readers and writers contending on one dataset + staging submits."""
+    src = os.path.join(work, "src")
+    n = 32
+    ds = Dataset.create(src, engine="memmap")
+    layout = _grid_layout("subfiled_fpp", (n, n, n), (16, 16, 16),
+                          num_procs=8)
+    _write(ds, "T", layout, _synth(1601, (n, n, n)))
+    rec = TraceRecorder(path, header_for_dataset(
+        ds, name="mixed_rw_small", seed=1601))
+    ds.attach_trace(rec)
+    stg = StagingExecutor(os.path.join(work, "stage"), num_workers=1,
+                          engine="memmap", trace=rec)
+    for r in range(3):
+        ds.read("T", Block((0, 0, 8 * r), (n, n, 8 * r + 8)))
+        aux = _synth(1602 + r, (16, 64))
+        alay = _grid_layout("chunked", (16, 64), (8, 64), num_procs=2)
+        _write(ds, f"aux_{r}", alay, aux)
+        ds.read(f"aux_{r}", Block((0, 0), (16, 64)))
+        field = _synth(1610 + r, (24, 24))
+        flay = _grid_layout("merged_process", (24, 24), (12, 24),
+                            num_procs=2)
+        stg.submit(r, "field", np.float32, flay,
+                   {cp.chunk.block_id: field[cp.chunk.slices()]
+                    for cp in flay.chunks})
+    stg.drain()
+    stg.close()
+    ds.read("T", Block((0, 0, 0), (n, n, n)))
+    ds.detach_trace()
+    ds.close()
+    rec.close()
+
+
+def _dims(path: str, work: str, *, scale: int, seed: int,
+          name: str) -> None:
+    """1-D through 4-D variables: halves, interior boxes, full scans,
+    decomposed reads.  ``scale`` doubles every axis for the large cut."""
+    src = os.path.join(work, "src")
+    ds = Dataset.create(src, engine="memmap")
+    s = scale
+    specs = {
+        "d1": ((2048 * s,), (256 * s,), (4,)),
+        "d2": ((128 * s, 128 * s), (32 * s, 32 * s), (2, 2)),
+        "d3": ((32 * s, 32 * s, 32 * s), (16 * s, 16 * s, 16 * s),
+               (2, 2, 1)),
+        "d4": ((8 * s, 8 * s, 8 * s, 8 * s), (4 * s, 4 * s, 4 * s, 4 * s),
+               (1, 2, 2, 1)),
+    }
+    for i, (var, (shape, block, _scheme)) in enumerate(specs.items()):
+        _write(ds, var, _grid_layout("subfiled_fpp", shape, block,
+                                     num_procs=4),
+               _synth(seed + i, shape))
+    rec = TraceRecorder(path, header_for_dataset(ds, name=name, seed=seed))
+    ds.attach_trace(rec)
+    for var, (shape, _block, scheme) in specs.items():
+        nd = len(shape)
+        half = tuple(d // 2 for d in shape)
+        ds.read(var, Block((0,) * nd, half))                   # low half
+        ds.read(var, Block(half, shape))                       # high half
+        ds.read(var, Block(tuple(d // 4 for d in shape),       # interior
+                           tuple(3 * d // 4 for d in shape)))
+        ds.read(var, Block((0,) * nd, shape))                  # full scan
+        ds.read_decomposed(var, Block((0,) * nd, shape), scheme)
+    ds.read_pattern("d3", "plane_xy", num_readers=2)
+    ds.detach_trace()
+    ds.close()
+    rec.close()
+
+
+def dims_small(path: str, work: str) -> None:
+    _dims(path, work, scale=1, seed=1701, name="dims_small")
+
+
+def dims_large(path: str, work: str) -> None:
+    _dims(path, work, scale=2, seed=1702, name="dims_large")
+
+
+SCENARIOS = {
+    "pic_slab_small": pic_slab_small,
+    "pic_slab_large": pic_slab_large,
+    "serve_paged_small": serve_paged_small,
+    "restore_storm_small": restore_storm_small,
+    "mixed_rw_small": mixed_rw_small,
+    "dims_small": dims_small,
+    "dims_large": dims_large,
+}
+
+
+def generate(names=None, traces_dir: str = TRACES_DIR) -> list:
+    """(Re)generate the named scenarios (default: all) into
+    ``traces_dir``; returns the written paths."""
+    names = list(names or SCENARIOS)
+    unknown = [n for n in names if n not in SCENARIOS]
+    if unknown:
+        raise SystemExit(f"unknown scenario(s) {unknown}; "
+                         f"known: {sorted(SCENARIOS)}")
+    os.makedirs(traces_dir, exist_ok=True)
+    out = []
+    for name in names:
+        path = os.path.join(traces_dir, f"{name}.jsonl")
+        work = tempfile.mkdtemp(prefix=f"trace_{name}_")
+        try:
+            SCENARIOS[name](path, work)
+        finally:
+            shutil.rmtree(work, ignore_errors=True)
+        print(f"{name}: {path} "
+              f"({sum(1 for _ in open(path)) - 1} events)")
+        out.append(path)
+    return out
+
+
+if __name__ == "__main__":
+    generate(sys.argv[1:] or None)

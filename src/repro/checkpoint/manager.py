@@ -84,7 +84,8 @@ class CheckpointManager:
                  keep: int = 3, reorg_scheme=None, align=None,
                  engine: str | IOEngine = "memmap",
                  policy: LayoutPolicy | None = None,
-                 prior: str | None = None, auto_prior: bool = True):
+                 prior: str | None = None, auto_prior: bool = True,
+                 clock=None, trace=None):
         self.root = root
         self.strategy = strategy
         self.devices_per_host = devices_per_host
@@ -93,6 +94,12 @@ class CheckpointManager:
         self.reorg_scheme = reorg_scheme
         self.align = align
         self.engine = engine
+        #: time source for restore-record stamping and the ``auto`` save
+        #: decision's recency reference (replay injects a deterministic
+        #: clock); ``trace`` journals every save/restore to an attached
+        #: :class:`~repro.io.trace.TraceRecorder`
+        self._clock = clock if clock is not None else time.time
+        self.trace = trace
         os.makedirs(root, exist_ok=True)
         #: restore-pattern history, shared across steps (checkpoint root);
         #: appends are batched — an elastic restore logs one record per
@@ -100,7 +107,7 @@ class CheckpointManager:
         #: at the end of every restore.  Every record carries the restore's
         #: engine decision and measured seconds (``RestoreStats`` feed), so
         #: ``strategy="auto"`` weighs expensive restore patterns harder.
-        self.access_log = AccessLog(root, flush_every=16)
+        self.access_log = AccessLog(root, flush_every=16, clock=clock)
         #: cross-run prior: a previous run's checkpoint root (or exported
         #: prior file) whose restore history seeds ``strategy="auto"``
         #: saves until this root has restore telemetry of its own
@@ -186,13 +193,14 @@ class CheckpointManager:
         d = self.step_dir(step)
         flat = flatten_pytree(tree)
         flat_sh = flatten_pytree(shardings) if shardings is not None else {}
-        ds = Dataset.create(d, engine=self.engine)
+        ds = Dataset.create(d, engine=self.engine, clock=self._clock)
         per_var = {}
         policy_info = {}
         total_bytes = 0
         n_chunks = 0
         n_blocks = 0
         scalars = {}
+        vars_meta = {}
         for name, arr in flat.items():
             arr = np.asarray(arr)
             tv = time.perf_counter()
@@ -210,12 +218,18 @@ class CheckpointManager:
                                 block_id=0)]
             hosts = max(b.owner for b in blocks) + 1
             data = {b.block_id: arr[b.slices()] for b in blocks}
+            vars_meta[name] = {
+                "shape": [int(s) for s in arr.shape],
+                "dtype": arr.dtype.name,
+                "blocks": [[[int(v) for v in b.lo], [int(v) for v in b.hi],
+                            int(b.owner), int(b.block_id)] for b in blocks]}
             if self.strategy == "auto":
                 # a save stages from memory: no gather term, only the
                 # write-side build cost vs the expected restore mix
                 decision = self.layout_policy(prior).choose_layout(
                     name, blocks, arr.shape, num_procs=hosts,
-                    procs_per_node=self.hosts_per_node, align=self.align)
+                    procs_per_node=self.hosts_per_node, align=self.align,
+                    now=self._clock())
                 plan = decision.layout
                 policy_info[name] = decision.to_json()
             else:
@@ -244,10 +258,17 @@ class CheckpointManager:
         with open(os.path.join(d, MANIFEST), "w") as f:
             json.dump(manifest, f)
         self._retain()
-        return SaveStats(step=step, seconds=time.perf_counter() - t0,
-                         bytes=total_bytes, num_chunks=n_chunks,
-                         num_original_blocks=n_blocks,
-                         per_var_seconds=per_var)
+        stats = SaveStats(step=step, seconds=time.perf_counter() - t0,
+                          bytes=total_bytes, num_chunks=n_chunks,
+                          num_original_blocks=n_blocks,
+                          per_var_seconds=per_var)
+        if self.trace is not None:
+            self.trace.record(
+                "ckpt_save", seconds=stats.seconds, nbytes=total_bytes,
+                step=int(step), strategy=self.strategy, vars=vars_meta,
+                scalars={k: v["dtype"] for k, v in scalars.items()},
+                align=self.align)
+        return stats
 
     def _retain(self) -> None:
         steps = self.steps()
@@ -303,6 +324,17 @@ class CheckpointManager:
         self.access_log.flush()
         for name, rec in manifest["scalars"].items():
             flat[name] = np.asarray(rec["value"], dtype=rec["dtype"])
+        if self.trace is not None:
+            targets = None
+            if target_blocks:
+                targets = {
+                    name: [[[int(v) for v in b.lo], [int(v) for v in b.hi],
+                            int(b.owner), int(b.block_id)] for b in blks]
+                    for name, blks in target_blocks.items()}
+            self.trace.record(
+                "ckpt_restore", seconds=agg.seconds, nbytes=agg.bytes_read,
+                engine=agg.engine, runs=agg.runs, groups=agg.groups,
+                step=int(step), targets=targets)
         if template is not None:
             return unflatten_like(template, flat), agg
         return flat, agg
@@ -314,7 +346,8 @@ class CheckpointManager:
         breaks a restore."""
         try:
             self.access_log.append(
-                AccessRecord.from_stats(name, "restore", region, shape, st))
+                AccessRecord.from_stats(name, "restore", region, shape, st,
+                                        ts=self._clock()))
         except Exception:               # noqa: BLE001 — telemetry only
             pass
 

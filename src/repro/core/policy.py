@@ -195,12 +195,15 @@ class AccessRecord:
     @classmethod
     def from_stats(cls, var: str, kind: str, region: Block,
                    global_shape: Sequence[int], stats,
-                   tenant: str = "") -> "AccessRecord":
+                   tenant: str = "", ts: float | None = None
+                   ) -> "AccessRecord":
         """Fingerprint one executed read: ``stats`` is any object with the
         ``ReadStats`` telemetry fields (runs/groups/bytes_read/seconds/
         predicted_seconds/engine) — the one constructor both the Dataset
         session and the checkpoint restore path record through.
-        ``tenant`` namespaces the record for multi-tenant serving."""
+        ``tenant`` namespaces the record for multi-tenant serving; ``ts``
+        pins the record time (replay drives a deterministic clock through
+        here — see :mod:`repro.io.replay`)."""
         return cls(var=var, kind=kind,
                    shape_class=classify_region(region, global_shape),
                    lo=tuple(int(v) for v in region.lo),
@@ -208,7 +211,9 @@ class AccessRecord:
                    runs=stats.runs, groups=stats.groups,
                    nbytes=stats.bytes_read, seconds=stats.seconds,
                    predicted_seconds=stats.predicted_seconds,
-                   engine=stats.engine, ts=time.time(), tenant=tenant)
+                   engine=stats.engine,
+                   ts=time.time() if ts is None else float(ts),
+                   tenant=tenant)
 
 
 class AccessLog:
@@ -231,11 +236,15 @@ class AccessLog:
 
     def __init__(self, dirpath: str, capacity: int = ACCESS_LOG_CAPACITY,
                  max_age_s: float = ACCESS_LOG_TTL_S,
-                 flush_every: int = 1):
+                 flush_every: int = 1, clock=None):
         self.dirpath = dirpath
         self.capacity = capacity
         self.max_age_s = max_age_s
         self.flush_every = max(1, flush_every)
+        #: time source for the load-time TTL; replay injects a
+        #: deterministic clock so records stamped against a fixed epoch
+        #: are not TTL-killed by the real wall clock
+        self.clock = clock if clock is not None else time.time
         self._pending: list = []
         self._lock = threading.Lock()
 
@@ -254,7 +263,7 @@ class AccessLog:
             recs = [AccessRecord.from_json(r) for r in payload["records"]]
         except (OSError, ValueError, TypeError, KeyError):
             return []
-        now = time.time()
+        now = self.clock()
         return [r for r in recs if 0 <= now - r.ts <= self.max_age_s]
 
     def _save(self, recs: list) -> None:
@@ -711,7 +720,8 @@ class LayoutPolicy:
                  include_write_cost: bool = True,
                  expected_reads: float | None = None,
                  half_life_s: float = ACCESS_RECENCY_HALF_LIFE_S,
-                 chunk_overhead_s: float | None = None):
+                 chunk_overhead_s: float | None = None,
+                 cost_weighting: bool = True):
         self.log = log
         self._records = list(records) if records is not None else None
         self.calibration = calibration or FALLBACK_CALIBRATION
@@ -720,6 +730,10 @@ class LayoutPolicy:
         self.include_write_cost = include_write_cost
         self.expected_reads = expected_reads
         self.half_life_s = half_life_s
+        #: weight records by measured cost (the default); ``False`` scores
+        #: pure frequency — trace replay pins this off so nondeterministic
+        #: wall times cannot perturb an otherwise deterministic decision
+        self.cost_weighting = cost_weighting
         #: learned per-chunk metadata/bookkeeping cost charged by lifecycle
         #: scoring; ``None`` falls back to the static
         #: :data:`~repro.core.cost_model.REORG_CHUNK_OVERHEAD_S`
@@ -728,14 +742,16 @@ class LayoutPolicy:
     @classmethod
     def for_dataset(cls, dirpath: str,
                     calibration: EngineCalibration | None = None,
-                    target_chunks: int = 64, **kwargs) -> "LayoutPolicy":
+                    target_chunks: int = 64, clock=None,
+                    **kwargs) -> "LayoutPolicy":
         """Policy over ``dirpath``'s own access log, predicting with its
         persisted calibration when one is fresh (no probe is triggered —
         policy evaluation stays I/O-free) and the per-chunk overhead
         *measured* by previous ``reorganize`` runs over this dataset
-        (``reorg_stats.json``) when one exists."""
+        (``reorg_stats.json``) when one exists.  ``clock`` threads a time
+        source into the log's TTL check (deterministic replay)."""
         kwargs.setdefault("chunk_overhead_s", load_reorg_overhead(dirpath))
-        return cls(log=AccessLog(dirpath),
+        return cls(log=AccessLog(dirpath, clock=clock),
                    calibration=calibration or load_calibration(dirpath),
                    target_chunks=target_chunks, **kwargs)
 
@@ -754,7 +770,8 @@ class LayoutPolicy:
                             include_write_cost=self.include_write_cost,
                             expected_reads=self.expected_reads,
                             half_life_s=self.half_life_s,
-                            chunk_overhead_s=self.chunk_overhead_s)
+                            chunk_overhead_s=self.chunk_overhead_s,
+                            cost_weighting=self.cost_weighting)
 
     # -- history -------------------------------------------------------------
     def records(self) -> list:
@@ -799,7 +816,7 @@ class LayoutPolicy:
         ts = np.asarray([r.ts for r in records], dtype=np.float64)
         w = 0.5 ** (np.clip(now - ts, 0.0, None) / max(self.half_life_s,
                                                        1e-9))
-        if with_cost:
+        if with_cost and self.cost_weighting:
             secs = np.asarray([r.seconds for r in records], dtype=np.float64)
             # square-root damping: an access 100x more expensive steers 10x
             # harder, not 100x — the candidate pricing already charges each

@@ -26,8 +26,13 @@ from .patterns import (drive_pattern_mix, measure_pattern_mix, normalize_mix,
 from .planner import (ReadPlan, WritePlan, build_read_plan, build_span_plan,
                       build_write_plan, linear_candidates, subset_write_plan)
 from .reader import Dataset, ReadStats, choose_reorg_layout, reorganize
+from .replay import REPLAY_EPOCH, ReplayClock, ReplayError, ReplayResult, \
+    replay_trace
 from .spatial import SpatialChunkIndex
 from .staging import StageResult, StagingExecutor
+from .trace import (TRACE_NAME, TRACE_VERSION, Trace, TraceCorruptError,
+                    TraceError, TraceEvent, TraceHeader, TraceRecorder,
+                    TraceSchemaError, header_for_dataset, load_trace)
 
 __all__ = [
     # container + metadata
@@ -49,4 +54,10 @@ __all__ = [
     # shared pattern helpers
     "resolve_pattern", "normalize_mix", "drive_pattern_mix",
     "measure_pattern_mix",
+    # workload traces: capture + replay
+    "TRACE_NAME", "TRACE_VERSION", "Trace", "TraceCorruptError",
+    "TraceError", "TraceEvent", "TraceHeader", "TraceRecorder",
+    "TraceSchemaError", "header_for_dataset", "load_trace",
+    "REPLAY_EPOCH", "ReplayClock", "ReplayError", "ReplayResult",
+    "replay_trace",
 ]

@@ -124,7 +124,7 @@ class Dataset:
     def __init__(self, dirpath: str, engine: str | IOEngine = "memmap", *,
                  create: bool = False, index: DatasetIndex | None = None,
                  calibration: EngineCalibration | None = None,
-                 telemetry: bool = True):
+                 telemetry: bool = True, clock=None):
         self.dirpath = dirpath
         self._auto = isinstance(engine, str) and engine == "auto"
         self._engine = None if self._auto else get_engine(engine)
@@ -135,6 +135,11 @@ class Dataset:
         self._drift = CalibrationDrift()
         self._drift_lock = threading.Lock()
         self._telemetry = telemetry
+        #: time source stamping access records (and the log's TTL check);
+        #: replay injects a deterministic clock so two replays of one
+        #: trace produce bit-identical telemetry
+        self._clock = clock if clock is not None else time.time
+        self._trace = None            # attached TraceRecorder, if capturing
         self._access_log: AccessLog | None = None
         self._index_stat = None
         if index is not None:
@@ -155,22 +160,22 @@ class Dataset:
     @classmethod
     def create(cls, dirpath: str, engine: str | IOEngine = "memmap",
                calibration: EngineCalibration | None = None,
-               telemetry: bool = True) -> "Dataset":
+               telemetry: bool = True, clock=None) -> "Dataset":
         """Start a new (empty) dataset. ``index.json`` is not written until
         the first successful :meth:`write_planned` commit."""
         return cls(dirpath, engine, create=True, calibration=calibration,
-                   telemetry=telemetry)
+                   telemetry=telemetry, clock=clock)
 
     @classmethod
     def open(cls, dirpath: str, engine: str | IOEngine = "memmap",
              calibration: EngineCalibration | None = None,
-             telemetry: bool = True) -> "Dataset":
+             telemetry: bool = True, clock=None) -> "Dataset":
         """Attach to an existing dataset directory.  ``telemetry=False``
         turns off access-log appends (mechanical bulk reads — e.g. the
         source side of :func:`reorganize` — must not pollute the pattern
         history the layout policy learns from)."""
         return cls(dirpath, engine, calibration=calibration,
-                   telemetry=telemetry)
+                   telemetry=telemetry, clock=clock)
 
     @property
     def engine(self) -> str:
@@ -234,23 +239,46 @@ class Dataset:
         not pay a full ring rewrite); :meth:`flush` / :meth:`close` drain
         the buffer."""
         if self._access_log is None:
-            self._access_log = AccessLog(self.dirpath, flush_every=8)
+            self._access_log = AccessLog(self.dirpath, flush_every=8,
+                                         clock=self._clock)
         return self._access_log
 
+    # -- trace capture -------------------------------------------------------
+    def attach_trace(self, recorder) -> None:
+        """Attach a :class:`~repro.io.trace.TraceRecorder`: every read
+        (plain / decomposed / pattern / served), write commit and — via
+        the explicit ``trace=`` parameters — staging submit, reorganize
+        and checkpoint op is journaled losslessly to its sidecar, on top
+        of (never instead of) the ring-bounded access log."""
+        self._trace = recorder
+
+    def detach_trace(self):
+        """Stop capturing; returns the recorder that was attached."""
+        rec, self._trace = self._trace, None
+        return rec
+
     def _record_access(self, var: str, region: Block, stats: "ReadStats",
-                       kind: str = "read", tenant: str = "") -> None:
+                       kind: str = "read", tenant: str = "",
+                       trace_kind: str | None = None,
+                       trace_params: dict | None = None) -> None:
         """Append one pattern fingerprint; telemetry never breaks a read.
         ``tenant`` namespaces the record (multi-tenant read service) — the
         aggregate mix still feeds the layout policy, but per-tenant slices
-        stay exportable via ``AccessLog.export_prior(tenant=...)``."""
+        stay exportable via ``AccessLog.export_prior(tenant=...)``.
+        ``trace_kind``/``trace_params`` name the event an attached trace
+        recorder journals (capture is lossless and schema-checked, so
+        unlike the ring append it raises on misuse)."""
         if not self._telemetry:
             return
         try:
             self.access_log.append(AccessRecord.from_stats(
                 var, kind, region, self.index.var_shape(var), stats,
-                tenant=tenant))
+                tenant=tenant, ts=self._clock()))
         except Exception:               # noqa: BLE001 — telemetry only
             pass
+        if self._trace is not None:
+            self._trace.record_read(trace_kind or kind, var, region, stats,
+                                    tenant=tenant, **(trace_params or {}))
 
     def _note_drift(self, choice: EngineChoice | None,
                     measured_seconds: float) -> None:
@@ -378,19 +406,22 @@ class Dataset:
                 self.flush()
 
         self._note_drift(choice, write_seconds)
-        return WriteStats(assemble_seconds=assemble_seconds,
-                          write_seconds=write_seconds,
-                          total_seconds=time.perf_counter() - t_start,
-                          bytes_written=int(plan.bytes_total),
-                          num_extents=plan.num_chunks,
-                          num_subfiles=len(plan.file_sizes),
-                          groups=plan.num_groups,
-                          plan_seconds=plan.plan_seconds,
-                          engine=choice.engine if choice else eng.name,
-                          engine_reason=choice.reason if choice
-                          else "pinned",
-                          predicted_seconds=choice.predicted_seconds
-                          if choice else 0.0)
+        wstats = WriteStats(assemble_seconds=assemble_seconds,
+                            write_seconds=write_seconds,
+                            total_seconds=time.perf_counter() - t_start,
+                            bytes_written=int(plan.bytes_total),
+                            num_extents=plan.num_chunks,
+                            num_subfiles=len(plan.file_sizes),
+                            groups=plan.num_groups,
+                            plan_seconds=plan.plan_seconds,
+                            engine=choice.engine if choice else eng.name,
+                            engine_reason=choice.reason if choice
+                            else "pinned",
+                            predicted_seconds=choice.predicted_seconds
+                            if choice else 0.0)
+        if self._trace is not None and plan.num_chunks:
+            self._trace.record_write("write", plan, wstats)
+        return wstats
 
     def write(self, var: str, layout: LayoutPlan, dtype,
               data: Mapping[int, np.ndarray], *,
@@ -504,7 +535,7 @@ class Dataset:
         plan = self.plan_read(var, region, candidates=candidates)
         arr, stats = self.read_planned(plan, engine=engine)
         stats.seconds += plan.probe_seconds + plan.plan_seconds
-        self._record_access(var, region, stats)
+        self._record_access(var, region, stats, trace_kind="read")
         return arr, stats
 
     def read_decomposed(self, var: str, region: Block,
@@ -550,7 +581,9 @@ class Dataset:
         for st in results:
             agg.merge(st)
         if log_access:
-            self._record_access(var, region, agg)
+            self._record_access(
+                var, region, agg, trace_kind="read_decomposed",
+                trace_params={"scheme": [int(k) for k in scheme]})
         return agg
 
     def read_pattern(self, var: str, pattern: str,
@@ -579,7 +612,12 @@ class Dataset:
         # the one shared index probe is attributed to the reported best;
         # the whole best-of-schemes sweep is ONE logical access pattern
         best[1].probe_seconds += probe_seconds
-        self._record_access(var, region, best[1])
+        trace_params = {"pattern": pattern, "num_readers": int(num_readers),
+                        "best_scheme": [int(k) for k in best[0]]}
+        if slab_thickness is not None:
+            trace_params["slab_thickness"] = int(slab_thickness)
+        self._record_access(var, region, best[1], trace_kind="read_pattern",
+                            trace_params=trace_params)
         return best
 
     # -- integrity -----------------------------------------------------------
@@ -607,7 +645,8 @@ def choose_reorg_layout(src: Dataset, var: str, *,
                         align: int | None = None,
                         policy: LayoutPolicy | None = None,
                         prior: str | None = None,
-                        expected_reads: float | None = None):
+                        expected_reads: float | None = None,
+                        now: float | None = None):
     """The ``layout="auto"`` decision both :func:`reorganize` and
     :func:`repro.distributed.reorg.distributed_reorganize` make: ask the
     source dataset's :class:`~repro.core.policy.LayoutPolicy` (its access
@@ -627,7 +666,7 @@ def choose_reorg_layout(src: Dataset, var: str, *,
     return pol.choose_layout(var, blocks, src.index.var_shape(var),
                              num_stagers=max(1, src.index.num_subfiles),
                              align=align, current_extents=rows,
-                             expected_reads=expected_reads)
+                             expected_reads=expected_reads, now=now)
 
 
 def reorganize(src_dir: str, dst_dir: str, var: str,
@@ -636,7 +675,9 @@ def reorganize(src_dir: str, dst_dir: str, var: str,
                align: int | None = None,
                policy: LayoutPolicy | None = None,
                prior: str | None = None,
-               expected_reads: float | None = None) -> tuple:
+               expected_reads: float | None = None,
+               now: float | None = None,
+               clock=None, trace=None) -> tuple:
     """Post-hoc reorganization (paper §5.1): pull each chunk region of the
     new ``layout`` from ``src_dir`` through the read planner and write the
     reorganized dataset to ``dst_dir`` through the write planner.
@@ -668,19 +709,31 @@ def reorganize(src_dir: str, dst_dir: str, var: str,
 
     Returns ``(read_seconds, Dataset, WriteStats)`` — the returned session
     is open on the destination.
+
+    ``now`` pins the policy's recency-decay reference time and ``clock``
+    the destination session's record stamping (deterministic replay);
+    ``trace`` journals one ``reorganize`` event — layout request, chosen
+    scheme, decision audit — to an attached
+    :class:`~repro.io.trace.TraceRecorder` after the commit.
     """
     if isinstance(layout, str) and layout != "auto":
         raise ValueError(f"layout must be a LayoutPlan or 'auto', "
                          f"got {layout!r}")
     in_place = os.path.abspath(src_dir) == os.path.abspath(dst_dir)
+    requested = layout if isinstance(layout, str) else {
+        "strategy": layout.strategy,
+        "chunks": [[[int(v) for v in c.chunk.lo],
+                    [int(v) for v in c.chunk.hi], int(c.subfile)]
+                   for c in layout.chunks]}
     # the source session's bulk chunk reads are mechanical, not an
     # application access pattern: keep them out of the telemetry
-    src = Dataset.open(src_dir, engine=engine, telemetry=False)
+    src = Dataset.open(src_dir, engine=engine, telemetry=False, clock=clock)
     decision = None
     if isinstance(layout, str):
         decision = choose_reorg_layout(src, var, align=align, policy=policy,
                                        prior=prior,
-                                       expected_reads=expected_reads)
+                                       expected_reads=expected_reads,
+                                       now=now)
         layout = decision.layout
     t0 = time.perf_counter()
     data = {}
@@ -722,12 +775,12 @@ def reorganize(src_dir: str, dst_dir: str, var: str,
         with src._lock:
             cursor = dict(src._cursor_dict())
         src.close()
-        dst = Dataset(dst_dir, engine=engine, index=new_index)
+        dst = Dataset(dst_dir, engine=engine, index=new_index, clock=clock)
         dst._cursor = cursor                  # append past the live extents
         wstats = dst.write(var, ident, dtype, data, align=align)
     else:
         src.close()
-        dst = Dataset.create(dst_dir, engine=engine)
+        dst = Dataset.create(dst_dir, engine=engine, clock=clock)
         # layout lineage: the destination supersedes the source's layout
         dst.index.generation = src.index.generation + 1
         wstats = dst.write(var, ident, dtype, data, align=align)
@@ -745,4 +798,13 @@ def reorganize(src_dir: str, dst_dir: str, var: str,
             src_dir,
             max(0.0, read_seconds - engine_seconds) / len(layout.chunks),
             num_chunks=len(layout.chunks))
+    if trace is not None:
+        trace.record(
+            "reorganize", var=var,
+            seconds=read_seconds + wstats.total_seconds,
+            engine=wstats.engine, nbytes=wstats.bytes_written,
+            dst="" if in_place else os.path.basename(
+                os.path.abspath(dst_dir)),
+            layout=requested, align=align,
+            decision=decision.to_json() if decision is not None else None)
     return read_seconds, dst, wstats

@@ -74,11 +74,16 @@ class StagingExecutor:
                  align: int | None = None,
                  engine: str | IOEngine = "auto",
                  policy: LayoutPolicy | None = None,
-                 prior: str | None = None):
+                 prior: str | None = None,
+                 trace=None, clock=None):
         self.dirpath = dirpath
         self.num_workers = num_workers
         self.link_gbps = link_gbps
         self.align = align
+        #: attached :class:`~repro.io.trace.TraceRecorder`: each
+        #: ``submit`` journals one ``stage_submit`` event (producer-side —
+        #: the requested layout, not the worker's wall time)
+        self.trace = trace
         #: layout decision-maker behind ``submit(..., plan="auto")``; by
         #: default a history-less policy (dimension-aware default scheme) —
         #: inject e.g. ``LayoutPolicy.for_dataset(prev_run_dir)`` to stage
@@ -89,7 +94,7 @@ class StagingExecutor:
         if prior is not None:
             self.policy = self.policy.with_prior(prior)
         self._decisions: dict = {}    # cache key -> PolicyDecision
-        self._ds = Dataset.create(dirpath, engine=engine)
+        self._ds = Dataset.create(dirpath, engine=engine, clock=clock)
         self._q: queue.Queue = queue.Queue(maxsize=queue_depth)
         self._results: list = []
         self._lock = threading.Lock()
@@ -157,6 +162,19 @@ class StagingExecutor:
         t1 = time.perf_counter()
         self._q.put((step, var, np.dtype(dtype), plan, staged, copy_s))
         stall = time.perf_counter() - t1
+        if self.trace is not None:
+            chunks = [[[int(v) for v in c.chunk.lo],
+                       [int(v) for v in c.chunk.hi], int(c.subfile)]
+                      for c in plan.chunks]
+            bbox = bounding_box([c.chunk for c in plan.chunks])
+            self.trace.record(
+                "stage_submit", var=var, region=bbox,
+                seconds=copy_s + stall,
+                nbytes=sum(v.nbytes for v in staged.values()),
+                step=int(step), chunks=chunks,
+                dtype=np.dtype(dtype).name,
+                global_shape=[int(s) for s in plan.global_shape],
+                strategy=plan.strategy)
         return stall
 
     def drain(self) -> list:

@@ -278,7 +278,8 @@ class ReadService:
             self.stats.bytes_served += sp.payload_bytes
         for p, out, st in zip(members, outs, member_stats):
             self._ds._record_access(var, p.request.region, st,
-                                    tenant=p.request.tenant)
+                                    tenant=p.request.tenant,
+                                    trace_kind="serve")
             with self._stats_lock:
                 ts = self.tenants.setdefault(p.request.tenant, TenantStats())
                 ts.requests += 1

@@ -1,0 +1,179 @@
+"""Trace replay (ISSUE 8): replaying one trace twice — under a pinned
+clock, pinned calibration and frequency-only record weighting — must
+produce identical read bytes, identical PolicyDecision audits and
+identical final index chunk tables (one digest covers all three), under
+every execution engine; a captured trace exported as a cross-run prior
+must warm a cold dataset to the same layout decision live telemetry
+produced; and the committed ``traces/`` corpus must replay clean."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.blocks import Block, uniform_grid_blocks
+from repro.core.cost_model import FALLBACK_CALIBRATION
+from repro.core.layouts import plan_layout
+from repro.core.policy import AccessLog, LayoutPolicy, load_prior_records
+from repro.io import (Dataset, TraceRecorder, header_for_dataset,
+                      load_trace, reorganize, replay_trace)
+
+TRACES_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "traces")
+
+SHAPE = (32, 32, 32)
+
+
+def _capture(tmp_path, *, with_reorg=True) -> str:
+    """A slab-skewed workload captured through the real hooks."""
+    src = os.path.join(str(tmp_path), "capture_src")
+    ds = Dataset.create(src, engine="memmap")
+    blocks = [b.with_owner(i % 8) for i, b in
+              enumerate(uniform_grid_blocks(SHAPE, (16, 16, 16)))]
+    layout = plan_layout("subfiled_fpp", blocks, num_procs=8,
+                         global_shape=SHAPE)
+    arr = np.random.default_rng(41).standard_normal(SHAPE) \
+        .astype(np.float32)
+    ds.write("T", layout, np.float32,
+             {cp.chunk.block_id: arr[cp.chunk.slices()]
+              for cp in layout.chunks})
+    path = os.path.join(str(tmp_path), "capture.jsonl")
+    rec = TraceRecorder(path, header_for_dataset(ds, name="cap", seed=41,
+                                                 attrs={"gate_var": "T"}))
+    ds.attach_trace(rec)
+    for _ in range(2):
+        for z in range(0, 32, 4):           # the skew: thin z-slabs
+            ds.read("T", Block((0, 0, z), (32, 32, z + 2)))
+        ds.read("T", Block((8, 8, 8), (24, 24, 24)))
+    ds.read_decomposed("T", Block((0, 0, 0), SHAPE), (2, 2, 1))
+    ds.read_pattern("T", "plane_xy", num_readers=2, slab_thickness=4)
+    if with_reorg:
+        reorganize(src, src, "T", "auto", engine="memmap", trace=rec)
+        ds.refresh()
+        ds.read("T", Block((0, 0, 0), (32, 32, 4)))
+    ds.detach_trace()
+    ds.close()
+    rec.close()
+    return path
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: determinism, per engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["memmap", "pread", "overlapped"])
+def test_replay_deterministic_per_engine(tmp_path, engine):
+    trace = load_trace(_capture(tmp_path))
+    r1 = replay_trace(trace, os.path.join(str(tmp_path), "rp1"),
+                      engine=engine)
+    r2 = replay_trace(trace, os.path.join(str(tmp_path), "rp2"),
+                      engine=engine)
+    assert r1.digest == r2.digest
+    assert r1.decisions == r2.decisions and r1.decisions, \
+        "the auto reorganize must leave an identical decision audit"
+    assert r1.bytes_verified == r2.bytes_verified > 0
+    assert r1.clock_end == r2.clock_end
+
+
+def test_replay_rejects_auto_engine(tmp_path):
+    trace = load_trace(_capture(tmp_path, with_reorg=False))
+    with pytest.raises(ValueError, match="pinned engine"):
+        replay_trace(trace, os.path.join(str(tmp_path), "rp"),
+                     engine="auto")
+
+
+def test_replay_catches_divergence(tmp_path):
+    """The oracle check is live: an event whose region exceeds the
+    materialized geometry cannot replay silently."""
+    import dataclasses
+    trace = load_trace(_capture(tmp_path, with_reorg=False))
+    replay_trace(trace, os.path.join(str(tmp_path), "rp"))  # clean pass
+    ev = next(e for e in trace.events if e.kind == "read")
+    bad_ev = dataclasses.replace(ev, hi=tuple(h + 32 for h in ev.hi))
+    bad = dataclasses.replace(trace, events=[bad_ev])
+    with pytest.raises(Exception):
+        replay_trace(bad, os.path.join(str(tmp_path), "rp_bad"))
+
+
+# ---------------------------------------------------------------------------
+# satellite 4: trace -> export_prior warms a cold dataset to the live
+# decision
+# ---------------------------------------------------------------------------
+
+def test_trace_prior_matches_live_decision(tmp_path):
+    path = _capture(tmp_path, with_reorg=False)
+    trace = load_trace(path)
+    src = os.path.join(str(tmp_path), "capture_src")
+    # one pinned "now" for both sides — but it must postdate the capture's
+    # wall-clock stamps (the live log's TTL drops records from the future)
+    import time
+    now = time.time() + 1.0
+
+    ds = Dataset.open(src, telemetry=False)
+    rows = ds.index.var_rows("T")
+    blocks = [Block(tuple(int(v) for v in rows.los[i]),
+                    tuple(int(v) for v in rows.his[i]),
+                    owner=int(rows.subfiles[i]), block_id=i)
+              for i in range(rows.n)]
+    ds.close()
+
+    live_log = AccessLog(src, clock=lambda: now)
+    live = LayoutPolicy(log=live_log, calibration=FALLBACK_CALIBRATION) \
+        .choose_layout("T", blocks, SHAPE, now=now)
+    assert live.num_records > 0
+
+    prior_path = trace.export_prior(
+        os.path.join(str(tmp_path), "prior.json"), now=now)
+    prior_records = load_prior_records(prior_path, now=now)
+    assert len(prior_records) == sum(
+        1 for e in trace.events
+        if e.kind in ("read", "read_decomposed", "read_pattern", "serve"))
+    cold = LayoutPolicy(prior_records=prior_records,
+                        calibration=FALLBACK_CALIBRATION) \
+        .choose_layout("T", blocks, SHAPE, now=now)
+    assert cold.num_prior_records == len(prior_records)
+    assert (cold.strategy, cold.scheme) == (live.strategy, live.scheme), \
+        f"trace-warmed decision {cold.strategy}/{cold.scheme} diverges " \
+        f"from live telemetry's {live.strategy}/{live.scheme}"
+    # the control: an unwarmed policy has nothing to go on
+    unwarmed = LayoutPolicy(calibration=FALLBACK_CALIBRATION) \
+        .choose_layout("T", blocks, SHAPE, now=now)
+    assert unwarmed.num_records == 0
+
+
+# ---------------------------------------------------------------------------
+# committed corpus
+# ---------------------------------------------------------------------------
+
+def test_committed_corpus_is_loadable():
+    names = sorted(f for f in os.listdir(TRACES_DIR)
+                   if f.endswith(".jsonl"))
+    assert len(names) >= 7, f"corpus shrank: {names}"
+    for f in names:
+        tr = load_trace(os.path.join(TRACES_DIR, f))
+        assert tr.events, f"{f} carries no events"
+
+
+def test_committed_corpus_smoke_replay(tmp_path):
+    """The cheapest committed scenario replays clean and deterministically
+    — the in-tree guarantee that the corpus and the stack stay in sync
+    (CI's replay job covers the rest of the roster)."""
+    trace = load_trace(os.path.join(TRACES_DIR, "mixed_rw_small.jsonl"))
+    r1 = replay_trace(trace, os.path.join(str(tmp_path), "a"))
+    r2 = replay_trace(trace, os.path.join(str(tmp_path), "b"))
+    assert r1.digest == r2.digest
+    assert r1.bytes_verified > 0
+    assert set(r1.counts) == {"read", "write", "stage_submit"}
+
+
+def test_committed_corpus_scaled_replay(tmp_path):
+    """The large PIC trace replays at half scale — the self-describing
+    header travels through ``scaled()`` and still drives the full stack."""
+    trace = load_trace(os.path.join(TRACES_DIR, "pic_slab_large.jsonl"))
+    half = trace.scaled(2)
+    r = replay_trace(half, os.path.join(str(tmp_path), "rp"))
+    assert r.counts["reorganize"] == 1
+    assert r.bytes_verified > 0
+    full_shape = tuple(trace.header.variables["T"]["shape"])
+    assert tuple(half.header.variables["T"]["shape"]) == \
+        tuple(d // 2 for d in full_shape)

@@ -1,0 +1,268 @@
+"""Workload trace format + capture (ISSUE 8): the trace file must be a
+*lossless*, versioned, schema-checked journal.  Roundtrips are bit-exact
+(seeded property sweep over synthetic workloads); a future-version file is
+rejected instead of misread; a corrupt or truncated file salvages its
+complete prefix with a clear error; a 1000-event capture keeps all 1000
+events while the live access ring (capacity 256) drops the early ones;
+schema violations fail at record time, not replay time."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.blocks import Block, blocks_disjoint, uniform_grid_blocks
+from repro.core.layouts import plan_layout
+from repro.core.policy import AccessLog
+from repro.io import (Dataset, TRACE_VERSION, Trace, TraceCorruptError,
+                      TraceError, TraceRecorder, TraceSchemaError,
+                      header_for_dataset, load_trace, replay_trace)
+from repro.io.trace import (EVENT_KINDS, TraceEvent, TraceHeader,
+                            validate_event)
+
+
+def _seed_dataset(dirpath, var="T", shape=(32, 32, 32), block=(16, 16, 16),
+                  seed=0):
+    ds = Dataset.create(dirpath, engine="memmap")
+    blocks = [b.with_owner(i % 4) for i, b in
+              enumerate(uniform_grid_blocks(shape, block))]
+    layout = plan_layout("subfiled_fpp", blocks, num_procs=4,
+                         global_shape=shape)
+    arr = np.random.default_rng(seed).standard_normal(shape) \
+        .astype(np.float32)
+    ds.write(var, layout, np.float32,
+             {cp.chunk.block_id: arr[cp.chunk.slices()]
+              for cp in layout.chunks})
+    return ds, arr
+
+
+def _random_region(rng, shape) -> Block:
+    lo = tuple(int(rng.integers(0, d)) for d in shape)
+    hi = tuple(int(rng.integers(l + 1, d + 1)) for l, d in zip(lo, shape))
+    return Block(lo, hi)
+
+
+def _capture_random_workload(tmp_path, seed: int) -> str:
+    """A synthetic workload driven through the real capture hooks."""
+    rng = np.random.default_rng(seed)
+    shape = tuple(int(rng.integers(2, 5)) * 8 for _ in range(3))
+    src = os.path.join(tmp_path, f"src_{seed}")
+    ds, _ = _seed_dataset(src, shape=shape,
+                          block=tuple(d // 2 for d in shape), seed=seed)
+    path = os.path.join(tmp_path, f"trace_{seed}.jsonl")
+    rec = TraceRecorder(path, header_for_dataset(ds, name=f"sweep_{seed}",
+                                                 seed=seed))
+    ds.attach_trace(rec)
+    for _ in range(int(rng.integers(3, 9))):
+        ds.read("T", _random_region(rng, shape))
+    ds.read_decomposed("T", Block((0, 0, 0), shape), (2, 1, 2))
+    ds.read_pattern("T", "plane_xy", num_readers=2,
+                    slab_thickness=max(1, shape[2] // 4))
+    ds.detach_trace()
+    ds.close()
+    rec.close()
+    return path
+
+
+# ---------------------------------------------------------------------------
+# roundtrip: bit-exact under a seeded sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [1, 2, 3, 4, 5])
+def test_roundtrip_bit_exact(tmp_path, seed):
+    path = _capture_random_workload(str(tmp_path), seed)
+    with open(path, "rb") as f:
+        original = f.read()
+    tr = load_trace(path)
+    resaved = os.path.join(str(tmp_path), "resaved.jsonl")
+    tr.save(resaved)
+    with open(resaved, "rb") as f:
+        assert f.read() == original, "save(load(t)) is not bit-exact"
+    # and a second decode of the resave sees identical events
+    tr2 = load_trace(resaved)
+    assert tr2.events == tr.events
+    assert tr2.header == tr.header
+
+
+def test_event_json_roundtrip_every_kind():
+    evs = [
+        TraceEvent(kind="read", seq=0, var="T", lo=(0, 0), hi=(4, 4),
+                   seconds=0.25, nbytes=64, engine="memmap"),
+        TraceEvent(kind="serve", seq=1, var="T", lo=(0, 0), hi=(2, 2),
+                   tenant="a"),
+        TraceEvent(kind="read_decomposed", seq=2, var="T", lo=(0, 0),
+                   hi=(4, 4), params={"scheme": [2, 1]}),
+        TraceEvent(kind="read_pattern", seq=3, var="T", lo=(0, 0),
+                   hi=(4, 4), params={"pattern": "plane_xy",
+                                      "num_readers": 2}),
+        TraceEvent(kind="write", seq=4, var="W", lo=(0,), hi=(8,),
+                   params={"chunks": [[[0], [8], 0]], "dtype": "float32",
+                           "global_shape": [8], "strategy": "chunked"}),
+        TraceEvent(kind="stage_submit", seq=5, var="S", lo=(0,), hi=(8,),
+                   params={"chunks": [[[0], [8], 0]], "dtype": "float32",
+                           "global_shape": [8], "strategy": "chunked",
+                           "step": 3}),
+        TraceEvent(kind="reorganize", seq=6, var="T",
+                   params={"layout": "auto"}),
+        TraceEvent(kind="ckpt_save", seq=7,
+                   params={"step": 0, "strategy": "auto", "vars": {}}),
+        TraceEvent(kind="ckpt_restore", seq=8, params={"step": 0}),
+    ]
+    assert {e.kind for e in evs} == set(EVENT_KINDS)
+    for ev in evs:
+        assert TraceEvent.from_json(ev.to_json()) == ev
+
+
+# ---------------------------------------------------------------------------
+# versioning + schema
+# ---------------------------------------------------------------------------
+
+def test_future_version_rejected(tmp_path):
+    path = os.path.join(str(tmp_path), "future.jsonl")
+    hdr = TraceHeader(version=TRACE_VERSION + 1, name="future").to_json()
+    with open(path, "w") as f:
+        f.write(json.dumps(hdr) + "\n")
+    with pytest.raises(TraceError, match="newer than this reader"):
+        load_trace(path)
+    # salvage must NOT override a version refusal: misreading is worse
+    # than failing
+    with pytest.raises(TraceError, match="newer than this reader"):
+        load_trace(path, salvage=True)
+
+
+def test_schema_violations_fail_at_record_time(tmp_path):
+    path = os.path.join(str(tmp_path), "t.jsonl")
+    rec = TraceRecorder(path, TraceHeader(name="x"))
+    with pytest.raises(TraceSchemaError):
+        rec.record("no_such_kind", var="T", region=Block((0,), (1,)))
+    with pytest.raises(TraceSchemaError):          # read without a region
+        rec.record("read", var="T")
+    with pytest.raises(TraceSchemaError):          # missing required param
+        rec.record("read_decomposed", var="T",
+                   region=Block((0,), (4,)))
+    with pytest.raises(TraceSchemaError):          # inverted region
+        validate_event(TraceEvent(kind="read", seq=0, var="T",
+                                  lo=(4,), hi=(0,)))
+    rec.close()
+    assert load_trace(path).events == []           # nothing leaked through
+
+
+# ---------------------------------------------------------------------------
+# corruption: salvage the complete prefix, loudly
+# ---------------------------------------------------------------------------
+
+def test_truncated_trace_salvages_prefix(tmp_path):
+    path = _capture_random_workload(str(tmp_path), 77)
+    full = load_trace(path)
+    with open(path, "rb") as f:
+        raw = f.read()
+    cut = os.path.join(str(tmp_path), "cut.jsonl")
+    with open(cut, "wb") as f:
+        f.write(raw[:len(raw) - len(raw.splitlines(True)[-1]) + 5])
+    with pytest.raises(TraceCorruptError) as ei:
+        load_trace(cut)
+    assert "intact events salvageable" in str(ei.value)
+    salvaged = ei.value.salvaged
+    assert salvaged.events == full.events[:-1]
+    assert load_trace(cut, salvage=True).events == full.events[:-1]
+
+
+def test_corrupt_middle_line_salvages_prefix(tmp_path):
+    path = _capture_random_workload(str(tmp_path), 78)
+    full = load_trace(path)
+    lines = open(path).read().splitlines(True)
+    keep = 3            # header + 2 events
+    bad = os.path.join(str(tmp_path), "bad.jsonl")
+    with open(bad, "w") as f:
+        f.writelines(lines[:keep])
+        f.write("{not json at all\n")
+        f.writelines(lines[keep:])
+    got = load_trace(bad, salvage=True)
+    assert got.events == full.events[:keep - 1]
+
+
+def test_empty_file_is_corrupt(tmp_path):
+    path = os.path.join(str(tmp_path), "empty.jsonl")
+    open(path, "w").close()
+    with pytest.raises(TraceCorruptError):
+        load_trace(path)
+
+
+# ---------------------------------------------------------------------------
+# empty trace: header only, replays as a no-op
+# ---------------------------------------------------------------------------
+
+def test_empty_trace_replays_as_noop(tmp_path):
+    path = os.path.join(str(tmp_path), "noop.jsonl")
+    TraceRecorder(path, TraceHeader(name="noop", seed=5)).close()
+    tr = load_trace(path)
+    assert tr.events == []
+    r = replay_trace(tr, os.path.join(str(tmp_path), "rp"))
+    assert r.counts == {}
+    assert r.bytes_verified == 0
+    assert r.events == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: capture is lossless past the 256-record access ring
+# ---------------------------------------------------------------------------
+
+def test_thousand_event_capture_is_lossless(tmp_path):
+    src = os.path.join(str(tmp_path), "src")
+    ds, _ = _seed_dataset(src)
+    path = os.path.join(str(tmp_path), "big.jsonl")
+    rec = TraceRecorder(path, header_for_dataset(ds, name="big", seed=9))
+    ds.attach_trace(rec)
+    regions = [Block((0, 0, 2 * (i % 16)), (32, 32, 2 * (i % 16) + 2))
+               for i in range(1000)]
+    for region in regions:
+        ds.read("T", region)
+    ds.close()          # flushes the access log
+    rec.close()
+    # the ring dropped the early records...
+    log = AccessLog(src)
+    assert len(log.records()) <= 256 < 1000
+    # ...the trace kept every one, in order, with the right regions
+    tr = load_trace(path)
+    assert len(tr.events) == 1000
+    assert [e.seq for e in tr.events] == list(range(1000))
+    assert [(e.lo, e.hi) for e in tr.events] == \
+        [(r.lo, r.hi) for r in regions]
+    assert all(e.kind == "read" and e.var == "T" for e in tr.events)
+
+
+# ---------------------------------------------------------------------------
+# scaled replay: the boundary map must preserve coverage and disjointness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("factor", [2, 3])
+def test_scaled_trace_stays_valid(tmp_path, factor):
+    path = _capture_random_workload(str(tmp_path), 100 + factor)
+    tr = load_trace(path)
+    sc = tr.scaled(factor)
+    assert sc.header.name.endswith(f"@1/{factor}")
+    for var, meta in sc.header.variables.items():
+        shape = tuple(meta["shape"])
+        full_shape = tuple(tr.header.variables[var]["shape"])
+        assert shape == tuple(-(-d // factor) for d in full_shape)
+        chunks = [Block(tuple(lo), tuple(hi)) for lo, hi, _sf
+                  in meta["chunks"]]
+        assert blocks_disjoint(chunks)
+        assert sum(c.volume for c in chunks) == int(np.prod(shape))
+    for ev in sc.events:        # every surviving region fits the new shape
+        if ev.lo is None:
+            continue
+        shape = tuple(sc.header.variables[ev.var]["shape"])
+        assert all(0 <= l < h <= d
+                   for l, h, d in zip(ev.lo, ev.hi, shape))
+    # and the scaled trace actually replays clean
+    r = replay_trace(sc, os.path.join(str(tmp_path), "rp_scaled"))
+    assert r.bytes_verified > 0
+
+
+def test_save_validates_events(tmp_path):
+    bad = Trace(header=TraceHeader(name="bad"),
+                events=[TraceEvent(kind="read", seq=0, var="")])
+    with pytest.raises(TraceSchemaError):
+        bad.save(os.path.join(str(tmp_path), "bad.jsonl"))
