@@ -12,13 +12,26 @@ Write side: the multi-group write benchmark — serial ``pread`` appends vs
 the overlapped engine submitting the same ``WritePlan``'s groups at queue
 depth through its persistent pool, plus what auto chose.
 
-A third section evaluates the model *deterministically* on a synthetic
-cold-storage calibration (seek-dominated), where the decision must flip to
-the overlapped engine — this asserts regime behavior that a page-cache-hot
-container cannot exhibit.
+Cold cells (ISSUE 9): where the kernel and filesystem support it, the cold
+read and staged-write cells are *measured*, not emulated — the page cache
+is evicted with ``posix_fadvise(DONTNEED)`` between repeats so every
+engine pays real device reads, and the write sessions fsync so buffered
+engines pay the device too; ``odirect`` and ``uring`` (with registered
+direct buffers) run against ``overlapped`` on identical plans.  The
+emulated ``SEEK_LATENCY_S`` cells are kept as the everywhere-fallback.
+
+A final section evaluates the model *deterministically* on synthetic
+cold-storage calibrations (seek-dominated): without kernel-engine terms
+(a v1-era calibration) the decision must flip to the overlapped engine;
+with them it must flip to ``uring`` — asserting regime behavior that a
+page-cache-hot container cannot exhibit.
 """
 
 from __future__ import annotations
+
+import dataclasses
+import os
+import time
 
 import numpy as np
 
@@ -26,7 +39,9 @@ from repro.core import plan_layout
 from repro.core.blocks import Block
 from repro.core.cost_model import (EngineCalibration, choose_engine,
                                    storage_calibration)
-from repro.io import Dataset
+from repro.io import Dataset, ODirectEngine, UringEngine
+from repro.io.direct import odirect_available
+from repro.io.uring import uring_available
 
 from .common import (GLOBAL, NPROCS, SMOKE, TmpDir, build_world,
                      cold_write_engines, emit, resolve_pattern, timed,
@@ -38,11 +53,20 @@ LAYOUTS = (("subfiled_fpp", None), ("merged_process", None),
 PATTERNS = ("whole_domain", "sub_area", "plane_xy") if SMOKE else \
     ("whole_domain", "sub_area", "plane_xy", "line_z")
 
-#: a seek-dominated storage target (cold PFS / disaggregated storage)
+#: a seek-dominated storage target (cold PFS / disaggregated storage);
+#: kernel-engine terms are at their v1 sentinels, so auto must exclude
+#: ``uring``/``odirect`` here
 COLD = EngineCalibration(seek_latency_s=1e-3, preadv_group_overhead_s=5e-6,
                          seq_read_bps=2e9, seq_write_bps=1e9, memmap_bps=8e9,
                          page_miss_s=1e-3, parallel_scaling=8.0,
                          created_at=0.0)
+
+#: the same target probed by a v2 calibration on a kernel with io_uring +
+#: O_DIRECT: cheap submissions (5us/SQE vs the 25us thread dispatch) make
+#: uring the model's many-group winner
+COLD_KERNEL = dataclasses.replace(
+    COLD, uring_sqe_s=5e-6, uring_reg_s=2e-4, odirect_seq_read_bps=2e9,
+    odirect_seq_write_bps=1e9, odirect_align_s=1e-5)
 
 
 def _read_matrix(tmp: TmpDir) -> None:
@@ -131,11 +155,102 @@ def _write_overlap(tmp: TmpDir) -> None:
          f"overlapped_ms={cold['overlapped'] * 1e3:.1f}")
 
 
+def _evict(dirpath: str) -> None:
+    """Drop the page cache for every subfile under ``dirpath`` (clean pages
+    only — callers fsync at write commit, so DONTNEED actually evicts)."""
+    for f in os.listdir(dirpath):
+        if not f.endswith(".bin"):
+            continue
+        fd = os.open(os.path.join(dirpath, f), os.O_RDONLY)
+        try:
+            os.posix_fadvise(fd, 0, 0, os.POSIX_FADV_DONTNEED)
+        finally:
+            os.close(fd)
+
+
+def _kernel_cold(tmp: TmpDir) -> None:
+    """Measured cold cells for the kernel-bypass engines.  Reads: the page
+    cache is evicted before every repeat, so ``pread``/``overlapped`` pay
+    real device reads against ``odirect`` (cache-immune by construction)
+    and ``uring`` with registered direct buffers.  Writes: every session
+    fsyncs before commit, so buffered engines pay the device too.  Timings
+    are emitted with a ``beats_overlapped`` flag rather than asserted —
+    device ratios are hardware-dependent; the deterministic decision gates
+    live in :func:`_cold_regime`."""
+    ok_dir, why_dir = odirect_available(tmp.path)
+    ok_ring, why_ring = uring_available()
+    if not (ok_dir or ok_ring):
+        emit("auto_select/cold_read/skip", 0.0,
+             f"odirect={why_dir};uring={why_ring}")
+        return
+    blocks, data = build_world(seed=23)
+    plan = plan_layout("subfiled_fpp", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    d = tmp.sub("kc")
+    write_dataset(d, "B", plan, data)
+    ds = Dataset.open(d, engine="pread")
+    rplan = ds.plan_read("B", Block((0, 0, 0), GLOBAL))
+    out = np.empty(rplan.region.shape, dtype=rplan.dtype)
+    readers = {"pread": "pread", "overlapped": "overlapped:8"}
+    if ok_ring:
+        readers["uring"] = "uring:8"
+        if ok_dir:
+            readers["uring_direct"] = UringEngine(depth=8, direct=True)
+    if ok_dir:
+        readers["odirect"] = ODirectEngine()
+    secs = {}
+    for tag, eng in readers.items():
+        best = None
+        for _ in range(3):
+            _evict(d)
+            t0 = time.perf_counter()
+            ds.read_planned(rplan, out, engine=eng)
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        secs[tag] = best
+        emit(f"auto_select/cold_read/{tag}", best * 1e6,
+             f"groups={rplan.num_groups};evicted=True")
+    ds.close()
+    kern = {t: s for t, s in secs.items()
+            if t not in ("pread", "overlapped")}
+    best_k = min(kern, key=lambda k: kern[k])
+    emit("auto_select/cold_read/kernel_vs_overlapped",
+         secs["overlapped"] / max(kern[best_k], 1e-12),
+         f"best_kernel={best_k};"
+         f"beats_overlapped={kern[best_k] < secs['overlapped']}")
+    writers = {"pread": "pread", "overlapped": "overlapped:8"}
+    if ok_ring:
+        writers["uring"] = "uring:8"
+    if ok_dir:
+        writers["odirect"] = "odirect"
+    wsecs = {}
+    for tag, eng in writers.items():
+
+        def once():
+            ds2 = Dataset.create(tmp.sub(f"kcw_{tag}_run"), engine=eng)
+            ws = ds2.write_planned(ds2.plan_write("B", plan, np.float32),
+                                   data, fsync=True)
+            ds2.close()
+            return ws
+
+        ws, wsecs[tag] = timed(once, repeats=3)
+        emit(f"auto_select/cold_write_real/{tag}", wsecs[tag] * 1e6,
+             f"groups={ws.groups};fsync=True")
+    kern = {t: s for t, s in wsecs.items()
+            if t not in ("pread", "overlapped")}
+    best_k = min(kern, key=lambda k: kern[k])
+    emit("auto_select/cold_write_real/kernel_vs_overlapped",
+         wsecs["overlapped"] / max(kern[best_k], 1e-12),
+         f"best_kernel={best_k};"
+         f"beats_overlapped={kern[best_k] < wsecs['overlapped']}")
+
+
 def _cold_regime() -> None:
-    """Deterministic model check on the synthetic cold calibration: the
-    many-group read must flip to overlapped, the tiny single-group read must
-    not; a hot (measured) calibration on a page cache stays memmap-friendly.
-    Raises on violation — this is a correctness gate, not a timing."""
+    """Deterministic model check on the synthetic cold calibrations: the
+    many-group read must flip to overlapped (v1 terms) or uring (v2 kernel
+    terms); the tiny single-group read must not; a hot (measured)
+    calibration on a page cache stays memmap-friendly.  Raises on
+    violation — this is a correctness gate, not a timing."""
     c = choose_engine(COLD, groups=44, runs=4096, bytes_moved=64 << 20,
                       span_bytes=64 << 20)
     assert c.engine.startswith("overlapped"), c
@@ -146,6 +261,22 @@ def _cold_regime() -> None:
     assert not c1.engine.startswith("overlapped"), c1
     emit("auto_select/cold_model/single_group", c1.predicted_seconds * 1e6,
          f"chose={c1.engine}")
+    ck = choose_engine(COLD_KERNEL, groups=44, runs=4096,
+                       bytes_moved=64 << 20, span_bytes=64 << 20)
+    assert ck.engine.startswith("uring"), ck
+    emit("auto_select/cold_model/many_groups_kernel",
+         ck.predicted_seconds * 1e6, f"chose={ck.engine}")
+    ckw = choose_engine(COLD_KERNEL, groups=44, runs=4096,
+                        bytes_moved=64 << 20, span_bytes=64 << 20,
+                        direction="write")
+    assert ckw.engine.startswith("uring"), ckw
+    emit("auto_select/cold_model/staged_write_kernel",
+         ckw.predicted_seconds * 1e6, f"chose={ckw.engine}")
+    ck1 = choose_engine(COLD_KERNEL, groups=1, runs=1, bytes_moved=1 << 20,
+                        span_bytes=1 << 20)
+    assert not ck1.engine.startswith(("overlapped", "uring")), ck1
+    emit("auto_select/cold_model/single_group_kernel",
+         ck1.predicted_seconds * 1e6, f"chose={ck1.engine}")
 
 
 def run(tmp: TmpDir) -> None:
@@ -159,4 +290,5 @@ def run(tmp: TmpDir) -> None:
          f"parallel_x={cal.parallel_scaling:.1f}")
     _read_matrix(tmp)
     _write_overlap(tmp)
+    _kernel_cold(tmp)
     _cold_regime()

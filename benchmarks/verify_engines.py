@@ -6,6 +6,12 @@ every engine, and compares SHA-256 digests of (a) the produced subfiles and
 read side — exits nonzero, so the benchmark smoke matrix fails loudly
 instead of comparing subtly different datasets.
 
+The kernel-bypass engines (``uring`` / ``odirect``) are feature-detected
+against the running kernel and the benchmark filesystem; an unsupported
+engine is reported as a SKIP with its reason and removed from the matrix
+(running it anyway would silently re-test its fallback engine, not the
+kernel path).
+
 Run: PYTHONPATH=src python -m benchmarks.verify_engines
 """
 
@@ -20,11 +26,31 @@ import numpy as np
 from repro.core import plan_layout
 from repro.core.blocks import Block
 from repro.io import Dataset, ENGINES, GPFS_BLOCK
+from repro.io.direct import odirect_available
+from repro.io.uring import uring_available
 
 from .common import TmpDir, build_world
 
 STRATEGIES = (("subfiled_fpp", None), ("reorganized", (4, 4, 4)))
 GLOBAL = (64, 64, 64)
+
+
+def available_engines(dirpath: str):
+    """(engines, skips) — every registered engine whose kernel/filesystem
+    support probe passes here, plus (name, reason) for the ones removed."""
+    engines, skips = [], []
+    for eng in sorted(ENGINES):
+        if eng == "uring":
+            ok, why = uring_available()
+        elif eng == "odirect":
+            ok, why = odirect_available(dirpath)
+        else:
+            ok, why = True, ""
+        if ok:
+            engines.append(eng)
+        else:
+            skips.append((eng, why))
+    return engines, skips
 
 
 def _digest_dir(d: str) -> dict:
@@ -47,6 +73,9 @@ def main() -> int:
     tmp = TmpDir(prefix="repro_verify_engines_")
     failures = []
     try:
+        engines, skips = available_engines(tmp.path)
+        for eng, why in skips:
+            print(f"verify_engines: SKIP {eng} ({why})", flush=True)
         blocks, data = build_world(seed=13, global_shape=GLOBAL,
                                    block_shape=(16, 16, 16), nprocs=8)
         whole = Block((0, 0, 0), GLOBAL)
@@ -58,21 +87,20 @@ def main() -> int:
                                    num_stagers=2)
                 file_digests = {}
                 read_digests = {}
-                for eng in sorted(ENGINES):
+                for eng in engines:
                     d = tmp.sub(f"ve_{strat}_{align or 0}_{eng}")
                     ds = Dataset.create(d, engine=eng)
                     ds.write("B", plan, np.float32, data, align=align)
                     file_digests[eng] = _digest_dir(d)
-                    for reng in sorted(ENGINES):
+                    for reng in engines:
                         arr, _ = ds.read("B", whole, engine=reng)
                         arr2, _ = ds.read("B", sub, engine=reng)
                         read_digests[(eng, reng)] = (
                             hashlib.sha256(arr.tobytes()).hexdigest(),
                             hashlib.sha256(arr2.tobytes()).hexdigest())
                     ds.close()
-                ref_files = file_digests[sorted(ENGINES)[0]]
-                ref_reads = read_digests[(sorted(ENGINES)[0],
-                                          sorted(ENGINES)[0])]
+                ref_files = file_digests[engines[0]]
+                ref_reads = read_digests[(engines[0], engines[0])]
                 for eng, dig in file_digests.items():
                     if dig != ref_files:
                         failures.append(
@@ -85,7 +113,7 @@ def main() -> int:
                             f"write={key[0]} read={key[1]}")
                 tag = f"{strat}/align={'16M' if align else 'none'}"
                 print(f"verify_engines/{tag}: "
-                      f"{len(ENGINES)} writers x {len(ENGINES)} readers "
+                      f"{len(engines)} writers x {len(engines)} readers "
                       f"{'DIVERGED' if failures else 'identical'}",
                       flush=True)
     finally:

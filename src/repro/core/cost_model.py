@@ -56,7 +56,9 @@ __all__ = ["StagingTimings", "PAPER_TIMINGS", "posthoc_utilization",
            "recommend",
            # engine selection (ISSUE 3)
            "EngineCalibration", "EngineChoice", "CALIBRATION_NAME",
-           "CALIBRATION_TTL_S", "FALLBACK_CALIBRATION", "probe_storage",
+           "CALIBRATION_TTL_S", "CALIBRATION_VERSION",
+           "SUPPORTED_CALIBRATION_VERSIONS", "URING_REG_AMORT",
+           "FALLBACK_CALIBRATION", "probe_storage",
            "save_calibration", "load_calibration", "storage_calibration",
            "predict_seconds", "choose_engine", "predict_best_seconds",
            # lifecycle scoring (ISSUE 5)
@@ -149,13 +151,22 @@ def tc_upper_bound_nonblocking(t: StagingTimings, N: int) -> float:
 
 #: file persisted next to index.json
 CALIBRATION_NAME = "calibration.json"
-CALIBRATION_VERSION = 1
+#: v2 (ISSUE 9) added the kernel-bypass terms (uring_*/odirect_*)
+CALIBRATION_VERSION = 2
+#: persisted versions that still load: a v1 file is *not* stale — its new
+#: fields default to the "unsupported" sentinels, so the kernel-bypass
+#: engines simply don't compete until the TTL re-probe upgrades it
+SUPPORTED_CALIBRATION_VERSIONS = (1, 2)
 #: persisted calibrations older than this are re-probed
 CALIBRATION_TTL_S = 7 * 24 * 3600.0
 #: probe file size — small enough that calibration costs tens of ms
 PROBE_BYTES = 4 << 20
-#: queue depths `choose_engine` evaluates for the overlapped engine
+#: queue depths `choose_engine` evaluates for the overlapped/uring engines
 DEPTH_CANDIDATES = (2, 4, 8, 16, 32)
+#: plans a uring ring + registered-buffer pool setup amortizes over when
+#: its one-time cost is charged per plan — small plans shouldn't pay the
+#: whole setup, long sessions shouldn't pretend it was free
+URING_REG_AMORT = 64
 
 #: disambiguates concurrent probe scratch files within one process
 _probe_counter = itertools.count()
@@ -190,6 +201,14 @@ class EngineCalibration:
     version: int = CALIBRATION_VERSION
     memmap_write_bps: float = 0.0   # store into fresh (fault-on-dirty) pages;
     # 0.0 (a pre-field calibration.json) falls back to memmap_bps
+    # -- kernel-bypass terms (v2, ISSUE 9); negative sentinel = the probe
+    # found no support, so the engine never competes under this calibration
+    uring_sqe_s: float = -1.0       # per-SQE cost of a batched small read
+    uring_reg_s: float = 0.0        # ring + registered-buffer pool setup
+    odirect_seq_read_bps: float = -1.0   # O_DIRECT sequential read (device)
+    odirect_seq_write_bps: float = -1.0  # O_DIRECT sequential write (device)
+    odirect_align_s: float = 0.0    # one aligned 4 KiB direct read — the
+    # bounce-block penalty a ragged group edge costs
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -205,7 +224,7 @@ class EngineCalibration:
 
     def is_stale(self, max_age_s: float = CALIBRATION_TTL_S,
                  now: float | None = None) -> bool:
-        return (self.version != CALIBRATION_VERSION
+        return (self.version not in SUPPORTED_CALIBRATION_VERSIONS
                 or self.age_s(now) > max_age_s or self.age_s(now) < 0)
 
 
@@ -319,6 +338,13 @@ def probe_storage(dirpath: str,
             list(ex.map(lambda o: os.pread(fd, 1 << 18, o), read_offs))
             threaded = time.perf_counter() - t0
         parallel_scaling = min(8.0, max(1.0, serial / max(threaded, 1e-9)))
+
+        # -- kernel-bypass terms (v2, ISSUE 9).  Both feature-detect by
+        # doing: a failed probe leaves the "unsupported" sentinels, which
+        # keeps the engine out of choose_engine's competition entirely.
+        uring_sqe_s, uring_reg_s = _probe_uring(fd, offsets)
+        (odirect_seq_read_bps, odirect_seq_write_bps,
+         odirect_align_s) = _probe_odirect(path + ".direct")
     finally:
         if fd is not None:
             os.close(fd)
@@ -332,7 +358,95 @@ def probe_storage(dirpath: str,
         seq_read_bps=seq_read_bps, seq_write_bps=seq_write_bps,
         memmap_bps=memmap_bps, page_miss_s=page_miss_s,
         parallel_scaling=parallel_scaling, probe_bytes=size,
-        created_at=time.time(), memmap_write_bps=memmap_write_bps)
+        created_at=time.time(), memmap_write_bps=memmap_write_bps,
+        uring_sqe_s=uring_sqe_s, uring_reg_s=uring_reg_s,
+        odirect_seq_read_bps=odirect_seq_read_bps,
+        odirect_seq_write_bps=odirect_seq_write_bps,
+        odirect_align_s=odirect_align_s)
+
+
+def _probe_uring(fd: int, offsets) -> tuple:
+    """Measure io_uring submission overhead + registered-buffer setup
+    against the already-open probe scratch fd.  ``(-1.0, 0.0)`` where
+    io_uring is unavailable."""
+    try:
+        from ..io.uring import IoUring, OP_READ, uring_available
+    except Exception:                   # pragma: no cover - import guard
+        return -1.0, 0.0
+    ok, _why = uring_available()
+    if not ok:
+        return -1.0, 0.0
+    import numpy as _np
+    batch = 16
+    try:
+        t0 = time.perf_counter()
+        ring = IoUring(entries=batch)
+        bufs = [_np.empty(4096, dtype=_np.uint8) for _ in range(batch)]
+        try:
+            ring.register_buffers(bufs)
+        except Exception:               # memlock-limited: ring still works
+            pass
+        uring_reg_s = time.perf_counter() - t0
+    except Exception:
+        return -1.0, 0.0
+    try:
+        it = iter(offsets * 4)
+        rounds = 8
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            for j in range(batch):
+                ring.prep(OP_READ, fd, bufs[j].ctypes.data, 4096,
+                          next(it), user_data=j)
+            ring.submit(batch, wait_for=batch)
+            ring.reap()
+        uring_sqe_s = (time.perf_counter() - t0) / (rounds * batch)
+        return uring_sqe_s, uring_reg_s
+    except Exception:                   # pragma: no cover - defensive
+        return -1.0, 0.0
+    finally:
+        ring.close()
+
+
+def _probe_odirect(path: str) -> tuple:
+    """Measure O_DIRECT sequential bandwidth + aligned-block latency with
+    a scratch file at ``path``.  All-sentinel where the filesystem refuses
+    direct I/O."""
+    try:
+        from ..io.direct import (DIRECT_ALIGN, aligned_empty, open_direct,
+                                 pread_into_direct, pwrite_direct)
+    except Exception:                   # pragma: no cover - import guard
+        return -1.0, -1.0, 0.0
+    nchunks = 4                         # 4 MiB each way
+    fd = None
+    try:
+        fd = open_direct(path, writable=True)
+        buf = aligned_empty(1 << 20)
+        buf[:] = 0xC3
+        t0 = time.perf_counter()
+        for i in range(nchunks):
+            pwrite_direct(fd, buf, i << 20)
+        w_bps = (nchunks << 20) / max(time.perf_counter() - t0, 1e-9)
+        t0 = time.perf_counter()
+        for i in range(nchunks):
+            pread_into_direct(fd, buf, i << 20)
+        r_bps = (nchunks << 20) / max(time.perf_counter() - t0, 1e-9)
+        small = aligned_empty(DIRECT_ALIGN)
+        rng = random.Random(0xD12EC7)
+        offs = [rng.randrange(0, (nchunks << 20) - DIRECT_ALIGN)
+                & ~(DIRECT_ALIGN - 1) for _ in range(32)]
+        it = iter(offs * 2)
+        align_s = _timed_calls(
+            lambda: pread_into_direct(fd, small, next(it)), 32)
+        return r_bps, w_bps, align_s
+    except OSError:
+        return -1.0, -1.0, 0.0
+    finally:
+        if fd is not None:
+            os.close(fd)
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
 
 
 def save_calibration(cal: EngineCalibration, dirpath: str) -> None:
@@ -437,6 +551,18 @@ def predict_seconds(cal: EngineCalibration, engine: str, *, groups: int,
     divided by the *measured* 4-way ``parallel_scaling`` (clamped to its
     depth) — overlap helps exactly as much as the device/memory system
     actually delivered in the probe.
+
+    The kernel-bypass engines (v2 terms) reuse the same structure.
+    ``uring`` is the overlapped shape with the thread-pool handoff
+    replaced by the *measured* per-SQE cost plus an amortized share of
+    the ring/registered-buffer setup — at low group counts that overhead
+    is what keeps it honest against serial ``pread``.  ``odirect``
+    streams at the *device* bandwidth the direct probe measured (no page
+    cache on either side) but pays a measured aligned-block penalty per
+    group — ragged extents are what keep it honest against the buffered
+    engines.  Both return ``inf`` when their calibration terms carry the
+    "unsupported" sentinel, so they never win where the probe found no
+    kernel/filesystem support.
     """
     base, _, arg = engine.partition(":")
     if base == "memmap":
@@ -455,6 +581,24 @@ def predict_seconds(cal: EngineCalibration, engine: str, *, groups: int,
         dd = max(1, min(depth, groups))
         par = max(1.0, min(cal.parallel_scaling, float(dd)))
         return latency / dd + stream / par + groups * DISPATCH_OVERHEAD_S
+    if base == "uring":
+        if cal.uring_sqe_s < 0:
+            return math.inf
+        depth = int(arg) if arg else 16
+        dd = max(1, min(depth, groups))
+        par = max(1.0, min(cal.parallel_scaling, float(dd)))
+        return (latency / dd + stream / par + groups * cal.uring_sqe_s
+                + cal.uring_reg_s / URING_REG_AMORT)
+    if base == "odirect":
+        bw = cal.odirect_seq_read_bps if direction == "read" \
+            else cal.odirect_seq_write_bps
+        if bw <= 0:
+            return math.inf
+        # device pass + the payload copy through the bounce buffer (both
+        # directions: reads scatter out of it, writes assemble into it)
+        stream_d = span_bytes / bw + bytes_moved / cal.memmap_bps
+        return groups * (cal.seek_latency_s + cal.odirect_align_s) \
+            + stream_d
     raise ValueError(f"unknown engine {engine!r}")
 
 
@@ -492,6 +636,17 @@ def choose_engine(cal: EngineCalibration, *, groups: int, runs: int,
     for d in depths:
         preds[f"overlapped:{d}"] = predict_seconds(cal, f"overlapped:{d}",
                                                    **shape)
+    # kernel-bypass engines compete only where the probe measured support
+    # (sentinel terms predict inf) — auto never selects an engine that
+    # would immediately fall back
+    if cal.uring_sqe_s >= 0:
+        for d in depths:
+            preds[f"uring:{d}"] = predict_seconds(cal, f"uring:{d}",
+                                                  **shape)
+    odirect_bw = cal.odirect_seq_read_bps if direction == "read" \
+        else cal.odirect_seq_write_bps
+    if odirect_bw > 0:
+        preds["odirect"] = predict_seconds(cal, "odirect", **shape)
     best = min(preds, key=lambda k: preds[k])   # insertion order breaks ties
     alts = sorted((k for k in preds if k != best), key=lambda k: preds[k])
     runner = alts[0]
@@ -659,6 +814,16 @@ def predict_best_seconds_batch(cal: EngineCalibration, *,
         par = np.maximum(1.0, np.minimum(cal.parallel_scaling, dd))
         best = np.minimum(best, latency / dd + stream / par
                           + g * DISPATCH_OVERHEAD_S)
+        if cal.uring_sqe_s >= 0:
+            best = np.minimum(best, latency / dd + stream / par
+                              + g * cal.uring_sqe_s
+                              + cal.uring_reg_s / URING_REG_AMORT)
+    odirect_bw = cal.odirect_seq_read_bps if direction == "read" \
+        else cal.odirect_seq_write_bps
+    if odirect_bw > 0:
+        best = np.minimum(best, g * (cal.seek_latency_s
+                                     + cal.odirect_align_s)
+                          + sp / odirect_bw + b / cal.memmap_bps)
     return np.where((g <= 0) | (b <= 0), 0.0, best)
 
 

@@ -46,7 +46,7 @@ import time
 import numpy as np
 
 from ..core.blocks import Block
-from ..io.engine import SubfileStore, get_engine
+from ..io.engine import SubfileStore, resolve_engine
 from ..io.format import (ChunkRecord, DatasetIndex, extent_checksum,
                          subfile_name)
 from ..io.journal import DEFAULT_LEASE_TIMEOUT_S, ReorgJournal
@@ -124,7 +124,9 @@ def worker_main(dst_dir: str, worker_id: str, engine: str = "pread", *,
     plan = journal.plan()
     var = plan.var
     src = Dataset.open(spec["src_dir"], engine=engine, telemetry=False)
-    eng = get_engine(engine)
+    # per-node feature detection: a worker on a host without io_uring /
+    # O_DIRECT degrades its engine instead of crashing the fleet
+    eng, _fallback = resolve_engine(engine, dirpath=dst_dir)
     store = SubfileStore(dst_dir)
     bar = _Barriers(worker_id, barrier_dir)
     stats = ReorgWorkerStats(units_done=0, units_lost=0, chunks_gathered=0)

@@ -5,18 +5,20 @@ Public surface (ISSUE 2 + ISSUE 3): :class:`Dataset` is the session object
 for both directions (``Dataset.create`` / ``Dataset.open``, ``plan_write``
 + ``write_planned``, ``plan_read`` + ``read_planned``); plans come from
 :mod:`repro.io.planner` and are executed by an :class:`IOEngine`
-(``memmap`` / ``pread`` / ``overlapped``), or by ``engine="auto"``, which
-picks an engine and queue depth per plan from a persisted storage
-calibration (see :mod:`repro.core.cost_model` and
-``docs/engine_selection.md``).  The deprecated ``write_variable`` /
+(``memmap`` / ``pread`` / ``overlapped`` / ``uring`` / ``odirect``), or by
+``engine="auto"``, which picks an engine and queue depth per plan from a
+persisted storage calibration (see :mod:`repro.core.cost_model` and
+``docs/engine_selection.md``).  The kernel-bypass engines (ISSUE 9)
+feature-detect and degrade gracefully via :func:`resolve_engine`.  The deprecated ``write_variable`` /
 ``rewrite_dataset`` shims were removed this release — use
 ``Dataset.plan_write``/``write_planned`` and :func:`reorganize`.
 """
 
 from .aggregation import gather_to_nodes
-from .engine import (ENGINES, IOEngine, MemmapEngine, OverlappedPreadEngine,
-                     PreadEngine, SubfileStore, WriteStats, assemble_chunk,
-                     get_engine, scatter_row, validate_engine_spec)
+from .engine import (ENGINES, IOEngine, MemmapEngine, ODirectEngine,
+                     OverlappedPreadEngine, PreadEngine, SubfileStore,
+                     UringEngine, WriteStats, assemble_chunk, get_engine,
+                     resolve_engine, scatter_row, validate_engine_spec)
 from .format import (ChunkRecord, DatasetIndex, GPFS_BLOCK, VarRows,
                      extent_checksum)
 from .journal import (REORG_JOURNAL_NAME, ReorgJournal, WorkUnit,
@@ -45,7 +47,8 @@ __all__ = [
     "REORG_JOURNAL_NAME", "ReorgJournal", "WorkUnit", "partition_unit_rows",
     # engines
     "ENGINES", "IOEngine", "MemmapEngine", "PreadEngine",
-    "OverlappedPreadEngine", "SubfileStore", "get_engine",
+    "OverlappedPreadEngine", "UringEngine", "ODirectEngine",
+    "SubfileStore", "get_engine", "resolve_engine",
     "validate_engine_spec",
     # session + execution
     "Dataset", "ReadStats", "WriteStats", "assemble_chunk", "reorganize",

@@ -66,7 +66,7 @@ from ..core.policy import AccessLog, AccessRecord, LayoutPolicy
 from ..core.read_patterns import best_decompositions, decompose_region
 from ..core.cost_model import observe_reorg_overhead
 from .engine import (IOEngine, SubfileStore, WriteStats, assemble_chunk,
-                     get_engine, scatter_row)
+                     get_engine, resolve_engine, scatter_row)
 from .format import ChunkRecord, DatasetIndex, INDEX_NAME, extent_checksum
 from .patterns import resolve_pattern
 from .planner import ReadPlan, WritePlan, build_read_plan, build_write_plan
@@ -127,7 +127,8 @@ class Dataset:
                  telemetry: bool = True, clock=None):
         self.dirpath = dirpath
         self._auto = isinstance(engine, str) and engine == "auto"
-        self._engine = None if self._auto else get_engine(engine)
+        self._engine = None
+        self._fallback_reason = ""
         self._calibration = calibration
         # drift tracking only applies to calibrations this session loaded or
         # probed itself — an explicitly injected calibration is pinned
@@ -151,6 +152,14 @@ class Dataset:
             self._index_stat = self._stat_index()
         if create or index is not None:
             os.makedirs(dirpath, exist_ok=True)
+        if not self._auto:
+            # after makedirs: the kernel-bypass feature probes (odirect is
+            # per-filesystem) need the directory to exist.  A degraded
+            # spec ("uring" without io_uring, "odirect" on tmpfs) resolves
+            # to its fallback engine here, and every stats record this
+            # session emits carries the reason.
+            self._engine, self._fallback_reason = \
+                resolve_engine(engine, dirpath=dirpath)
         self._store = SubfileStore(dirpath)
         self._lock = threading.Lock()     # index mutation + append cursor
         self._cal_lock = threading.Lock()  # one probe even with many workers
@@ -298,9 +307,12 @@ class Dataset:
                         bytes_moved: int, span_bytes: int,
                         direction: str) -> tuple:
         """Resolve a per-call ``engine`` override (or the session default)
-        to an engine instance; returns ``(engine, EngineChoice | None)``.
-        ``"auto"`` — per call or as the session default — consults the cost
-        model with this plan's shape."""
+        to an engine instance; returns ``(engine, EngineChoice | None,
+        pinned_reason)``.  ``"auto"`` — per call or as the session default
+        — consults the cost model with this plan's shape.  Pinned specs
+        that the kernel/filesystem cannot honor degrade through
+        :func:`repro.io.engine.resolve_engine`, and ``pinned_reason``
+        carries the fallback explanation into the stats record."""
         spec = override if override is not None else \
             ("auto" if self._auto else self._engine)
         if isinstance(spec, str) and spec == "auto":
@@ -308,8 +320,19 @@ class Dataset:
                                    runs=runs, bytes_moved=bytes_moved,
                                    span_bytes=span_bytes,
                                    direction=direction)
-            return get_engine(choice.engine), choice
-        return get_engine(spec), None
+            eng, fb = resolve_engine(choice.engine, dirpath=self.dirpath)
+            if fb:
+                # a calibration probed elsewhere promised support this
+                # host lacks (copied calibration.json): degrade, but keep
+                # the decision record honest about what actually ran
+                choice = dataclasses.replace(choice, engine=eng.name,
+                                             reason=f"{choice.reason}; "
+                                                    f"{fb}")
+            return eng, choice, ""
+        if override is not None:
+            eng, fb = resolve_engine(spec, dirpath=self.dirpath)
+            return eng, None, fb or "pinned"
+        return self._engine, None, self._fallback_reason or "pinned"
 
     def flush(self) -> None:
         """Persist ``index.json`` (atomic replace) and any buffered
@@ -362,7 +385,7 @@ class Dataset:
         Returns :class:`~repro.io.engine.WriteStats` (including which engine
         executed the plan and, under ``"auto"``, why).
         """
-        eng, choice = self._resolve_engine(
+        eng, choice, pinned_reason = self._resolve_engine(
             engine, groups=plan.num_groups, runs=plan.num_chunks,
             bytes_moved=plan.bytes_total, span_bytes=plan.span_bytes,
             direction="write")
@@ -416,7 +439,7 @@ class Dataset:
                             plan_seconds=plan.plan_seconds,
                             engine=choice.engine if choice else eng.name,
                             engine_reason=choice.reason if choice
-                            else "pinned",
+                            else pinned_reason,
                             predicted_seconds=choice.predicted_seconds
                             if choice else 0.0)
         if self._trace is not None and plan.num_chunks:
@@ -454,7 +477,7 @@ class Dataset:
         calibration."""
         if out is None:
             out = np.empty(plan.region.shape, dtype=plan.dtype)
-        eng, choice = self._resolve_engine(
+        eng, choice, pinned_reason = self._resolve_engine(
             engine, groups=plan.num_groups, runs=plan.runs,
             bytes_moved=plan.bytes_needed, span_bytes=plan.span_bytes,
             direction="read")
@@ -465,7 +488,7 @@ class Dataset:
                           plan_seconds=plan.plan_seconds,
                           engine=choice.engine if choice else eng.name,
                           engine_reason=choice.reason if choice
-                          else "pinned",
+                          else pinned_reason,
                           predicted_seconds=choice.predicted_seconds
                           if choice else 0.0)
         t0 = time.perf_counter()

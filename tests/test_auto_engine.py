@@ -3,6 +3,7 @@ micro-probe and its calibration.json persistence (round-trip + staleness),
 ``engine="auto"`` through the Dataset session in both directions, and the
 selection-decision record in the stats objects."""
 
+import dataclasses
 import json
 import os
 import time
@@ -13,12 +14,15 @@ import pytest
 from repro.core import (plan_layout, simulate_load_balance,
                         uniform_grid_blocks)
 from repro.core.blocks import Block
-from repro.core.cost_model import (CALIBRATION_NAME, EngineCalibration,
-                                   choose_engine, load_calibration,
-                                   predict_seconds, probe_storage,
-                                   save_calibration, storage_calibration)
+from repro.core.cost_model import (CALIBRATION_NAME, CALIBRATION_VERSION,
+                                   EngineCalibration, choose_engine,
+                                   load_calibration, predict_seconds,
+                                   probe_storage, save_calibration,
+                                   storage_calibration)
 from repro.io import Dataset, ENGINES, StagingExecutor, get_engine
+from repro.io.direct import odirect_available
 from repro.io.engine import validate_engine_spec
+from repro.io.uring import uring_available
 
 GLOBAL = (32, 32, 32)
 
@@ -32,6 +36,12 @@ HOT = EngineCalibration(seek_latency_s=3e-6, preadv_group_overhead_s=2e-6,
                         seq_read_bps=4e9, seq_write_bps=3e9, memmap_bps=6e9,
                         page_miss_s=3e-7, parallel_scaling=2.0,
                         created_at=0.0)
+#: COLD as a v2 probe would see it on a kernel with io_uring + O_DIRECT:
+#: cheap SQE submission (vs the 25us thread dispatch) and direct-I/O
+#: bandwidth terms present
+COLD_KERNEL = dataclasses.replace(
+    COLD, uring_sqe_s=5e-6, uring_reg_s=2e-4, odirect_seq_read_bps=2e9,
+    odirect_seq_write_bps=1e9, odirect_align_s=1e-5)
 
 
 @pytest.fixture()
@@ -181,10 +191,11 @@ def test_storage_calibration_persists_and_reuses(tmp_path):
 # -- engine spec validation ---------------------------------------------------
 
 def test_validate_engine_spec():
-    for ok in ("memmap", "pread", "overlapped", "overlapped:4", "auto"):
+    for ok in ("memmap", "pread", "overlapped", "overlapped:4", "auto",
+               "uring", "uring:8", "odirect"):
         assert validate_engine_spec(ok) == ok
     for bad in ("io_uring", "memmap:3", "overlapped:x", "overlapped:0",
-                "overlapped:", ""):
+                "overlapped:", "", "odirect:4", "uring:0", "uring:x"):
         with pytest.raises(ValueError):
             validate_engine_spec(bad)
     assert validate_engine_spec(get_engine("pread")) == "pread"
@@ -193,6 +204,33 @@ def test_validate_engine_spec():
 def test_get_engine_rejects_auto():
     with pytest.raises(ValueError, match="resolved per plan"):
         get_engine("auto")
+
+
+def test_get_engine_singleton_keyed_on_config():
+    """The per-spec singleton cache keys on the resolved (name, kwargs)
+    pair: same config -> same instance, different config -> a distinct
+    instance, never a silently shared mis-sized pool."""
+    assert get_engine("pread") is get_engine("pread")
+    # spec-string depth and kwarg depth are the same key
+    assert get_engine("overlapped:2") is get_engine("overlapped", depth=2)
+    assert get_engine("uring:4") is get_engine("uring", depth=4)
+    # differently-configured requests get distinct instances
+    assert get_engine("overlapped:2") is not get_engine("overlapped:4")
+    assert get_engine("uring:4") is not get_engine("uring:8")
+    a = get_engine("uring", depth=4, register=False)
+    assert a is not get_engine("uring:4")
+    assert a is get_engine("uring", depth=4, register=False)
+    # bare name resolves to the default depth, shared with the explicit one
+    from repro.io.engine import DEFAULT_QUEUE_DEPTH
+    assert get_engine("overlapped") is \
+        get_engine(f"overlapped:{DEFAULT_QUEUE_DEPTH}")
+    # a spec depth contradicting an explicit kwarg is an error, not a
+    # silent preference; a matching one is fine
+    with pytest.raises(ValueError, match="conflicting queue depths"):
+        get_engine("uring:4", depth=8)
+    with pytest.raises(ValueError, match="conflicting queue depths"):
+        get_engine("overlapped:2", depth=4)
+    assert get_engine("uring:4", depth=4) is get_engine("uring:4")
 
 
 # -- Dataset integration ------------------------------------------------------
@@ -290,3 +328,166 @@ def test_read_stats_merge_engine_record():
     fresh = ReadStats()
     fresh.merge(ReadStats(engine="pread", engine_reason="pinned"))
     assert fresh.engine == "pread"
+
+
+# -- kernel-bypass engines: calibration v2 + selection (ISSUE 9) --------------
+
+def test_kernel_sentinels_exclude_engines_from_auto():
+    """A calibration without kernel-engine terms (v1 file, or a probe on a
+    host without support) must predict inf for uring/odirect, so auto never
+    selects an engine that would immediately fall back."""
+    shape = dict(groups=44, runs=4096, bytes_moved=64 << 20,
+                 span_bytes=64 << 20)
+    assert predict_seconds(COLD, "uring:16", **shape) == float("inf")
+    assert predict_seconds(COLD, "odirect", **shape) == float("inf")
+    assert predict_seconds(COLD_KERNEL, "uring:16", **shape) < float("inf")
+    assert predict_seconds(COLD_KERNEL, "odirect", **shape) < float("inf")
+    c = choose_engine(COLD, **shape)
+    assert all(not k.startswith(("uring", "odirect"))
+               for k in c.predictions)
+
+
+def test_choose_engine_kernel_terms_flip_cold_to_uring():
+    """On seek-dominated storage with kernel terms present, the many-group
+    plan flips from overlapped to uring: same overlap structure, measured
+    per-SQE submission replacing the thread-dispatch constant."""
+    shape = dict(groups=44, runs=4096, bytes_moved=64 << 20,
+                 span_bytes=64 << 20)
+    c = choose_engine(COLD_KERNEL, **shape)
+    assert c.engine.startswith("uring:")
+    assert c.depth is not None and c.depth > 1
+    assert c.predicted_seconds < predict_seconds(COLD_KERNEL,
+                                                 "overlapped:32", **shape)
+
+
+def test_uring_setup_cost_keeps_it_honest_at_low_group_counts():
+    """Ring/registration amortization: a single-group read gains nothing
+    from async submission, so uring must not be picked even when cheap."""
+    c = choose_engine(COLD_KERNEL, groups=1, runs=1, bytes_moved=1 << 20,
+                      span_bytes=1 << 20)
+    assert not c.engine.startswith(("uring", "overlapped"))
+
+
+def test_odirect_alignment_cost_keeps_it_honest_on_ragged_extents():
+    """Many small ragged groups each pay the aligned-window penalty, so
+    odirect must predict worse than serial pread there — while a large
+    sequential sweep keeps odirect competitive."""
+    ragged = dict(groups=512, runs=512, bytes_moved=512 * 4096,
+                  span_bytes=512 * 4096)
+    cal = dataclasses.replace(COLD_KERNEL, odirect_align_s=5e-4,
+                              odirect_seq_read_bps=4e9)
+    assert predict_seconds(cal, "odirect", **ragged) > \
+        predict_seconds(cal, "pread", **ragged)
+    # ...while a large sequential sweep — where direct I/O's bandwidth
+    # edge (no page-cache double-buffering) dwarfs the per-group
+    # penalty — flips the comparison
+    seq = dict(groups=2, runs=2, bytes_moved=256 << 20,
+               span_bytes=256 << 20)
+    assert predict_seconds(cal, "odirect", **seq) < \
+        predict_seconds(cal, "pread", **seq)
+
+
+def test_calibration_v2_roundtrip_and_v1_loads_transparently(tmp_path):
+    d = str(tmp_path)
+    v2 = dataclasses.replace(COLD_KERNEL, created_at=time.time())
+    assert v2.version == CALIBRATION_VERSION == 2
+    save_calibration(v2, d)
+    assert load_calibration(d) == v2
+    # a v1 file (pre-kernel-engine fields) loads transparently: the new
+    # fields take their sentinel defaults, so auto just never offers
+    # uring/odirect until the TTL re-probe upgrades the file
+    payload = v2.to_json()
+    for k in ("uring_sqe_s", "uring_reg_s", "odirect_seq_read_bps",
+              "odirect_seq_write_bps", "odirect_align_s"):
+        del payload[k]
+    payload["version"] = 1
+    with open(os.path.join(d, CALIBRATION_NAME), "w") as f:
+        json.dump(payload, f)
+    v1 = load_calibration(d)
+    assert v1 is not None and not v1.is_stale()
+    assert v1.version == 1
+    assert v1.uring_sqe_s < 0 and v1.odirect_seq_read_bps < 0
+    # an unknown future version is stale, exactly like corrupt JSON
+    payload["version"] = CALIBRATION_VERSION + 1
+    with open(os.path.join(d, CALIBRATION_NAME), "w") as f:
+        json.dump(payload, f)
+    assert load_calibration(d) is None
+
+
+def test_probe_storage_kernel_terms_match_feature_detection(tmp_path):
+    """probe_storage fills the v2 terms exactly when the kernel/filesystem
+    supports the engine, and leaves the exclusion sentinels otherwise."""
+    d = str(tmp_path)
+    cal = probe_storage(d, probe_bytes=1 << 20)
+    assert cal.version == CALIBRATION_VERSION
+    if uring_available()[0]:
+        assert cal.uring_sqe_s >= 0 and cal.uring_reg_s >= 0
+    else:
+        assert cal.uring_sqe_s < 0
+    if odirect_available(d)[0]:
+        assert cal.odirect_seq_read_bps > 0
+        assert cal.odirect_seq_write_bps > 0
+        assert cal.odirect_align_s >= 0
+    else:
+        assert cal.odirect_seq_read_bps < 0
+    # the scratch probe files are gone
+    assert os.listdir(d) == []
+
+
+def test_pinned_kernel_engine_fallback_reason_recorded(tmp_path, world,
+                                                       monkeypatch):
+    """Pinning uring/odirect on a host that cannot honor it degrades
+    gracefully AND observably: the stats name the engine that actually ran
+    and carry the feature-detection reason."""
+    import repro.io.engine as engine_mod
+    blocks, data, ref = world
+    d = str(tmp_path / "fb")
+    plan = plan_layout("subfiled_fpp", blocks, num_procs=4,
+                       global_shape=GLOBAL)
+    ds = Dataset.create(d, engine="pread")
+    ds.write("B", plan, np.float32, data)
+    monkeypatch.setattr(engine_mod, "uring_available",
+                        lambda: (False, "io_uring_setup: ENOSYS (emulated)"))
+    monkeypatch.setattr(engine_mod, "odirect_available",
+                        lambda p: (False, "tmpfs refuses O_DIRECT "
+                                          "(emulated)"))
+    arr, st = ds.read("B", Block((0, 0, 0), GLOBAL), engine="uring:4")
+    np.testing.assert_array_equal(arr, ref)
+    assert st.engine.startswith("overlapped")
+    assert "uring -> overlapped" in st.engine_reason
+    arr, st = ds.read("B", Block((0, 0, 0), GLOBAL), engine="odirect")
+    np.testing.assert_array_equal(arr, ref)
+    assert st.engine == "pread"
+    assert "odirect -> pread" in st.engine_reason
+    ds.close()
+    # session-pinned specs degrade the same way, at open time
+    ds2 = Dataset.open(d, engine="uring")
+    arr, st = ds2.read("B", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+    assert st.engine.startswith("overlapped")
+    assert "uring -> overlapped" in st.engine_reason
+    ds2.close()
+
+
+@pytest.mark.skipif(not uring_available()[0],
+                    reason=f"io_uring unavailable: {uring_available()[1]}")
+def test_injected_kernel_calibration_drives_choice_to_uring(tmp_path,
+                                                            world):
+    """End-to-end: a cold kernel-capable calibration pushes a many-group
+    auto read onto the real uring engine, and the result stays correct."""
+    blocks, data, ref = world
+    d = str(tmp_path / "kc")
+    plan = plan_layout("subfiled_fpp", blocks, num_procs=4,
+                       global_shape=GLOBAL)
+    ds = Dataset.create(d, engine="pread")
+    ds.write("B", plan, np.float32, data)
+    rplan = ds.plan_read("B", Block((0, 0, 0), GLOBAL))
+    ds.close()
+    if rplan.num_groups <= 1:
+        pytest.skip("single-group plan cannot exercise the flip")
+    kds = Dataset.open(d, engine="auto", calibration=COLD_KERNEL)
+    arr, st = kds.read_planned(rplan)
+    np.testing.assert_array_equal(arr, ref)
+    assert st.engine.startswith("uring")
+    assert "predicted" in st.engine_reason
+    kds.close()

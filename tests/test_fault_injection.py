@@ -29,8 +29,11 @@ from repro.core.blocks import Block
 from repro.core.policy import (ACCESS_LOG_CAPACITY, ACCESS_LOG_NAME,
                                AccessLog, AccessRecord, LayoutPolicy,
                                classify_region)
-from repro.io import Dataset, PreadEngine, reorganize
+from repro.io import (Dataset, ODirectEngine, PreadEngine, UringEngine,
+                      reorganize)
+from repro.io.direct import odirect_available
 from repro.io.format import DatasetIndex
+from repro.io.uring import uring_available
 
 GLOBAL = (32, 32, 32)
 
@@ -53,6 +56,56 @@ class KillAfterGroups(PreadEngine):
             raise InjectedCrash(f"killed before write group {g}")
         self.remaining -= 1
         super()._write_group(plan, g, buffers, store)
+
+
+class KillAfterGroupsODirect(ODirectEngine):
+    """The same kill, through the O_DIRECT write path (aligned middle +
+    buffered ragged edges)."""
+
+    name = "kill-after-groups-odirect"
+
+    def __init__(self, groups_before_crash: int):
+        super().__init__()
+        self.remaining = groups_before_crash
+
+    def _write_group(self, plan, g, buffers, store):
+        if self.remaining <= 0:
+            raise InjectedCrash(f"killed before write group {g}")
+        self.remaining -= 1
+        super()._write_group(plan, g, buffers, store)
+
+
+class KillAfterGroupsUring(UringEngine):
+    """The same kill, between io_uring group submissions — groups already
+    in flight must drain before the crash surfaces (buffers cannot be
+    freed under active kernel DMA)."""
+
+    name = "kill-after-groups-uring"
+
+    def __init__(self, groups_before_crash: int):
+        super().__init__()
+        self.remaining = groups_before_crash
+
+    def _prepare_write_group(self, plan, g, buffers):
+        if self.remaining <= 0:
+            raise InjectedCrash(f"killed before submitting group {g}")
+        self.remaining -= 1
+        return super()._prepare_write_group(plan, g, buffers)
+
+
+def _kernel_killer(tmp_path, eng: str, kill_at: int):
+    """An engine-under-test for the kernel kill matrix, or a skip when the
+    runner cannot exercise the real kernel path (falling back would only
+    re-test the pread matrix above)."""
+    if eng == "uring":
+        ok, why = uring_available()
+        if not ok:
+            pytest.skip(f"io_uring unavailable: {why}")
+        return KillAfterGroupsUring(kill_at)
+    ok, why = odirect_available(str(tmp_path))
+    if not ok:
+        pytest.skip(f"O_DIRECT unavailable: {why}")
+    return KillAfterGroupsODirect(kill_at)
 
 
 def _world(seed=3, nprocs=4):
@@ -139,6 +192,33 @@ def test_reorganize_killed_between_groups(tmp_path, kill_at):
     assert _dir_hashes(src) == src_before
     # retry over the dead space (same destination directory) succeeds
     _, again, _ = reorganize(src, dst, "B", "auto")
+    arr, _ = again.read("B", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+    again.close()
+    assert _assert_dst_absent_or_consistent(dst, ref) == "consistent"
+
+
+@pytest.mark.parametrize("kill_at", [0, 1, 2, 3])
+@pytest.mark.parametrize("eng", ["uring", "odirect"])
+def test_reorganize_killed_between_groups_kernel_engines(tmp_path, eng,
+                                                         kill_at):
+    """The kill matrix through the kernel-bypass write paths: the
+    commit-after-data invariant must hold regardless of which engine moved
+    the bytes, and the same-plan retry through the *real* (un-killed)
+    kernel engine must land byte-correct over the dead space."""
+    blocks, data, ref = _world()
+    src = _write_src(tmp_path, blocks, data)
+    src_before = _dir_hashes(src)
+    dst = str(tmp_path / "dst")
+
+    with pytest.raises(InjectedCrash):
+        reorganize(src, dst, "B", "auto",
+                   engine=_kernel_killer(tmp_path, eng, kill_at))
+
+    assert _assert_dst_absent_or_consistent(dst, ref) == "absent"
+    assert _dir_hashes(src) == src_before
+    # same-plan retry, now through the engine's production spec
+    _, again, _ = reorganize(src, dst, "B", "auto", engine=eng)
     arr, _ = again.read("B", Block((0, 0, 0), GLOBAL))
     np.testing.assert_array_equal(arr, ref)
     again.close()

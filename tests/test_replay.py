@@ -61,8 +61,13 @@ def _capture(tmp_path, *, with_reorg=True) -> str:
 # satellite 3: determinism, per engine
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("engine", ["memmap", "pread", "overlapped"])
+@pytest.mark.parametrize("engine", ["memmap", "pread", "overlapped",
+                                    "uring", "odirect"])
 def test_replay_deterministic_per_engine(tmp_path, engine):
+    # the kernel-bypass engines feature-detect and degrade to
+    # overlapped/pread where unsupported, so these legs run everywhere:
+    # on capable kernels they pin the real kernel path, elsewhere they
+    # pin the documented fallback — deterministic either way
     trace = load_trace(_capture(tmp_path))
     r1 = replay_trace(trace, os.path.join(str(tmp_path), "rp1"),
                       engine=engine)
