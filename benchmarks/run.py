@@ -12,10 +12,11 @@ import sys
 import traceback
 
 from . import (bench_auto_select, bench_checkpoint, bench_clustering,
-               bench_cost_model, bench_distributed_reorg, bench_end_to_end,
-               bench_layout_policy, bench_merging, bench_read_decomposition,
-               bench_read_patterns, bench_read_service, bench_reorg_read,
-               bench_staging, bench_write_layouts, replay, roofline)
+               bench_codec, bench_cost_model, bench_distributed_reorg,
+               bench_end_to_end, bench_layout_policy, bench_merging,
+               bench_read_decomposition, bench_read_patterns,
+               bench_read_service, bench_reorg_read, bench_staging,
+               bench_write_layouts, replay, roofline)
 from .common import TmpDir
 
 SECTIONS = [
@@ -32,6 +33,7 @@ SECTIONS = [
     ("read_service", bench_read_service.run),
     ("auto_select", bench_auto_select.run),
     ("layout_policy", bench_layout_policy.run),
+    ("codec", bench_codec.run),
     ("ckpt_integration", bench_checkpoint.run),
     ("replay", replay.run),
     ("roofline", roofline.run),

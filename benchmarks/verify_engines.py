@@ -82,40 +82,47 @@ def main() -> int:
         sub = Block((5, 9, 2), (61, 40, 63))
         for strat, scheme in STRATEGIES:
             for align in (None, GPFS_BLOCK):
-                plan = plan_layout(strat, blocks, num_procs=8,
-                                   global_shape=GLOBAL, reorg_scheme=scheme,
-                                   num_stagers=2)
-                file_digests = {}
-                read_digests = {}
-                for eng in engines:
-                    d = tmp.sub(f"ve_{strat}_{align or 0}_{eng}")
-                    ds = Dataset.create(d, engine=eng)
-                    ds.write("B", plan, np.float32, data, align=align)
-                    file_digests[eng] = _digest_dir(d)
-                    for reng in engines:
-                        arr, _ = ds.read("B", whole, engine=reng)
-                        arr2, _ = ds.read("B", sub, engine=reng)
-                        read_digests[(eng, reng)] = (
-                            hashlib.sha256(arr.tobytes()).hexdigest(),
-                            hashlib.sha256(arr2.tobytes()).hexdigest())
-                    ds.close()
-                ref_files = file_digests[engines[0]]
-                ref_reads = read_digests[(engines[0], engines[0])]
-                for eng, dig in file_digests.items():
-                    if dig != ref_files:
-                        failures.append(
-                            f"write divergence: {strat}/align={align} "
-                            f"engine={eng}")
-                for key, dig in read_digests.items():
-                    if dig != ref_reads:
-                        failures.append(
-                            f"read divergence: {strat}/align={align} "
-                            f"write={key[0]} read={key[1]}")
-                tag = f"{strat}/align={'16M' if align else 'none'}"
-                print(f"verify_engines/{tag}: "
-                      f"{len(engines)} writers x {len(engines)} readers "
-                      f"{'DIVERGED' if failures else 'identical'}",
-                      flush=True)
+                # codec leg (index v4): the compressed matrix must stay as
+                # byte-identical as the raw one — every engine writes the
+                # same encoded extents and every engine decodes them back
+                for codec in ("none", "zlib"):
+                    plan = plan_layout(strat, blocks, num_procs=8,
+                                       global_shape=GLOBAL,
+                                       reorg_scheme=scheme, num_stagers=2)
+                    file_digests = {}
+                    read_digests = {}
+                    for eng in engines:
+                        d = tmp.sub(f"ve_{strat}_{align or 0}_{codec}_{eng}")
+                        ds = Dataset.create(d, engine=eng)
+                        ds.write("B", plan, np.float32, data, align=align,
+                                 codec=codec)
+                        file_digests[eng] = _digest_dir(d)
+                        for reng in engines:
+                            arr, _ = ds.read("B", whole, engine=reng)
+                            arr2, _ = ds.read("B", sub, engine=reng)
+                            read_digests[(eng, reng)] = (
+                                hashlib.sha256(arr.tobytes()).hexdigest(),
+                                hashlib.sha256(arr2.tobytes()).hexdigest())
+                        ds.close()
+                    ref_files = file_digests[engines[0]]
+                    ref_reads = read_digests[(engines[0], engines[0])]
+                    for eng, dig in file_digests.items():
+                        if dig != ref_files:
+                            failures.append(
+                                f"write divergence: {strat}/align={align}"
+                                f"/codec={codec} engine={eng}")
+                    for key, dig in read_digests.items():
+                        if dig != ref_reads:
+                            failures.append(
+                                f"read divergence: {strat}/align={align}"
+                                f"/codec={codec} "
+                                f"write={key[0]} read={key[1]}")
+                    tag = (f"{strat}/align={'16M' if align else 'none'}"
+                           f"/codec={codec}")
+                    print(f"verify_engines/{tag}: "
+                          f"{len(engines)} writers x {len(engines)} readers "
+                          f"{'DIVERGED' if failures else 'identical'}",
+                          flush=True)
     finally:
         tmp.cleanup()
     if failures:

@@ -151,12 +151,15 @@ def tc_upper_bound_nonblocking(t: StagingTimings, N: int) -> float:
 
 #: file persisted next to index.json
 CALIBRATION_NAME = "calibration.json"
-#: v2 (ISSUE 9) added the kernel-bypass terms (uring_*/odirect_*)
-CALIBRATION_VERSION = 2
-#: persisted versions that still load: a v1 file is *not* stale — its new
-#: fields default to the "unsupported" sentinels, so the kernel-bypass
-#: engines simply don't compete until the TTL re-probe upgrades it
-SUPPORTED_CALIBRATION_VERSIONS = (1, 2)
+#: v2 (ISSUE 9) added the kernel-bypass terms (uring_*/odirect_*); v3
+#: (ISSUE 10) the per-codec compress/decompress bandwidths (*_comp_bps /
+#: *_decomp_bps)
+CALIBRATION_VERSION = 3
+#: persisted versions that still load: an older file is *not* stale — its
+#: new fields default to the "unsupported" sentinels, so the kernel-bypass
+#: engines (v1) and compressed-layout candidates (v2) simply don't compete
+#: until the TTL re-probe upgrades it
+SUPPORTED_CALIBRATION_VERSIONS = (1, 2, 3)
 #: persisted calibrations older than this are re-probed
 CALIBRATION_TTL_S = 7 * 24 * 3600.0
 #: probe file size — small enough that calibration costs tens of ms
@@ -209,6 +212,23 @@ class EngineCalibration:
     odirect_seq_write_bps: float = -1.0  # O_DIRECT sequential write (device)
     odirect_align_s: float = 0.0    # one aligned 4 KiB direct read — the
     # bounce-block penalty a ragged group edge costs
+    # -- per-codec bandwidth terms (v3, ISSUE 10), measured over a
+    # low-entropy probe buffer (logical bytes per second); negative
+    # sentinel = the codec is unavailable in this process, so compressed
+    # candidates carrying it predict inf and never win
+    zlib_comp_bps: float = -1.0
+    zlib_decomp_bps: float = -1.0
+    lz4_comp_bps: float = -1.0
+    lz4_decomp_bps: float = -1.0
+
+    def codec_bps(self, codec: str, direction: str = "read") -> float:
+        """Measured bandwidth of ``codec`` for this direction (decompress
+        on reads, compress on writes); ``-1.0`` when unmeasured or
+        unavailable, ``inf`` for the identity codec."""
+        if codec == "none":
+            return math.inf
+        return float(getattr(self, f"{codec}_decomp_bps" if direction ==
+                             "read" else f"{codec}_comp_bps", -1.0))
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -345,6 +365,9 @@ def probe_storage(dirpath: str,
         uring_sqe_s, uring_reg_s = _probe_uring(fd, offsets)
         (odirect_seq_read_bps, odirect_seq_write_bps,
          odirect_align_s) = _probe_odirect(path + ".direct")
+
+        # -- per-codec bandwidths (v3, ISSUE 10): CPU-side, no file needed
+        codec_bps = _probe_codecs()
     finally:
         if fd is not None:
             os.close(fd)
@@ -362,7 +385,11 @@ def probe_storage(dirpath: str,
         uring_sqe_s=uring_sqe_s, uring_reg_s=uring_reg_s,
         odirect_seq_read_bps=odirect_seq_read_bps,
         odirect_seq_write_bps=odirect_seq_write_bps,
-        odirect_align_s=odirect_align_s)
+        odirect_align_s=odirect_align_s,
+        zlib_comp_bps=codec_bps.get("zlib", (-1.0, -1.0))[0],
+        zlib_decomp_bps=codec_bps.get("zlib", (-1.0, -1.0))[1],
+        lz4_comp_bps=codec_bps.get("lz4", (-1.0, -1.0))[0],
+        lz4_decomp_bps=codec_bps.get("lz4", (-1.0, -1.0))[1])
 
 
 def _probe_uring(fd: int, offsets) -> tuple:
@@ -405,6 +432,42 @@ def _probe_uring(fd: int, offsets) -> tuple:
         return -1.0, 0.0
     finally:
         ring.close()
+
+
+#: codec-probe buffer size: big enough to amortize call overhead into a
+#: stable bandwidth, small enough to keep the probe at a few milliseconds
+_CODEC_PROBE_BYTES = 2 << 20
+
+
+def _probe_codecs() -> dict:
+    """Measure each registered codec's compress/decompress bandwidth over
+    a low-entropy buffer (quantized-science-data stand-in) — returns
+    ``{name: (comp_bps, decomp_bps)}`` for every codec except ``none``.
+    Codecs absent from this process simply don't appear, leaving their
+    calibration fields at the "unavailable" sentinel."""
+    try:
+        from .codecs import CODECS, decode
+    except Exception:                   # pragma: no cover - import guard
+        return {}
+    import numpy as _np
+    rng = _np.random.default_rng(0x5EED)
+    buf = rng.integers(0, 16, size=_CODEC_PROBE_BYTES,
+                       dtype=_np.uint8).tobytes()
+    out = {}
+    for name, codec in CODECS.items():
+        if name == "none":
+            continue
+        try:
+            t0 = time.perf_counter()
+            enc = codec.compress(buf)
+            comp_bps = len(buf) / max(time.perf_counter() - t0, 1e-9)
+            t0 = time.perf_counter()
+            decode(name, enc, len(buf))
+            decomp_bps = len(buf) / max(time.perf_counter() - t0, 1e-9)
+        except Exception:               # pragma: no cover - defensive
+            continue
+        out[name] = (comp_bps, decomp_bps)
+    return out
 
 
 def _probe_odirect(path: str) -> tuple:
@@ -533,7 +596,8 @@ def storage_calibration(dirpath: str,
 
 def predict_seconds(cal: EngineCalibration, engine: str, *, groups: int,
                     runs: int, bytes_moved: int, span_bytes: int,
-                    direction: str = "read") -> float:
+                    direction: str = "read", codec: str = "none",
+                    codec_bytes: int = 0) -> float:
     """Predicted wall seconds for one plan execution under ``engine``.
 
     The model has two terms.  A **latency** term: grouped engines pay one
@@ -563,24 +627,39 @@ def predict_seconds(cal: EngineCalibration, engine: str, *, groups: int,
     engines.  Both return ``inf`` when their calibration terms carry the
     "unsupported" sentinel, so they never win where the probe found no
     kernel/filesystem support.
+
+    ``codec``/``codec_bytes`` (v3 terms) add the CPU cost of the codec
+    pass — ``codec_bytes`` *logical* bytes decompressed on reads or
+    compressed on writes at the measured bandwidth.  The term is
+    engine-independent (the bounce-decode runs in the shared scatter, the
+    encode before planning), so it shifts every engine's prediction
+    equally; an unmeasured or unavailable codec predicts ``inf``, keeping
+    compressed candidates out of the competition entirely.
     """
+    codec_s = 0.0
+    if codec != "none" and codec_bytes > 0:
+        cbw = cal.codec_bps(codec, direction)
+        if cbw <= 0:
+            return math.inf
+        codec_s = codec_bytes / cbw
     base, _, arg = engine.partition(":")
     if base == "memmap":
         bw = cal.memmap_bps if direction == "read" else \
             (cal.memmap_write_bps or cal.memmap_bps)
-        return runs * cal.page_miss_s + bytes_moved / bw
+        return runs * cal.page_miss_s + bytes_moved / bw + codec_s
     latency = groups * (cal.seek_latency_s + cal.preadv_group_overhead_s)
     if direction == "read":
         stream = span_bytes / cal.seq_read_bps + bytes_moved / cal.memmap_bps
     else:
         stream = span_bytes / cal.seq_write_bps
     if base == "pread":
-        return latency + stream
+        return latency + stream + codec_s
     if base == "overlapped":
         depth = int(arg) if arg else 8
         dd = max(1, min(depth, groups))
         par = max(1.0, min(cal.parallel_scaling, float(dd)))
-        return latency / dd + stream / par + groups * DISPATCH_OVERHEAD_S
+        return latency / dd + stream / par + groups * DISPATCH_OVERHEAD_S \
+            + codec_s
     if base == "uring":
         if cal.uring_sqe_s < 0:
             return math.inf
@@ -588,7 +667,7 @@ def predict_seconds(cal: EngineCalibration, engine: str, *, groups: int,
         dd = max(1, min(depth, groups))
         par = max(1.0, min(cal.parallel_scaling, float(dd)))
         return (latency / dd + stream / par + groups * cal.uring_sqe_s
-                + cal.uring_reg_s / URING_REG_AMORT)
+                + cal.uring_reg_s / URING_REG_AMORT + codec_s)
     if base == "odirect":
         bw = cal.odirect_seq_read_bps if direction == "read" \
             else cal.odirect_seq_write_bps
@@ -598,14 +677,15 @@ def predict_seconds(cal: EngineCalibration, engine: str, *, groups: int,
         # directions: reads scatter out of it, writes assemble into it)
         stream_d = span_bytes / bw + bytes_moved / cal.memmap_bps
         return groups * (cal.seek_latency_s + cal.odirect_align_s) \
-            + stream_d
+            + stream_d + codec_s
     raise ValueError(f"unknown engine {engine!r}")
 
 
 def choose_engine(cal: EngineCalibration, *, groups: int, runs: int,
                   bytes_moved: int, span_bytes: int,
                   direction: str = "read",
-                  depths: tuple = DEPTH_CANDIDATES) -> EngineChoice:
+                  depths: tuple = DEPTH_CANDIDATES,
+                  codec: str = "none", codec_bytes: int = 0) -> EngineChoice:
     """Pick the engine (and queue depth) with the lowest predicted wall time
     for a plan of this shape.  Ties prefer the simpler engine (memmap over
     pread over overlapped, shallower queue over deeper).
@@ -630,7 +710,8 @@ def choose_engine(cal: EngineCalibration, *, groups: int, runs: int,
                             predicted_seconds=0.0, predictions={},
                             reason="empty plan")
     shape = dict(groups=groups, runs=runs, bytes_moved=bytes_moved,
-                 span_bytes=span_bytes, direction=direction)
+                 span_bytes=span_bytes, direction=direction,
+                 codec=codec, codec_bytes=codec_bytes)
     preds = {"memmap": predict_seconds(cal, "memmap", **shape),
              "pread": predict_seconds(cal, "pread", **shape)}
     for d in depths:
@@ -662,7 +743,8 @@ def choose_engine(cal: EngineCalibration, *, groups: int, runs: int,
 
 def predict_best_seconds(cal: EngineCalibration, *, groups: int, runs: int,
                          bytes_moved: int, span_bytes: int,
-                         direction: str = "read") -> float:
+                         direction: str = "read", codec: str = "none",
+                         codec_bytes: int = 0) -> float:
     """Best achievable predicted wall time over all engines for a plan of
     this shape — the per-layout read-cost the :class:`repro.core.policy.
     LayoutPolicy` scores candidate layouts with (each candidate is assumed
@@ -671,7 +753,8 @@ def predict_best_seconds(cal: EngineCalibration, *, groups: int, runs: int,
         return 0.0
     return choose_engine(cal, groups=groups, runs=runs,
                          bytes_moved=bytes_moved, span_bytes=span_bytes,
-                         direction=direction).predicted_seconds
+                         direction=direction, codec=codec,
+                         codec_bytes=codec_bytes).predicted_seconds
 
 
 # ---------------------------------------------------------------------------
@@ -789,12 +872,19 @@ def observe_reorg_overhead(dirpath: str, overhead_s: float,
 
 def predict_best_seconds_batch(cal: EngineCalibration, *,
                                groups, runs, bytes_moved, span_bytes,
-                               direction: str = "read"):
+                               direction: str = "read",
+                               codec: str = "none", codec_bytes=0):
     """Vectorized :func:`predict_best_seconds`: element-wise best-engine
     predicted wall time over arrays of plan shapes (one entry per plan).
     Exactly the scalar model's arithmetic, evaluated with numpy — the
     layout policy prices hundreds of hypothetical gather plans per
-    candidate with this."""
+    candidate with this.
+
+    ``codec`` is a scalar (one codec per candidate layout) and
+    ``codec_bytes`` an array of per-plan logical bytes run through it; the
+    codec term is engine-independent, so it is added after the per-engine
+    minimum.  An unavailable codec yields ``inf`` for every non-empty
+    plan."""
     import numpy as np
     g = np.asarray(groups, dtype=np.float64)
     r = np.asarray(runs, dtype=np.float64)
@@ -824,6 +914,11 @@ def predict_best_seconds_batch(cal: EngineCalibration, *,
         best = np.minimum(best, g * (cal.seek_latency_s
                                      + cal.odirect_align_s)
                           + sp / odirect_bw + b / cal.memmap_bps)
+    if codec != "none":
+        cbw = cal.codec_bps(codec, direction)
+        cb = np.asarray(codec_bytes, dtype=np.float64)
+        best = best + (cb / cbw if cbw > 0 else np.where(cb > 0, math.inf,
+                                                         0.0))
     return np.where((g <= 0) | (b <= 0), 0.0, best)
 
 

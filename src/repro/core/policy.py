@@ -105,6 +105,11 @@ PRIOR_MASS = 8.0
 #: an axis covered at or below this fraction of its extent reads as "thin"
 THIN_FRAC = 0.25
 
+#: a codec must save at least this fraction of stored bytes (measured
+#: ratio <= 1 - MIN_CODEC_SAVING) to become a layout candidate — below it
+#: the "win" is whole-chunk-fetch seek geometry, not compression
+MIN_CODEC_SAVING = 0.05
+
 #: disambiguates concurrent atomic-replace temp files (two sessions, two
 #: processes): each writer replaces from its own temp name, so the log file
 #: itself is always one complete JSON document
@@ -672,10 +677,14 @@ class PolicyDecision:
     write_scores: dict = dataclasses.field(default_factory=dict)
     expected_reads: float = 0.0  # mix replays the build cost amortized over
     num_prior_records: int = 0   # how many of num_records came from a prior
+    #: per-chunk codec of the winning candidate ("none" = raw extents) —
+    #: the second layout dimension (ISSUE 10) scored jointly with chunking
+    codec: str = "none"
 
     def to_json(self) -> dict:
         return {"strategy": self.strategy,
                 "scheme": list(self.scheme) if self.scheme else None,
+                "codec": self.codec,
                 "reason": self.reason, "num_records": self.num_records,
                 "num_prior_records": self.num_prior_records,
                 "expected_reads": round(float(self.expected_reads), 3),
@@ -890,6 +899,7 @@ class LayoutPolicy:
                       include_write_cost: bool | None = None,
                       align: int | None = None,
                       current_extents=None,
+                      codec_ratios: dict | None = None,
                       now: float | None = None) -> PolicyDecision:
         """Score every candidate layout on its lifecycle and return the
         winner.
@@ -903,7 +913,14 @@ class LayoutPolicy:
         where the variable's chunks live *now* — additionally charges each
         candidate the cost of gathering its chunk regions out of the
         current layout, which is what post-hoc ``reorganize`` actually
-        pays per target chunk; ``now`` pins the recency-decay reference
+        pays per target chunk; ``codec_ratios`` maps codec names to their
+        *measured* stored/logical size ratio on this variable's data and
+        makes the codec a second layout dimension: every chunking
+        candidate is also scored once per codec (writes shrink by the
+        ratio but pay compression; reads fetch whole stored extents and
+        pay decompression), and the winner's codec lands in
+        :attr:`PolicyDecision.codec` (``None`` keeps v3 behavior — raw
+        extents only); ``now`` pins the recency-decay reference
         time (tests, reproducible decisions)."""
         blocks = list(blocks)
         global_shape = tuple(int(g) for g in global_shape)
@@ -1010,37 +1027,102 @@ class LayoutPolicy:
             span_bytes=np.asarray([e.span_bytes for e in ests],
                                   dtype=np.int64))
 
+        # codec dimension: a compressed extent can only be decoded whole,
+        # so a codec variant's read plan fetches the full stored extent of
+        # every chunk the region touches (groups = runs = hit chunks, span
+        # = ratio-scaled whole-chunk bytes) and decompresses the whole
+        # logical chunk; one batch pricing pass per codec
+        # a codec with an exclusion sentinel in the calibration (never
+        # probed, or the library is absent) is not a candidate at all —
+        # admitting it would only produce inf/nan audit entries.  A codec
+        # that saves less than MIN_CODEC_SAVING is dropped too: near-1.0
+        # ratios can still "win" purely through the whole-chunk-fetch
+        # geometry (fewer seeks), and compression should never be chosen
+        # as a seek-avoidance trick on incompressible data
+        codec_items = []
+        if codec_ratios:
+            codec_items = [(n, float(r))
+                           for n, r in sorted(codec_ratios.items())
+                           if n != "none" and float(r) > 0.0
+                           and float(r) <= 1.0 - MIN_CODEC_SAVING
+                           and cal.codec_bps(n, "read") > 0.0
+                           and cal.codec_bps(n, "write") > 0.0]
+        prices_by_codec: dict = {}
+        for cname, ratio in codec_items:
+            cg, cr, cb_moved, csp, ccb = [], [], [], [], []
+            for _, _, _, los, his, _subf, _ in candidates:
+                whole = (his - los).prod(axis=1) * itemsize
+                for _weight, region, _cls in mix:
+                    ilo = np.maximum(los, np.asarray(region.lo,
+                                                     dtype=np.int64))
+                    ihi = np.minimum(his, np.asarray(region.hi,
+                                                     dtype=np.int64))
+                    hit = (ilo < ihi).all(axis=1)
+                    k = int(hit.sum())
+                    payload = int((ihi - ilo).prod(axis=1)[hit].sum())
+                    logical = int(whole[hit].sum())
+                    cg.append(k)
+                    cr.append(k)
+                    cb_moved.append(payload * itemsize)
+                    csp.append(max(k, int(logical * ratio)) if k else 0)
+                    ccb.append(logical)
+            prices_by_codec[cname] = predict_best_seconds_batch(
+                cal,
+                groups=np.asarray(cg, dtype=np.int64),
+                runs=np.asarray(cr, dtype=np.int64),
+                bytes_moved=np.asarray(cb_moved, dtype=np.int64),
+                span_bytes=np.asarray(csp, dtype=np.int64),
+                codec=cname,
+                codec_bytes=np.asarray(ccb, dtype=np.int64))
+
         scores: dict = {}
         read_scores: dict = {}
         write_scores: dict = {}
+        variant: dict = {}  # score key -> (candidate index, codec name)
         n_mix = len(mix)
         for ci, (name, _, _, los, his, subf, _) in enumerate(candidates):
-            t_read = 0.0
-            for j, (weight, _region, _cls) in enumerate(mix):
-                t_read += weight * float(prices[ci * n_mix + j])
-            read_scores[name] = t_read
+            west = None
             if include_write_cost:
                 west = estimate_write_shape(los, his, itemsize,
                                             subfiles=subf, align=align)
-                total = predict_lifecycle_seconds(
-                    cal, write=west.shape_kwargs(), reads=t_read,
-                    expected_reads=expected_reads, num_chunks=len(los),
-                    gather=gather_for.get(name, 0.0),
-                    chunk_overhead_s=self.chunk_overhead_s)
-                write_scores[name] = total - expected_reads * t_read
-                scores[name] = total
-            else:
-                scores[name] = t_read
+            logical_total = int((his - los).prod(axis=1).sum()) * itemsize
+            for cname, ratio in [("none", 1.0)] + codec_items:
+                key = name if cname == "none" else f"{name}+{cname}"
+                variant[key] = (ci, cname)
+                pvec = (prices if cname == "none"
+                        else prices_by_codec[cname])
+                t_read = 0.0
+                for j, (weight, _region, _cls) in enumerate(mix):
+                    t_read += weight * float(pvec[ci * n_mix + j])
+                read_scores[key] = t_read
+                if include_write_cost:
+                    wkw = west.shape_kwargs()
+                    if cname != "none":
+                        wkw["bytes_moved"] = max(
+                            len(los), int(wkw["bytes_moved"] * ratio))
+                        wkw["span_bytes"] = max(
+                            len(los), int(wkw["span_bytes"] * ratio))
+                        wkw["codec"] = cname
+                        wkw["codec_bytes"] = logical_total
+                    total = predict_lifecycle_seconds(
+                        cal, write=wkw, reads=t_read,
+                        expected_reads=expected_reads, num_chunks=len(los),
+                        gather=gather_for.get(name, 0.0),
+                        chunk_overhead_s=self.chunk_overhead_s)
+                    write_scores[key] = total - expected_reads * t_read
+                    scores[key] = total
+                else:
+                    scores[key] = t_read
 
         if max(read_scores.values()) <= 0.0:
             # every recorded region misses this variable entirely — a
             # zero-read-cost "win" would be the insertion-order accident,
             # not a data-driven choice
             return default_decision("access history does not intersect")
-        # insertion order breaks ties: the default scheme is first
+        # insertion order breaks ties: the default scheme (raw) is first
         best_name = min(scores, key=lambda k: scores[k])
-        best = next(c for c in candidates if c[0] == best_name)
-        _, strategy, scheme, _, _, _, layout = best
+        bi, best_codec = variant[best_name]
+        _, strategy, scheme, _, _, _, layout = candidates[bi]
         if layout is None:
             layout = reorg_plan(scheme)
 
@@ -1067,4 +1149,5 @@ class LayoutPolicy:
                               read_scores=read_scores,
                               write_scores=write_scores,
                               expected_reads=float(expected_reads),
-                              num_prior_records=n_prior)
+                              num_prior_records=n_prior,
+                              codec=best_codec)

@@ -58,6 +58,7 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
+from ..core.codecs import CODEC_NONE, decode
 from ..core.layouts import ChunkPlan
 from .direct import (DIRECT_ALIGN, aligned_empty, odirect_available,
                      open_direct, pread_into_direct, pwrite_direct)
@@ -222,15 +223,23 @@ class SubfileStore:
                     os.fsync(fd)
 
     def close(self) -> None:
+        # every cached handle is closed even if one close raises (EIO on
+        # flush): stopping at the first failure would leak the rest of a
+        # Dataset.refresh()/reorg-worker session's fds
         with self._lock:
-            for fd in self._fds.values():
-                os.close(fd)
-            for fd in self._dfds.values():
-                os.close(fd)
+            first_exc = None
+            for fd in list(self._fds.values()) + list(self._dfds.values()):
+                try:
+                    os.close(fd)
+                except OSError as e:
+                    if first_exc is None:
+                        first_exc = e
             self._fds.clear()
             self._dfds.clear()
             self._maps.clear()
             self._wmaps.clear()
+        if first_exc is not None:
+            raise first_exc
 
 
 def scatter_row(plan: ReadPlan, row: int, span: np.ndarray,
@@ -240,12 +249,27 @@ def scatter_row(plan: ReadPlan, row: int, span: np.ndarray,
     Public because it is the *execution* half of the plan/execute split:
     super-plan consumers (:mod:`repro.serve.read_service`) replay member
     plan rows against an already-fetched flat buffer — the same scatter
-    every engine performs, with no I/O attached."""
-    elems = span.view(plan.dtype)
+    every engine performs, with no I/O attached.
+
+    This is also the single decode point for per-chunk codecs (index v4):
+    a compressed row's span is its WHOLE stored extent, bounce-decoded to
+    logical bytes here, then gathered with the same strided view.  Raw
+    rows take the original zero-copy path untouched — memmap spans stay
+    views straight into the page cache.
+    """
+    itemsize = plan.dtype.itemsize
+    if plan.codecs is not None and plan.codecs[row] != CODEC_NONE:
+        shape = plan.chunk_his[row] - plan.chunk_los[row]
+        logical = int(shape.prod()) * itemsize
+        raw = decode(int(plan.codecs[row]), span, logical)
+        first = int(((plan.inter_los[row] - plan.chunk_los[row])
+                     * plan.strides[row]).sum())
+        elems = np.frombuffer(raw, dtype=plan.dtype, offset=first * itemsize)
+    else:
+        elems = span.view(plan.dtype)
     ishape = tuple(int(s) for s in
                    (plan.inter_his[row] - plan.inter_los[row]))
-    byte_strides = tuple(int(s) * plan.dtype.itemsize
-                         for s in plan.strides[row])
+    byte_strides = tuple(int(s) * itemsize for s in plan.strides[row])
     view = np.lib.stride_tricks.as_strided(elems, shape=ishape,
                                            strides=byte_strides)
     out[plan.out_slices(row)] = view

@@ -9,8 +9,13 @@ A *dataset* is a directory holding:
     locate intersecting chunks without scanning the whole record list, plus
     (format version 3) an optional per-chunk CRC-32 checksum of the stored
     extent bytes, so recovery paths can *validate* a partially-built
-    destination instead of trusting it.  Version-2 files (no checksums)
-    load transparently; checksums are simply absent.
+    destination instead of trusting it, plus (format version 4) an optional
+    per-chunk *codec*: ``nbytes`` is always the STORED on-disk size and
+    ``lbytes`` the logical (decoded) size, so every byte-offset consumer —
+    planner, append cursor, journal CRC validation, ``verify_checksums`` —
+    keeps working on stored bytes unchanged.  Version-2 files (no
+    checksums) and version-3 files (no codecs) load transparently; absent
+    keys mean "no checksum" / "codec none".
 
 Optional 16 MiB extent alignment mirrors GPFS's internal block size on Summit
 (§3.2: "GPFS internally splits big data chunks into 16MB blocks").
@@ -27,6 +32,7 @@ from typing import Sequence
 import numpy as np
 
 from ..core.blocks import Block
+from ..core.codecs import codec_code
 from .spatial import SpatialChunkIndex
 
 __all__ = ["ChunkRecord", "DatasetIndex", "VarRows", "GPFS_BLOCK",
@@ -34,11 +40,12 @@ __all__ = ["ChunkRecord", "DatasetIndex", "VarRows", "GPFS_BLOCK",
 
 GPFS_BLOCK = 16 * 1024 * 1024
 INDEX_NAME = "index.json"
-INDEX_VERSION = 3
+INDEX_VERSION = 4
 #: index versions this reader understands (v1: no spatial payload; v2: no
-#: checksums; v3: optional per-chunk CRC-32 of each stored extent) — all
-#: older versions load transparently, unknown *newer* versions fail loudly
-SUPPORTED_INDEX_VERSIONS = (1, 2, 3)
+#: checksums; v3: optional per-chunk CRC-32 of each stored extent; v4:
+#: optional per-chunk codec + logical size) — all older versions load
+#: transparently, unknown *newer* versions fail loudly
+SUPPORTED_INDEX_VERSIONS = (1, 2, 3, 4)
 
 
 def extent_checksum(buf) -> int:
@@ -65,14 +72,27 @@ class ChunkRecord:
     hi: tuple
     subfile: int
     offset: int
+    #: STORED size of the extent on disk (compressed size when ``codec`` is
+    #: not ``"none"``) — every byte-offset consumer (append cursor, journal
+    #: CRC validation, ``verify_checksums``) works on stored bytes
     nbytes: int
     #: CRC-32 of the stored extent bytes (format v3); ``None`` for records
     #: loaded from v2 indexes or written without checksumming
     checksum: int | None = None
+    #: per-chunk codec name (format v4); ``"none"`` = raw bytes
+    codec: str = "none"
+    #: logical (decoded) size in bytes; ``None`` means equal to ``nbytes``
+    #: (always the case for ``codec="none"``)
+    lbytes: int | None = None
 
     @property
     def block(self) -> Block:
         return Block(tuple(self.lo), tuple(self.hi))
+
+    @property
+    def logical_nbytes(self) -> int:
+        """Decoded size of the extent (== ``nbytes`` for raw chunks)."""
+        return self.nbytes if self.lbytes is None else self.lbytes
 
     def to_json(self) -> dict:
         d = {"var": self.var,
@@ -82,13 +102,18 @@ class ChunkRecord:
              "nbytes": int(self.nbytes)}
         if self.checksum is not None:
             d["crc"] = int(self.checksum)
+        if self.codec != "none":
+            d["codec"] = self.codec
+            d["lbytes"] = int(self.logical_nbytes)
         return d
 
     @staticmethod
     def from_json(d: dict) -> "ChunkRecord":
         return ChunkRecord(var=d["var"], lo=tuple(d["lo"]), hi=tuple(d["hi"]),
                            subfile=d["subfile"], offset=d["offset"],
-                           nbytes=d["nbytes"], checksum=d.get("crc"))
+                           nbytes=d["nbytes"], checksum=d.get("crc"),
+                           codec=d.get("codec", "none"),
+                           lbytes=d.get("lbytes"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,7 +129,9 @@ class VarRows:
     his: np.ndarray          # (n,d) chunk high corners
     subfiles: np.ndarray     # (n,)
     offsets: np.ndarray      # (n,)  byte offset of each extent
-    nbytes: np.ndarray       # (n,)  extent sizes
+    nbytes: np.ndarray       # (n,)  STORED extent sizes (on-disk bytes)
+    codecs: np.ndarray       # (n,)  small-int codec codes (0 = none)
+    lbytes: np.ndarray       # (n,)  logical (decoded) extent sizes
 
     @property
     def n(self) -> int:
@@ -178,6 +205,8 @@ class DatasetIndex:
                 subfiles = np.empty(len(ids), dtype=np.int64)
                 offsets = np.empty(len(ids), dtype=np.int64)
                 nbytes = np.empty(len(ids), dtype=np.int64)
+                codecs = np.zeros(len(ids), dtype=np.int64)
+                lbytes = np.empty(len(ids), dtype=np.int64)
                 for r, i in enumerate(id_list):
                     c = self.chunks[i]
                     los[r] = c.lo
@@ -185,9 +214,13 @@ class DatasetIndex:
                     subfiles[r] = c.subfile
                     offsets[r] = c.offset
                     nbytes[r] = c.nbytes
+                    if c.codec != "none":
+                        codecs[r] = codec_code(c.codec)
+                    lbytes[r] = c.logical_nbytes
                 self._rows[var] = VarRows(ids=ids, los=los, his=his,
                                           subfiles=subfiles, offsets=offsets,
-                                          nbytes=nbytes)
+                                          nbytes=nbytes, codecs=codecs,
+                                          lbytes=lbytes)
         return self._rows[name]
 
     def spatial_index(self, name: str) -> SpatialChunkIndex:

@@ -92,6 +92,11 @@ class ReadPlan:
     span_bytes: int            # bytes pulled if every group span is read whole
     probe_seconds: float = 0.0
     plan_seconds: float = 0.0
+    #: per-row codec codes (0 = raw; see ``repro.core.codecs``).  ``None``
+    #: means every row is raw.  A compressed row's ``file_lo``/``file_hi``
+    #: span the WHOLE stored extent (decompression needs all of it) and the
+    #: strided gather happens post-decode in ``scatter_row``.
+    codecs: np.ndarray | None = None
 
     @property
     def num_chunks(self) -> int:
@@ -183,6 +188,16 @@ def build_read_plan(index: DatasetIndex, var: str, region: Block,
     chunk_runs = np.where(any_neq & (kidx > 0), prefix, 1).astype(np.int64)
     bytes_per = cum[:, -1] * itemsize
 
+    codecs = rows.codecs[cand]
+    comp = codecs != 0
+    if comp.any():
+        # a compressed extent can only be decoded whole: the needed span IS
+        # the stored extent (one contiguous run), whatever the intersection
+        file_lo = np.where(comp, rows.offsets[cand], file_lo)
+        file_hi = np.where(comp, rows.offsets[cand] + rows.nbytes[cand],
+                           file_hi)
+        chunk_runs = np.where(comp, 1, chunk_runs)
+
     subf = rows.subfiles[cand]
     order = np.lexsort((file_lo, subf))
     cand = cand[order]
@@ -190,6 +205,7 @@ def build_read_plan(index: DatasetIndex, var: str, region: Block,
     strides = strides[order]
     subf, file_lo, file_hi = subf[order], file_lo[order], file_hi[order]
     chunk_runs, bytes_per = chunk_runs[order], bytes_per[order]
+    codecs = codecs[order]
 
     m = cand.size
     new_group = np.empty(m, dtype=bool)
@@ -218,7 +234,8 @@ def build_read_plan(index: DatasetIndex, var: str, region: Block,
         group_bounds=group_bounds, runs=runs,
         bytes_needed=int(bytes_per.sum()), span_bytes=span_bytes,
         probe_seconds=probe_seconds,
-        plan_seconds=time.perf_counter() - t1)
+        plan_seconds=time.perf_counter() - t1,
+        codecs=codecs if comp.any() else None)
     return plan
 
 
@@ -316,7 +333,8 @@ class WritePlan:
 
 def build_write_plan(layout: LayoutPlan, var: str, dtype,
                      align: int | None = None,
-                     base_offsets: dict | None = None) -> WritePlan:
+                     base_offsets: dict | None = None,
+                     sizes: np.ndarray | None = None) -> WritePlan:
     """Plan the write of ``var`` under ``layout``.
 
     ``base_offsets`` maps subfile -> first free byte (log-structured append
@@ -324,6 +342,11 @@ def build_write_plan(layout: LayoutPlan, var: str, dtype,
     are laid out in ``layout.chunks`` order per subfile — each start offset
     aligned up to ``align`` — then sorted by ``(subfile, offset)`` and
     coalesced: consecutive extents with no padding gap form one group.
+
+    ``sizes`` — optional per-chunk STORED byte sizes in ``layout.chunks``
+    order, overriding the dense ``volume * itemsize`` default.  Compressed
+    writers pass the encoded lengths here: append offsets depend on them,
+    so encoding happens *before* planning and the plan stays pure metadata.
     """
     t0 = time.perf_counter()
     dtype = np.dtype(dtype)
@@ -344,7 +367,13 @@ def build_write_plan(layout: LayoutPlan, var: str, dtype,
     his = np.asarray([cp.chunk.hi for cp in layout.chunks], dtype=np.int64)
     writers = np.asarray([cp.writer for cp in layout.chunks], dtype=np.int64)
     subf = np.asarray([cp.subfile for cp in layout.chunks], dtype=np.int64)
-    nbytes = (his - los).prod(axis=1) * dtype.itemsize
+    if sizes is None:
+        nbytes = (his - los).prod(axis=1) * dtype.itemsize
+    else:
+        nbytes = np.asarray(sizes, dtype=np.int64)
+        if nbytes.shape != (m,):
+            raise ValueError(f"sizes must be one stored size per chunk "
+                             f"({m} chunks, got shape {nbytes.shape})")
 
     # Append-order offsets, vectorized per subfile: every extent start is
     # aligned, so within a subfile the starts are an exclusive prefix sum of

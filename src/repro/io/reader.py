@@ -58,6 +58,7 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from ..core.blocks import Block
+from ..core.codecs import available_codecs, encode
 from ..core.cost_model import (CalibrationDrift, EngineCalibration,
                                EngineChoice, choose_engine,
                                invalidate_calibration, storage_calibration)
@@ -98,9 +99,21 @@ class ReadStats:
         if not self.engine:
             self.engine = other.engine
             self.engine_reason = other.engine_reason
-        elif other.engine and other.engine != self.engine:
-            self.engine = "mixed"   # sub-reads resolved to different engines
-            self.engine_reason = "per-plan auto decisions diverged"
+        elif other.engine:
+            if other.engine != self.engine:
+                # sub-reads resolved to different engines; every sub-read's
+                # rationale stays visible (a uring -> overlapped fallback on
+                # one variable must survive the merge), joined and deduped
+                self.engine = "mixed"
+                self._merge_reason("per-plan auto decisions diverged")
+            self._merge_reason(other.engine_reason)
+
+    def _merge_reason(self, other_reason: str) -> None:
+        parts = [p for p in self.engine_reason.split("; ") if p]
+        for p in other_reason.split("; "):
+            if p and p not in parts:
+                parts.append(p)
+        self.engine_reason = "; ".join(parts)
 
     @property
     def read_gbps(self) -> float:
@@ -379,12 +392,27 @@ class Dataset:
     def write_planned(self, plan: WritePlan,
                       data: Mapping[int, np.ndarray], *,
                       engine: str | IOEngine | None = None,
-                      fsync: bool = False, flush: bool = True) -> WriteStats:
+                      fsync: bool = False, flush: bool = True,
+                      codec: str = "none",
+                      encoded: Sequence[np.ndarray] | None = None
+                      ) -> WriteStats:
         """Execute a write plan: assemble each chunk from its source blocks,
         run the engine over the extent groups, then commit the records.
         Returns :class:`~repro.io.engine.WriteStats` (including which engine
         executed the plan and, under ``"auto"``, why).
+
+        ``codec``/``encoded`` is the compressed-write contract: because the
+        plan's append offsets depend on the STORED sizes, encoding happens
+        *before* planning — the caller passes the pre-encoded extent
+        buffers (``layout.chunks`` order, one ``uint8`` array per chunk;
+        the plan was built with ``sizes=``) and the codec they carry.  The
+        committed records then store the codec name, the logical size, and
+        a checksum over the *stored* (encoded) bytes — the same bytes the
+        journal/kill-matrix validation path re-reads.
         """
+        if codec != "none" and encoded is None:
+            raise ValueError("codec != 'none' requires pre-encoded buffers "
+                             "(use Dataset.write(..., codec=...))")
         eng, choice, pinned_reason = self._resolve_engine(
             engine, groups=plan.num_groups, runs=plan.num_chunks,
             bytes_moved=plan.bytes_total, span_bytes=plan.span_bytes,
@@ -392,9 +420,12 @@ class Dataset:
         t_start = time.perf_counter()
 
         t0 = time.perf_counter()
-        buffers = [assemble_chunk(plan.layout.chunks[int(cid)], data,
-                                  plan.dtype)
-                   for cid in plan.chunk_ids]
+        if encoded is not None:
+            buffers = [encoded[int(cid)] for cid in plan.chunk_ids]
+        else:
+            buffers = [assemble_chunk(plan.layout.chunks[int(cid)], data,
+                                      plan.dtype)
+                       for cid in plan.chunk_ids]
         assemble_seconds = time.perf_counter() - t0
 
         t0 = time.perf_counter()
@@ -411,6 +442,11 @@ class Dataset:
                 self.index.add_variable(plan.var, plan.global_shape,
                                         plan.dtype, plan.strategy)
             for row in np.argsort(plan.chunk_ids):   # original layout order
+                lbytes = None
+                if codec != "none":
+                    lbytes = int((plan.chunk_his[row]
+                                  - plan.chunk_los[row]).prod()) \
+                        * plan.dtype.itemsize
                 self.index.chunks.append(ChunkRecord(
                     var=plan.var, lo=tuple(int(v) for v in plan.chunk_los[row]),
                     hi=tuple(int(v) for v in plan.chunk_his[row]),
@@ -418,7 +454,8 @@ class Dataset:
                     offset=int(plan.file_lo[row]),
                     nbytes=int(plan.nbytes[row]),
                     checksum=extent_checksum(
-                        np.ascontiguousarray(buffers[row]))))
+                        np.ascontiguousarray(buffers[row])),
+                    codec=codec, lbytes=lbytes))
             cursor = self._cursor_dict()
             for sf, end in plan.file_sizes.items():   # plans built directly
                 if end > cursor.get(sf, 0):
@@ -443,17 +480,47 @@ class Dataset:
                             predicted_seconds=choice.predicted_seconds
                             if choice else 0.0)
         if self._trace is not None and plan.num_chunks:
-            self._trace.record_write("write", plan, wstats)
+            extra = {"codec": codec} if codec != "none" else {}
+            self._trace.record_write("write", plan, wstats, **extra)
         return wstats
 
     def write(self, var: str, layout: LayoutPlan, dtype,
               data: Mapping[int, np.ndarray], *,
-              align: int | None = None, fsync: bool = False) -> WriteStats:
+              align: int | None = None, fsync: bool = False,
+              codec: str = "none") -> WriteStats:
         """Plan + execute in one call (the common non-staged case).
-        Argument order mirrors :meth:`plan_write`."""
-        return self.write_planned(self.plan_write(var, layout, dtype,
-                                                  align=align),
-                                  data, fsync=fsync)
+        Argument order mirrors :meth:`plan_write`.
+
+        ``codec`` compresses every extent with the named codec from
+        :mod:`repro.core.codecs` before planning (append offsets depend on
+        the encoded sizes); the records carry the codec and logical size
+        (index v4) and reads decode transparently through every engine.
+        """
+        if codec == "none":
+            return self.write_planned(self.plan_write(var, layout, dtype,
+                                                      align=align),
+                                      data, fsync=fsync)
+        dtype = np.dtype(dtype)
+        t0 = time.perf_counter()
+        enc = [np.frombuffer(
+                   encode(codec, np.ascontiguousarray(
+                       assemble_chunk(cp, data, dtype))),
+                   dtype=np.uint8)
+               for cp in layout.chunks]
+        encode_seconds = time.perf_counter() - t0
+        sizes = np.asarray([b.nbytes for b in enc], dtype=np.int64)
+        with self._lock:
+            cursor = self._cursor_dict()
+            plan = build_write_plan(layout, var, dtype, align=align,
+                                    base_offsets=cursor, sizes=sizes)
+            for sf, end in plan.file_sizes.items():
+                if end > cursor.get(sf, 0):
+                    cursor[sf] = end
+        wstats = self.write_planned(plan, data, fsync=fsync,
+                                    codec=codec, encoded=enc)
+        wstats.assemble_seconds += encode_seconds
+        wstats.total_seconds += encode_seconds
+        return wstats
 
     # -- read path -----------------------------------------------------------
     def plan_read(self, var: str, region: Block,
@@ -664,11 +731,51 @@ class Dataset:
         return checked, bad
 
 
+def sample_codec_ratios(src: Dataset, var: str, *,
+                        max_bytes: int = 4 << 20) -> dict:
+    """Measure each available codec's stored/logical size ratio on a sample
+    of ``var``'s actual data (the first stored chunk, capped at
+    ``max_bytes`` along its leading axis).  The ratios feed
+    :meth:`~repro.core.policy.LayoutPolicy.choose_layout`'s
+    ``codec_ratios`` so the policy scores *measured* compressibility, not a
+    guess.  Returns ``{}`` when the variable has no extents or every codec
+    fails — callers degrade to raw-only scoring."""
+    rows = src.index.var_rows(var)
+    if rows.n == 0:
+        return {}
+    lo = np.array(rows.los[0], dtype=np.int64)
+    hi = np.array(rows.his[0], dtype=np.int64)
+    itemsize = np.dtype(src.index.var_dtype(var)).itemsize
+    vol = int((hi - lo).prod()) * itemsize
+    if vol > max_bytes and hi[0] - lo[0] > 1:
+        keep = max(1, int((hi[0] - lo[0]) * max_bytes // vol))
+        hi = hi.copy()
+        hi[0] = lo[0] + keep
+    try:
+        arr, _ = src.read(var, Block(tuple(int(v) for v in lo),
+                                     tuple(int(v) for v in hi)))
+    except (OSError, ValueError, KeyError):
+        return {}
+    raw = np.ascontiguousarray(arr)
+    if raw.nbytes == 0:
+        return {}
+    ratios = {}
+    for name in available_codecs():
+        if name == "none":
+            continue
+        try:
+            ratios[name] = len(encode(name, raw)) / raw.nbytes
+        except Exception:
+            continue
+    return ratios
+
+
 def choose_reorg_layout(src: Dataset, var: str, *,
                         align: int | None = None,
                         policy: LayoutPolicy | None = None,
                         prior: str | None = None,
                         expected_reads: float | None = None,
+                        codec_ratios: dict | None = None,
                         now: float | None = None):
     """The ``layout="auto"`` decision both :func:`reorganize` and
     :func:`repro.distributed.reorg.distributed_reorganize` make: ask the
@@ -689,7 +796,8 @@ def choose_reorg_layout(src: Dataset, var: str, *,
     return pol.choose_layout(var, blocks, src.index.var_shape(var),
                              num_stagers=max(1, src.index.num_subfiles),
                              align=align, current_extents=rows,
-                             expected_reads=expected_reads, now=now)
+                             expected_reads=expected_reads,
+                             codec_ratios=codec_ratios, now=now)
 
 
 def reorganize(src_dir: str, dst_dir: str, var: str,
@@ -756,8 +864,11 @@ def reorganize(src_dir: str, dst_dir: str, var: str,
         decision = choose_reorg_layout(src, var, align=align, policy=policy,
                                        prior=prior,
                                        expected_reads=expected_reads,
+                                       codec_ratios=sample_codec_ratios(
+                                           src, var),
                                        now=now)
         layout = decision.layout
+    codec = decision.codec if decision is not None else "none"
     t0 = time.perf_counter()
     data = {}
     synth = []
@@ -800,13 +911,13 @@ def reorganize(src_dir: str, dst_dir: str, var: str,
         src.close()
         dst = Dataset(dst_dir, engine=engine, index=new_index, clock=clock)
         dst._cursor = cursor                  # append past the live extents
-        wstats = dst.write(var, ident, dtype, data, align=align)
+        wstats = dst.write(var, ident, dtype, data, align=align, codec=codec)
     else:
         src.close()
         dst = Dataset.create(dst_dir, engine=engine, clock=clock)
         # layout lineage: the destination supersedes the source's layout
         dst.index.generation = src.index.generation + 1
-        wstats = dst.write(var, ident, dtype, data, align=align)
+        wstats = dst.write(var, ident, dtype, data, align=align, codec=codec)
     if decision is not None:
         dst.index.attrs.setdefault("policy", {})[var] = decision.to_json()
         dst.flush()

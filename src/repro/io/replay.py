@@ -319,7 +319,8 @@ class _Replayer:
                                   strategy=p.get("strategy", "reorganized"))
         data = {cp.chunk.block_id: arr[cp.chunk.slices()]
                 for cp in layout.chunks}
-        self.ds.write(ev.var, layout, dt, data, align=p.get("align"))
+        self.ds.write(ev.var, layout, dt, data, align=p.get("align"),
+                      codec=p.get("codec", "none"))
 
     def _ev_stage_submit(self, ev) -> None:
         self._count("stage_submit")

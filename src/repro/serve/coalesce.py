@@ -177,6 +177,13 @@ class SuperPlan:
             payload = ishape.prod(axis=1) * isz
             src_ok = (plan.chunk_runs == 1) & \
                      (plan.file_hi - plan.file_lo == payload)
+            if plan.codecs is not None:
+                # compressed extents are stored bytes, not payload bytes:
+                # they must go through scatter_row's decode, never the
+                # flat-copy fast path (a compressed extent whose stored
+                # size happens to equal the payload would satisfy the
+                # geometric test above)
+                src_ok &= plan.codecs == 0
             rlo = np.asarray(plan.region.lo, dtype=np.int64)
             rhi = np.asarray(plan.region.hi, dtype=np.int64)
             dst_ok = np.ones(m, dtype=bool)

@@ -18,9 +18,11 @@ variable, and folds each group into one
 :class:`~repro.serve.coalesce.SuperPlan` — one index probe, one engine
 gather over the merged byte spans, one scatter pass routing slices to
 every requester.  **Admission control** bounds the bytes in flight: a
-batch closes when its payload estimate reaches ``max_inflight_bytes``
-(always admitting at least one request) and the remainder waits for the
-next cycle.
+batch closes when the *unioned stored byte spans* its members' plans
+would fetch reach ``max_inflight_bytes`` (overlapping requests are
+fetched once and charged once; compressed extents count stored, not
+logical, bytes; always admitting at least one request) and the remainder
+waits for the next cycle.
 
 Super-plans are cached across batches, keyed on ``(var, regions)`` and
 guarded by the index staleness key ``(generation, len(chunks))``: every
@@ -49,9 +51,11 @@ from collections import OrderedDict, deque
 from concurrent.futures import Future
 from typing import Sequence
 
+import numpy as np
+
 from ..core.blocks import Block
 from ..io.reader import Dataset, ReadStats
-from .coalesce import Request, SuperPlan, build_super_plan
+from .coalesce import Request, SuperPlan, build_super_plan, union_spans
 
 __all__ = ["ReadService", "ServiceStats", "TenantStats"]
 
@@ -92,7 +96,13 @@ class ServiceStats:
 class _Pending:
     request: Request
     future: Future
-    nbytes: int
+    nbytes: int            # logical payload estimate (fallback accounting)
+    #: stored byte spans the request's plan would fetch —
+    #: ``(subfiles, lo, hi)`` arrays, or ``None`` when planning failed;
+    #: admission control unions these across the batch, so overlapping
+    #: requests (fetched once) and compressed extents (stored < logical)
+    #: are charged what the shared gather actually transfers
+    spans: tuple | None = None
 
 
 class ReadService:
@@ -155,11 +165,17 @@ class ReadService:
             nbytes = vol * self._ds.index.var_dtype(req.var).itemsize
         except KeyError:
             nbytes = 0            # unknown var: admit, fail in the batch
+        spans = None
+        try:
+            plan = self._ds.plan_read(req.var, req.region)
+            spans = (plan.subfiles, plan.file_lo, plan.file_hi)
+        except Exception:  # noqa: BLE001 — admission falls back to logical
+            pass
         with self._cond:
             if self._closed:
                 raise RuntimeError("ReadService is closed")
             self._queues.setdefault(req.tenant, deque()).append(
-                _Pending(req, fut, nbytes))
+                _Pending(req, fut, nbytes, spans))
             if notify:
                 self._cond.notify_all()
         return fut
@@ -173,9 +189,17 @@ class ReadService:
         full (fairness: a tenant with 1000 queued requests and a tenant
         with 2 both land their first requests in the same batch).  Closes
         on ``max_batch`` requests or ``max_inflight_bytes`` of estimated
-        payload — admission control; at least one request always enters."""
+        in-flight bytes — admission control; at least one request always
+        enters.  The estimate is the *union of the stored byte spans* the
+        batch would fetch (what the shared gather actually transfers):
+        overlapping requests are not double-charged, and compressed
+        extents count their stored (not logical) size.  A request whose
+        plan could not be built falls back to its logical payload bytes.
+        """
         batch: list = []
-        total = 0
+        span_parts: list = []    # (subfiles, lo, hi) per admitted request
+        union_total = 0          # unioned stored bytes of span_parts
+        logical_total = 0        # fallback bytes of plan-less requests
         while self._have_pending_locked():
             progressed = False
             for tenant in list(self._queues):
@@ -183,14 +207,29 @@ class ReadService:
                 if not q:
                     continue
                 nxt = q[0]
+                if nxt.spans is not None and len(nxt.spans[0]):
+                    parts = span_parts + [nxt.spans]
+                    _, u_lo, u_hi = union_spans(
+                        np.concatenate([p[0] for p in parts]),
+                        np.concatenate([p[1] for p in parts]),
+                        np.concatenate([p[2] for p in parts]))
+                    cand_union = int((u_hi - u_lo).sum())
+                else:
+                    cand_union = union_total
+                cand_total = cand_union + logical_total + \
+                    (nxt.nbytes if nxt.spans is None else 0)
                 if batch and (len(batch) >= self._max_batch
-                              or total + nxt.nbytes > self._max_inflight):
+                              or cand_total > self._max_inflight):
                     with self._stats_lock:
                         self.stats.deferred += sum(
                             len(d) for d in self._queues.values())
                     return batch
                 batch.append(q.popleft())
-                total += nxt.nbytes
+                if nxt.spans is not None and len(nxt.spans[0]):
+                    span_parts.append(nxt.spans)
+                    union_total = cand_union
+                elif nxt.spans is None:
+                    logical_total += nxt.nbytes
                 progressed = True
             if not progressed:
                 break

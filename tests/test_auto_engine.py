@@ -330,6 +330,54 @@ def test_read_stats_merge_engine_record():
     assert fresh.engine == "pread"
 
 
+def test_read_stats_merge_keeps_every_engine_reason():
+    """A merge that collapses engine to "mixed" must NOT drop the
+    sub-reads' rationales: a uring -> overlapped fallback reason on one
+    variable has to survive a multi-variable restore's merge.  Reasons
+    are joined and deduped, never overwritten."""
+    from repro.io import ReadStats
+    a = ReadStats(engine="uring:16",
+                  engine_reason="io_uring unavailable: falling back")
+    a.merge(ReadStats(engine="memmap", engine_reason="small sequential"))
+    assert a.engine == "mixed"
+    assert "io_uring unavailable: falling back" in a.engine_reason
+    assert "small sequential" in a.engine_reason
+    assert "per-plan auto decisions diverged" in a.engine_reason
+    # same-engine merges dedupe instead of repeating
+    b = ReadStats(engine="pread", engine_reason="pinned")
+    b.merge(ReadStats(engine="pread", engine_reason="pinned"))
+    assert b.engine_reason == "pinned"
+    # a third distinct engine keeps accumulating losslessly
+    a.merge(ReadStats(engine="odirect:8", engine_reason="cold sweep"))
+    assert "cold sweep" in a.engine_reason
+    assert a.engine_reason.count("per-plan auto decisions diverged") == 1
+
+
+def test_subfile_store_close_releases_every_cached_fd(tmp_path):
+    """Regression: ``SubfileStore.close()`` must release the cached
+    ``O_DIRECT`` handles alongside the buffered ones — a long-lived
+    service cycling sessions would otherwise leak one fd per subfile per
+    session until EMFILE.  Pinned by counting ``/proc/self/fd``."""
+    from repro.io.engine import SubfileStore, subfile_name
+    d = str(tmp_path)
+    for k in range(4):
+        with open(os.path.join(d, subfile_name(k)), "wb") as f:
+            f.write(b"\0" * 8192)
+    before = len(os.listdir("/proc/self/fd"))
+    store = SubfileStore(d)
+    for k in range(4):
+        store.fd(k)
+        store.fd(k, writable=True)
+        try:
+            store.direct_fd(k)
+            store.direct_fd(k, writable=True)
+        except OSError:
+            pass  # filesystem refuses O_DIRECT: buffered handles still open
+    assert len(os.listdir("/proc/self/fd")) > before
+    store.close()
+    assert len(os.listdir("/proc/self/fd")) == before
+
+
 # -- kernel-bypass engines: calibration v2 + selection (ISSUE 9) --------------
 
 def test_kernel_sentinels_exclude_engines_from_auto():
@@ -387,16 +435,30 @@ def test_odirect_alignment_cost_keeps_it_honest_on_ragged_extents():
         predict_seconds(cal, "pread", **seq)
 
 
-def test_calibration_v2_roundtrip_and_v1_loads_transparently(tmp_path):
+def test_calibration_v3_roundtrip_and_v1_v2_load_transparently(tmp_path):
     d = str(tmp_path)
-    v2 = dataclasses.replace(COLD_KERNEL, created_at=time.time())
-    assert v2.version == CALIBRATION_VERSION == 2
-    save_calibration(v2, d)
-    assert load_calibration(d) == v2
-    # a v1 file (pre-kernel-engine fields) loads transparently: the new
-    # fields take their sentinel defaults, so auto just never offers
+    v3 = dataclasses.replace(COLD_KERNEL, created_at=time.time())
+    assert v3.version == CALIBRATION_VERSION == 3
+    save_calibration(v3, d)
+    assert load_calibration(d) == v3
+    # a v2 file (pre-codec fields) loads transparently: the codec
+    # bandwidth terms take their exclusion sentinels, so compressed
+    # layout candidates never win until the TTL re-probe upgrades it
+    payload = v3.to_json()
+    for k in ("zlib_comp_bps", "zlib_decomp_bps",
+              "lz4_comp_bps", "lz4_decomp_bps"):
+        del payload[k]
+    payload["version"] = 2
+    with open(os.path.join(d, CALIBRATION_NAME), "w") as f:
+        json.dump(payload, f)
+    v2 = load_calibration(d)
+    assert v2 is not None and not v2.is_stale()
+    assert v2.version == 2
+    assert v2.zlib_comp_bps < 0 and v2.zlib_decomp_bps < 0
+    assert v2.codec_bps("zlib") < 0 and v2.codec_bps("none") > 0
+    # a v1 file (pre-kernel-engine fields) loads transparently too: the
+    # new fields take their sentinel defaults, so auto just never offers
     # uring/odirect until the TTL re-probe upgrades the file
-    payload = v2.to_json()
     for k in ("uring_sqe_s", "uring_reg_s", "odirect_seq_read_bps",
               "odirect_seq_write_bps", "odirect_align_s"):
         del payload[k]

@@ -1,0 +1,136 @@
+"""Codec registry + index v4 codec fields (ISSUE 10 tentpole).
+
+The registry is the one shared seam between the format (per-record codec
+name), the engines (decode in ``scatter_row``) and the cost model
+(calibration v3 bandwidth terms) — these tests pin its contract: raw
+bytes in, raw bytes out, lengths validated against the chunk record,
+unknown names fail loudly, and the v4 record round-trips codec + logical
+size through JSON without disturbing v1–v3 readers.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.blocks import Block
+from repro.core.codecs import (CODEC_NONE, CODECS, available_codecs,
+                               codec_code, codec_name, decode, encode,
+                               get_codec)
+from repro.core.cost_model import probe_storage
+from repro.io import Dataset
+from repro.io.format import ChunkRecord
+from repro.core import plan_layout, uniform_grid_blocks
+
+
+def test_registry_baseline():
+    """``none`` and ``zlib`` are always registered (stdlib only); codes
+    are stable, ``none`` is code 0, and name <-> code round-trips."""
+    names = available_codecs()
+    assert names[0] == "none" and "zlib" in names
+    assert codec_code("none") == CODEC_NONE == 0
+    for n in names:
+        assert codec_name(codec_code(n)) == n
+    with pytest.raises(ValueError, match="unknown codec"):
+        get_codec("zstd")
+    with pytest.raises(ValueError, match="unknown codec code"):
+        codec_name(99)
+
+
+def test_encode_decode_roundtrip_buffer_protocol():
+    """Codecs accept any buffer-protocol object (numpy views included)
+    and round-trip exact bytes; decode accepts the name or the plan-array
+    int code."""
+    rng = np.random.default_rng(3)
+    arr = rng.integers(0, 8, size=4096, dtype=np.uint8)
+    for name in available_codecs():
+        enc = encode(name, arr)
+        assert decode(name, enc, arr.nbytes) == arr.tobytes()
+        assert decode(codec_code(name), np.frombuffer(enc, np.uint8),
+                      arr.nbytes) == arr.tobytes()
+    # identity codec is a passthrough
+    assert encode("none", arr) == arr.tobytes()
+
+
+def test_decode_length_mismatch_fails_loudly():
+    """A stored extent whose decoded size disagrees with the chunk record
+    is torn or mislabeled — decode must raise, never return short bytes
+    (same discipline as the CRC validation path)."""
+    enc = encode("zlib", b"x" * 1024)
+    with pytest.raises(ValueError, match="torn or mislabeled"):
+        decode("zlib", enc, 1023)
+    with pytest.raises(ValueError, match="torn or mislabeled"):
+        decode("none", b"x" * 10, 11)
+
+
+def test_chunk_record_v4_json_roundtrip():
+    """v4 records carry codec + logical size; a raw record emits NEITHER
+    key, so a raw v4 index is byte-compatible with what a v3 writer
+    produces (modulo the version stamp)."""
+    raw = ChunkRecord(var="v", lo=(0,), hi=(8,), subfile=0, offset=0,
+                      nbytes=32)
+    d = raw.to_json()
+    assert "codec" not in d and "lbytes" not in d
+    assert ChunkRecord.from_json(d).codec == "none"
+    assert ChunkRecord.from_json(d).logical_nbytes == 32
+    comp = ChunkRecord(var="v", lo=(0,), hi=(8,), subfile=0, offset=0,
+                       nbytes=20, codec="zlib", lbytes=32)
+    d = comp.to_json()
+    assert d["codec"] == "zlib" and d["lbytes"] == 32
+    back = ChunkRecord.from_json(json.loads(json.dumps(d)))
+    assert back.codec == "zlib"
+    assert back.nbytes == 20          # ALWAYS the stored on-disk size
+    assert back.logical_nbytes == 32
+
+
+def test_calibration_v3_measures_codec_bandwidth(tmp_path):
+    """probe_storage measures compress/decompress bandwidth for every
+    available codec and leaves the exclusion sentinel for absent ones."""
+    cal = probe_storage(str(tmp_path), probe_bytes=1 << 20)
+    assert cal.zlib_comp_bps > 0 and cal.zlib_decomp_bps > 0
+    assert cal.codec_bps("zlib", "read") == cal.zlib_decomp_bps
+    assert cal.codec_bps("zlib", "write") == cal.zlib_comp_bps
+    assert cal.codec_bps("none") == float("inf")
+    if "lz4" not in available_codecs():
+        assert cal.codec_bps("lz4") < 0
+
+
+def test_compressed_dataset_stores_fewer_bytes_and_reads_identical(tmp_path):
+    """End-to-end v4 seam: compressible data written with codec="zlib"
+    occupies fewer stored bytes than its logical size, records carry the
+    codec, reads decode transparently (full region and partial
+    intersections), and the CRC path validates stored bytes."""
+    shape = (32, 48)
+    blocks = uniform_grid_blocks(shape, (16, 16))
+    arr = (np.arange(np.prod(shape), dtype=np.float32) % 5).reshape(shape)
+    data = {b.block_id: np.ascontiguousarray(arr[b.slices()])
+            for b in blocks}
+    plan = plan_layout("chunked", blocks, num_procs=2, global_shape=shape)
+    d = str(tmp_path / "ds")
+    ds = Dataset.create(d, engine="pread")
+    ds.write("T", plan, np.float32, data, codec="zlib")
+    recs = [r for r in ds.index.chunks if r.var == "T"]
+    assert all(r.codec == "zlib" for r in recs)
+    assert all(r.lbytes is not None and r.nbytes < r.lbytes for r in recs)
+    checked, bad = ds.verify_checksums("T")
+    assert checked == len(recs) and bad == []
+    got, _ = ds.read("T", Block((0, 0), shape))
+    np.testing.assert_array_equal(got, arr)
+    got, _ = ds.read("T", Block((3, 7), (29, 41)))
+    np.testing.assert_array_equal(got, arr[3:29, 7:41])
+    ds.close()
+
+
+def test_write_planned_requires_encoded_buffers(tmp_path):
+    """write_planned with a codec but no pre-encoded buffers is a
+    contract violation (append offsets depend on encoded sizes), not a
+    silent raw write."""
+    shape = (8, 8)
+    blocks = uniform_grid_blocks(shape, (8, 8))
+    data = {b.block_id: np.zeros(b.shape, np.float32) for b in blocks}
+    plan = plan_layout("chunked", blocks, num_procs=1, global_shape=shape)
+    ds = Dataset.create(str(tmp_path / "ds"))
+    wp = ds.plan_write("T", plan, np.float32)
+    with pytest.raises(ValueError, match="encoded"):
+        ds.write_planned(wp, data, codec="zlib")
+    ds.close()

@@ -194,6 +194,61 @@ def test_fleet_sigkill_then_restart_converges(tmp_path, barrier):
     assert stats["validation_failures"] == 0
 
 
+# -- codec leg (index v4): compressed source through the same machinery ------
+
+def test_fleet_sigkill_mid_write_compressed_source(tmp_path):
+    """Kill-matrix codec leg: the source's extents are zlib-compressed
+    (index v4), so every journaled work unit's gather DECODES stored bytes
+    while the CRC validation path still checksums them AS stored — the
+    checksum definition over stored bytes is what keeps the journal and
+    validation machinery codec-blind.  A mid-write fleet kill must leave
+    the compressed source byte-identical, and a restarted fleet must
+    converge bit-identically to the single-process oracle."""
+    blocks, data, ref = _world(seed=31)
+    src = str(tmp_path / "src")
+    ds = Dataset.create(src)
+    ds.write("B", plan_layout("subfiled_fpp", blocks, num_procs=4,
+                              global_shape=GLOBAL), np.float32, data,
+             codec="zlib")
+    # CRCs are defined over STORED bytes: a compressed dataset validates
+    # without decoding anything
+    checked, bad = ds.verify_checksums("B")
+    assert checked > 0 and bad == []
+    ds.close()
+    refdst = _reference(tmp_path, src)
+    src_before = _dir_hashes(src)
+    dst = str(tmp_path / "dst")
+    bdir = _arm_barrier(tmp_path, "mid_write")
+    _make_journal(src, dst, num_units=4, lease_timeout_s=1.0)
+
+    procs = _spawn_workers(dst, ["k0", "k1"], bdir)
+    try:
+        _wait_for(lambda: _reached(bdir, "mid_write"), WAIT_S,
+                  "a worker parked at mid_write")
+        for p in procs.values():
+            if p.is_alive():
+                os.kill(p.pid, signal.SIGKILL)
+        for p in procs.values():
+            p.join(timeout=10.0)
+    finally:
+        for p in procs.values():
+            if p.is_alive():
+                p.kill()
+
+    assert not os.path.exists(os.path.join(dst, "index.json"))
+    assert _dir_hashes(src) == src_before      # compressed source untouched
+
+    ds, stats = distributed_reorganize(src, dst, "B", num_workers=2,
+                                       engine="pread", round_timeout_s=WAIT_S)
+    try:
+        arr, _ = ds.read("B", Block((0, 0, 0), GLOBAL))
+    finally:
+        ds.close()
+    np.testing.assert_array_equal(arr, ref)
+    _assert_bit_identical(refdst, dst)
+    assert stats["validation_failures"] == 0
+
+
 # -- elastic shrink: N -> N-1, survivors converge ----------------------------
 
 def test_elastic_shrink_survivors_converge(tmp_path):

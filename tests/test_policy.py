@@ -54,6 +54,52 @@ def _slab_records(n_slab=8, n_sub=2, var="B", shape=GLOBAL):
     return recs
 
 
+# -- codec dimension (ISSUE 10): (chunking x codec) cross product ------------
+
+def test_policy_codec_dimension_scored_jointly():
+    """With measured codec ratios, every chunking candidate is also scored
+    per codec on the lifecycle objective: a strong ratio on slow storage
+    wins (decision.codec records it, scores carry the "+zlib" keys); no
+    ratios, an incompressible ratio, or an unprobed codec bandwidth all
+    degrade to raw-extent scoring."""
+    import dataclasses as _dc
+    from repro.core.cost_model import EngineCalibration
+    cold = EngineCalibration(seek_latency_s=1e-3,
+                             preadv_group_overhead_s=5e-6,
+                             seq_read_bps=2e8, seq_write_bps=1e8,
+                             memmap_bps=2e8, page_miss_s=1e-3,
+                             parallel_scaling=8.0, created_at=0.0,
+                             zlib_comp_bps=20e9, zlib_decomp_bps=40e9)
+    blocks = uniform_grid_blocks(GLOBAL, (8, 8, 8))
+    pol = LayoutPolicy(records=_slab_records(), calibration=cold)
+    d0 = pol.choose_layout("B", blocks, GLOBAL)
+    assert d0.codec == "none"
+    assert all("+zlib" not in k for k in d0.scores)
+    assert d0.to_json()["codec"] == "none"
+    # 10:1 measured ratio on a 100 MB/s disk vs a 20 GB/s codec: the
+    # compressed variant of the winning chunking must beat its raw twin
+    d1 = pol.choose_layout("B", blocks, GLOBAL, codec_ratios={"zlib": 0.1})
+    assert any(k.endswith("+zlib") for k in d1.scores)
+    assert d1.codec == "zlib"
+    assert d1.to_json()["codec"] == "zlib"
+    for key, score in d1.scores.items():
+        if key.endswith("+zlib"):
+            assert score <= d1.scores[key[:-len("+zlib")]] + 1e-12
+    # incompressible data: a ratio above 1 - MIN_CODEC_SAVING is not a
+    # candidate at all (compression must never win as a seek trick)
+    d2 = pol.choose_layout("B", blocks, GLOBAL, codec_ratios={"zlib": 0.98})
+    assert d2.codec == "none"
+    assert all("+zlib" not in k for k in d2.scores)
+    # an unprobed codec (exclusion sentinel) is not a candidate at all
+    pol2 = LayoutPolicy(records=_slab_records(),
+                        calibration=_dc.replace(cold, zlib_comp_bps=-1.0,
+                                                zlib_decomp_bps=-1.0))
+    d3 = pol2.choose_layout("B", blocks, GLOBAL,
+                            codec_ratios={"zlib": 0.1})
+    assert d3.codec == "none"
+    assert all("+zlib" not in k for k in d3.scores)
+
+
 # -- fingerprints ------------------------------------------------------------
 
 def test_classify_region():

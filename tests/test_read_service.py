@@ -195,17 +195,38 @@ def test_window_coalesces_concurrent_submits(world):
 
 
 def test_admission_control_bounds_batch_bytes(world):
+    """Admission charges the UNION of the stored spans a batch would
+    fetch, not the sum of logical payloads: disjoint regions whose spans
+    together exceed the limit split across batches (at least one request
+    always enters), while identical regions — fetched once by the shared
+    gather — coalesce into a single admitted batch."""
     d, ref = world
-    region = Block((0, 0), (16, 48))             # 3072 bytes
     ds = Dataset.open(d, engine="pread")
+    # four disjoint slabs, 3072 stored bytes each: the limit fits one
+    regions = [Block((i * 16, 0), ((i + 1) * 16, 48)) for i in range(3)]
+    regions.append(Block((0, 0), (16, 48)))      # duplicate of slab 0
     with ReadService(ds, window_s=0.01,
-                     max_inflight_bytes=4000) as svc:  # < 2 regions
-        futs = [svc.submit("t", "T", region) for _ in range(5)]
+                     max_inflight_bytes=4000) as svc:  # < 2 disjoint slabs
+        futs = [svc.submit("t", "T", r) for r in regions[:3]]
+        for f, r in zip(futs, regions[:3]):
+            arr, _ = f.result(timeout=30)
+            np.testing.assert_array_equal(arr, ref[r.slices()])
+        assert svc.stats.batches >= 3            # one disjoint slab each
+        assert svc.stats.deferred > 0
+    ds.close()
+    # overlapping requests are fetched once, so they are charged once:
+    # five copies of one 3072-byte slab union to 3072 < 4000 and admit
+    # as ONE batch under the very limit that split the disjoint slabs
+    ds = Dataset.open(d, engine="pread")
+    with ReadService(ds, window_s=0.05,
+                     max_inflight_bytes=4000) as svc:
+        futs = [svc.submit("t", "T", regions[0]) for _ in range(5)]
         for f in futs:
             arr, _ = f.result(timeout=30)
-            np.testing.assert_array_equal(arr, ref[region.slices()])
-        assert svc.stats.batches >= 5            # one request admitted each
-        assert svc.stats.deferred > 0
+            np.testing.assert_array_equal(arr, ref[regions[0].slices()])
+        assert svc.stats.batches == 1
+        assert svc.stats.fetch_bytes == 3072
+        assert svc.stats.deferred == 0
     ds.close()
 
 

@@ -158,7 +158,7 @@ def test_spatial_index_persistence_roundtrip(tmp_path, world):
     _write(d, "B", plan, data)
     with open(os.path.join(d, "index.json")) as f:
         payload = json.load(f)
-    assert payload["version"] == 3
+    assert payload["version"] == 4
     assert "B" in payload["spatial"]
     ds = Dataset(d)
     # loaded (persisted) index answers identically to a fresh rebuild
@@ -169,6 +169,42 @@ def test_spatial_index_persistence_roundtrip(tmp_path, world):
         a = ds.index.spatial_index("B").query(region.lo, region.hi)
         b = fresh.query(region.lo, region.hi)
         assert np.array_equal(a, b)
+
+
+def test_v2_v3_index_loads_transparently_byte_identical(tmp_path, world):
+    """Index v4 added per-chunk codec fields; a raw (uncompressed) dataset
+    emits none of them, so a v3 file — and a v2 file once the per-record
+    CRCs are stripped — must load transparently and read back the exact
+    bytes a v4 session wrote."""
+    blocks, data, ref = world
+    d = str(tmp_path / "downlevel")
+    plan = plan_layout("chunked", blocks, num_procs=NPROCS,
+                       global_shape=GLOBAL)
+    _write(d, "B", plan, data)
+    path = os.path.join(d, "index.json")
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["version"] == 4
+    # v3: same records, pre-codec version stamp
+    payload["version"] = 3
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    ds = Dataset(d)
+    arr, _ = ds.read("B", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+    ds.close()
+    # v2: additionally pre-CRC — verify_checksums skips what it can't check
+    for rec in payload["chunks"]:
+        rec.pop("crc", None)
+    payload["version"] = 2
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    ds = Dataset(d)
+    arr, _ = ds.read("B", Block((0, 0, 0), GLOBAL))
+    np.testing.assert_array_equal(arr, ref)
+    checked, bad = ds.verify_checksums("B")
+    assert checked == 0 and bad == []
+    ds.close()
 
 
 def test_v1_index_without_spatial_payload_still_reads(tmp_path, world):
